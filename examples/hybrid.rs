@@ -1,0 +1,77 @@
+//! LASP-2H on a hybrid model (Fig. 2): linear layers AllGather their d×d
+//! memory states, standard-attention layers AllGather their K/V chunks —
+//! one unified collective design across the whole network.
+//!
+//!     cargo run --release --example hybrid -- [preset]
+//!
+//! Prints the per-layer-kind communication payloads (the Fig.-2 asymmetry)
+//! and verifies the hybrid distributed forward against the monolithic
+//! hybrid oracle.
+
+use lasp2::comm::World;
+use lasp2::config::{Pattern, RunConfig, Scheduler, Variant};
+use lasp2::coordinator::{forward_distributed, forward_mono, Params};
+use lasp2::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::args().nth(1).unwrap_or_else(|| "tiny".into());
+    let engine = Engine::load_preset(&preset)?;
+    let cfg = engine.model.clone();
+    let world_size = 4;
+
+    // "1/2 hybrid": alternating L (linear) and N (standard) layers.
+    let pattern = Pattern::from_ratio(cfg.n_layers, "1/2")?;
+    println!(
+        "LASP-2H hybrid: pattern {} ({} linear + {} standard layers), W={world_size}",
+        pattern.0,
+        pattern.n_linear(),
+        pattern.n_std()
+    );
+
+    let run = RunConfig {
+        world: world_size,
+        scheduler: Scheduler::Lasp2,
+        variant: Variant::Basic,
+        pattern: pattern.clone(),
+        gather_splits: 1,
+        seed: 0,
+    };
+    let params = Params::randn(&cfg, run.variant, &pattern, 33);
+    let n = world_size * cfg.chunk_len;
+    let tokens: Vec<i32> = (0..n as i32).map(|i| (i * 11 + 1) % cfg.vocab as i32).collect();
+
+    let world = World::new(world_size);
+    let logits = forward_distributed(&engine, &world, &run, &params, &tokens, true)?;
+    let snap = world.counters();
+
+    // Fig. 2's payload asymmetry, from first principles:
+    let state_bytes = (cfg.state_elems(Variant::Basic) + cfg.n_heads * cfg.head_dim) * 4;
+    let kv_bytes = 2 * cfg.chunk_len * cfg.n_heads * cfg.head_dim * 4;
+    println!("\nper-rank AllGather payloads:");
+    println!(
+        "  linear layer  (M_t, a_t)  : {:>8} B  — independent of sequence length",
+        state_bytes
+    );
+    println!(
+        "  standard layer (K_t, V_t) : {:>8} B  — grows with chunk length C={}",
+        kv_bytes, cfg.chunk_len
+    );
+    println!(
+        "\nmeasured: {} collectives, {} P2P ops, {} B total moved",
+        snap.collective_ops, snap.p2p_ops, snap.bytes
+    );
+    let expect = world_size * (world_size - 1)
+        * (pattern.n_linear() * state_bytes + pattern.n_std() * kv_bytes);
+    println!("expected from the cost model: {expect} B");
+    anyhow::ensure!(snap.bytes == expect as u64, "byte accounting mismatch");
+
+    let mono = format!("forward_mono_basic_h2_N{n}");
+    if engine.has_artifact(&mono) {
+        let want = forward_mono(&engine, &mono, &params, &tokens)?;
+        let err = logits.max_rel_err(&want);
+        println!("\nverification vs monolithic hybrid oracle: max rel err {err:.2e}");
+        anyhow::ensure!(err < 2e-3);
+        println!("OK — LASP-2H hybrid distributed == monolithic.");
+    }
+    Ok(())
+}

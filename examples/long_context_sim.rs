@@ -1,0 +1,29 @@
+//! Paper-scale long-context simulation: reproduces the SHAPE of Fig. 3
+//! (speed comparison at 64 GPUs up to 2048K tokens), Fig. 4 (scalability)
+//! and Table 6 (throughput + memory/GPU + OOM frontier) on the calibrated
+//! discrete-event cluster model.
+//!
+//!     cargo run --release --example long_context_sim
+
+use lasp2::bench;
+use lasp2::sim::CostModel;
+
+fn main() {
+    let cm = CostModel::default();
+    println!("cost model: {:.0} GFLOP/s/device, alpha_coll {:.0}us, alpha_p2p {:.0}us,",
+        cm.flops_per_sec / 1e9, cm.alpha_collective * 1e6, cm.alpha_p2p * 1e6);
+    println!("            beta intra {:.0} GB/s / inter {:.0} GB/s, {:.0} GB HBM, fixed {:.2}s/iter\n",
+        cm.beta_intra / 1e9, cm.beta_inter / 1e9, cm.mem_capacity / 1e9, cm.fixed_overhead);
+
+    println!("# Fig. 3 — tokens/s vs sequence length (64 GPUs, Linear-Llama3-1B, batch 1)\n");
+    println!("{}", bench::fig3_speed(&cm).to_markdown());
+
+    println!("# Fig. 4 — scalability frontier (LASP-2)\n");
+    println!("{}", bench::fig4_scalability(&cm).to_markdown());
+
+    println!("# Table 5 — AllGather split-size ablation (64 GPUs, 1024K)\n");
+    println!("{}", bench::table5_splits(&cm).to_markdown());
+
+    println!("# Table 6 — quantitative scalability (throughput / memory per GPU)\n");
+    println!("{}", bench::table6_scalability(&cm).to_markdown());
+}

@@ -1,0 +1,24 @@
+//! Perf-pass profiling probe (used for the EXPERIMENTS.md §Perf table).
+use lasp2::comm::World;
+use lasp2::config::{Pattern, RunConfig, Scheduler, Variant};
+use lasp2::coordinator::{forward_distributed, Params};
+use lasp2::runtime::Engine;
+use std::time::Instant;
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load_preset("small")?;
+    let m = engine.model.clone();
+    let pattern = Pattern("L".repeat(m.n_layers));
+    let params = Params::randn(&m, Variant::Basic, &pattern, 7);
+    let n = 4 * m.chunk_len;
+    let tokens: Vec<i32> = (0..n as i32).map(|i| i % m.vocab as i32).collect();
+    for sched in [Scheduler::Lasp2, Scheduler::Lasp2Overlap, Scheduler::Lasp1] {
+        let run = RunConfig { world: 4, scheduler: sched, variant: Variant::Basic,
+            pattern: pattern.clone(), gather_splits: 1, seed: 0 };
+        let world = World::new(4);
+        forward_distributed(&engine, &world, &run, &params, &tokens, true)?;
+        let t0 = Instant::now();
+        for _ in 0..10 { forward_distributed(&engine, &world, &run, &params, &tokens, true)?; }
+        println!("{}: {:.1} ms/fwd", sched.name(), t0.elapsed().as_secs_f64() / 10.0 * 1e3);
+    }
+    Ok(())
+}

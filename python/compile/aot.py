@@ -1,0 +1,403 @@
+"""AOT lowering: every jax/pallas computation -> HLO TEXT artifact + manifest.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --preset tiny [--group all|core|bench] [--force]
+
+Outputs land in  artifacts/<preset>/*.hlo.txt  plus a flat-text manifest
+(artifacts/<preset>/manifest.txt) that the rust runtime parses:
+
+    lasp2-manifest 1
+    preset tiny
+    field d_model 64
+    ...
+    artifact l_part1_basic l_part1_basic.hlo.txt
+    in x f32 32,64
+    ...
+    out qt f32 32,2,32
+    end
+
+Scalars are passed as rank-1 [1] arrays so the rust literal builder is
+uniform.  All functions are lowered with return_tuple=True; the rust side
+unwraps the tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+class Artifact:
+    def __init__(self, name, fn, ins, outs):
+        """ins: [(name, ShapeDtypeStruct)], outs: [name] (shapes derived)."""
+        self.name = name
+        self.fn = fn
+        self.ins = ins
+        self.out_names = outs
+
+
+def _dt(dtype) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(dtype)]
+
+
+# ------------------------------------------------------------ registry
+def build_registry(cfg: M.ModelConfig, group: str):
+    d, hh, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    c, f, vb = cfg.chunk_len, cfg.ffn_dim, cfg.vocab
+    arts: list[Artifact] = []
+
+    def add(name, fn, ins, outs):
+        arts.append(Artifact(name, fn, ins, outs))
+
+    # ---- embed / head -------------------------------------------------
+    add("embed",
+        lambda tokens, offset, emb, pos: (M.embed(cfg, tokens, offset, emb,
+                                                  pos),),
+        [("tokens", _spec((c,), I32)), ("offset", _spec((1,), I32)),
+         ("emb", _spec((vb, d))), ("pos", _spec((cfg.max_seq, d)))],
+        ["x"])
+    add("head",
+        lambda x, final_ln, emb: (M.head_logits(cfg, x, final_ln, emb),),
+        [("x", _spec((c, d))), ("final_ln", _spec((d,))),
+         ("emb", _spec((vb, d)))],
+        ["logits"])
+    add("head_loss",
+        lambda x, targets, final_ln, emb: M.head_loss(cfg, x, targets,
+                                                      final_ln, emb),
+        [("x", _spec((c, d))), ("targets", _spec((c,), I32)),
+         ("final_ln", _spec((d,))), ("emb", _spec((vb, d)))],
+        ["loss_sum", "count"])
+
+    # ---- linear phases, per variant -----------------------------------
+    for v in M.LINEAR_VARIANTS:
+        rq = cfg.qk_dim(v)
+        fk = cfg.feat_dim(v)
+        extra_ins = []
+        if v == "gla":
+            extra_ins = [("wg", _spec((d, hh * rq)))]
+        elif v == "rebased":
+            extra_ins = [("gamma", _spec((rq,))), ("beta", _spec((rq,)))]
+
+        def p1(x, ln1, wq, wk, wv, *extra, _v=v):
+            names = (["wg"] if _v == "gla"
+                     else ["gamma", "beta"] if _v == "rebased" else [])
+            ex = {f"x.{n}": e for n, e in zip(names, extra)}
+            return M.linear_part1(cfg, _v, x, ln1, wq, wk, wv, extra=ex)
+
+        add(f"l_part1_{v}", p1,
+            [("x", _spec((c, d))), ("ln1", _spec((d,))),
+             ("wq", _spec((d, hh * rq))), ("wk", _spec((d, hh * rq))),
+             ("wv", _spec((d, hh * dh)))] + extra_ins,
+            ["qt", "kt", "v", "m", "a"])
+
+        add(f"l_part2_{v}",
+            functools.partial(
+                lambda x, qt, kt, vv, mp, wo, ln2, w1, w3, w2, _v=None:
+                (M.linear_part2(cfg, _v, x, qt, kt, vv, mp, wo, ln2, w1,
+                                w3, w2),), _v=v),
+            [("x", _spec((c, d))), ("qt", _spec((c, hh, fk))),
+             ("kt", _spec((c, hh, fk))), ("v", _spec((c, hh, dh))),
+             ("m_prefix", _spec((hh, fk, dh))), ("wo", _spec((hh * dh, d))),
+             ("ln2", _spec((d,))), ("w1", _spec((d, f))),
+             ("w3", _spec((d, f))), ("w2", _spec((f, d)))],
+            ["y"])
+
+        add(f"l_intra_{v}",
+            functools.partial(
+                lambda qt, kt, vv, _v=None:
+                (M.linear_intra(cfg, _v, qt, kt, vv),), _v=v),
+            [("qt", _spec((c, hh, fk))), ("kt", _spec((c, hh, fk))),
+             ("v", _spec((c, hh, dh)))],
+            ["o_intra"])
+        add(f"l_part2b_{v}",
+            lambda x, qt, o_intra, mp, wo, ln2, w1, w3, w2:
+            (M.linear_part2b(cfg, x, qt, o_intra, mp, wo, ln2, w1, w3, w2),),
+            [("x", _spec((c, d))), ("qt", _spec((c, hh, fk))),
+             ("o_intra", _spec((c, hh, dh))),
+             ("m_prefix", _spec((hh, fk, dh))), ("wo", _spec((hh * dh, d))),
+             ("ln2", _spec((d,))), ("w1", _spec((d, f))),
+             ("w3", _spec((d, f))), ("w2", _spec((f, d)))],
+            ["y"])
+
+    add("ring_linear_step",
+        lambda qt, k_j, v_j, acc, qoff, koff:
+        (M.ring_linear_step(qt, k_j, v_j, acc, qoff, koff),),
+        [("qt", _spec((c, hh, dh))), ("k_j", _spec((c, hh, dh))),
+         ("v_j", _spec((c, hh, dh))), ("acc", _spec((c, hh, dh))),
+         ("qoff", _spec((1,), I32)), ("koff", _spec((1,), I32))],
+        ["acc"])
+
+    # bidirectional (Alg. 1) part2, basic variant
+    add("l_part2nm_basic",
+        lambda x, qt, vv, mt, wo, ln2, w1, w3, w2:
+        (M.linear_part2_nomask(cfg, "basic", x, qt, vv, mt, wo, ln2, w1,
+                               w3, w2),),
+        [("x", _spec((c, d))), ("qt", _spec((c, hh, dh))),
+         ("v", _spec((c, hh, dh))), ("m_total", _spec((hh, dh, dh))),
+         ("wo", _spec((hh * dh, d))), ("ln2", _spec((d,))),
+         ("w1", _spec((d, f))), ("w3", _spec((d, f))),
+         ("w2", _spec((f, d)))],
+        ["y"])
+
+    # ---- backward phases (basic variant, Alg. 3/4) --------------------
+    add("l_bwd1_basic",
+        lambda qt, do: (M.linear_bwd1(qt, do),),
+        [("qt", _spec((c, hh, dh))), ("do", _spec((c, hh, dh)))],
+        ["dm"])
+    add("l_bwd2_basic",
+        lambda qt, kt, vv, do, mp, dms: M.linear_bwd2(qt, kt, vv, do, mp,
+                                                      dms),
+        [("qt", _spec((c, hh, dh))), ("kt", _spec((c, hh, dh))),
+         ("v", _spec((c, hh, dh))), ("do", _spec((c, hh, dh))),
+         ("m_prefix", _spec((hh, dh, dh))),
+         ("dm_suffix", _spec((hh, dh, dh)))],
+        ["dq", "dk", "dv"])
+
+    # ---- standard-attention phases (Alg. 7) + baselines ----------------
+    add("s_part1",
+        lambda x, ln1, wq, wk, wv: M.std_part1(cfg, x, ln1, wq, wk, wv),
+        [("x", _spec((c, d))), ("ln1", _spec((d,))),
+         ("wq", _spec((d, hh * dh))), ("wk", _spec((d, hh * dh))),
+         ("wv", _spec((d, hh * dh)))],
+        ["q", "k", "v"])
+    for t_world in cfg_sp_sizes(cfg):
+        n_all = t_world * c
+        add(f"s_part2_T{t_world}",
+            lambda x, q, k_all, v_all, offset, wo, ln2, w1, w3, w2:
+            (M.std_part2(cfg, x, q, k_all, v_all, offset, wo, ln2, w1, w3,
+                         w2),),
+            [("x", _spec((c, d))), ("q", _spec((c, hh, dh))),
+             ("k_all", _spec((n_all, hh, dh))),
+             ("v_all", _spec((n_all, hh, dh))),
+             ("offset", _spec((1,), I32)), ("wo", _spec((hh * dh, d))),
+             ("ln2", _spec((d,))), ("w1", _spec((d, f))),
+             ("w3", _spec((d, f))), ("w2", _spec((f, d)))],
+            ["y"])
+        add(f"mega_attn_basic_T{t_world}",
+            lambda qt, k_all, v_all, offset:
+            (M.mega_attn(cfg, "basic", qt, k_all, v_all, offset),),
+            [("qt", _spec((c, hh, dh))), ("k_all", _spec((n_all, hh, dh))),
+             ("v_all", _spec((n_all, hh, dh))),
+             ("offset", _spec((1,), I32))],
+            ["attn"])
+    add("post_attn",
+        lambda x, attn, wo, ln2, w1, w3, w2:
+        (M.post_attn(cfg, x, attn, wo, ln2, w1, w3, w2),),
+        [("x", _spec((c, d))), ("attn", _spec((c, hh, dh))),
+         ("wo", _spec((hh * dh, d))), ("ln2", _spec((d,))),
+         ("w1", _spec((d, f))), ("w3", _spec((d, f))),
+         ("w2", _spec((f, d)))],
+        ["y"])
+    add("ring_step",
+        lambda q, k, vv, m, l, acc, qoff, koff:
+        M.ring_step(q, k, vv, m, l, acc, qoff, koff),
+        [("q", _spec((c, hh, dh))), ("k", _spec((c, hh, dh))),
+         ("v", _spec((c, hh, dh))), ("m", _spec((c, hh))),
+         ("l", _spec((c, hh))), ("acc", _spec((c, hh, dh))),
+         ("qoff", _spec((1,), I32)), ("koff", _spec((1,), I32))],
+        ["m", "l", "acc"])
+    add("ring_finalize",
+        lambda l, acc: (M.ring_finalize(l, acc),),
+        [("l", _spec((c, hh))), ("acc", _spec((c, hh, dh)))],
+        ["attn"])
+
+    # ---- monolithic oracles + training ---------------------------------
+    n_mono = c * max(cfg_sp_sizes(cfg))
+    for v, pat_ratio in mono_set(cfg, group):
+        pattern = M.hybrid_pattern(cfg.n_layers, pat_ratio)
+        tag = pat_tag(pat_ratio)
+        variant = v if v != "softmax" else "basic"
+        specs = M.param_specs(cfg, variant, pattern)
+        pins = [(f"p.{n}", _spec(s)) for n, s, _ in specs]
+        add(f"forward_mono_{v}_{tag}_N{n_mono}",
+            functools.partial(
+                lambda *a, _v=None, _p=None:
+                M.forward_mono(cfg, _v, _p, a[:-1], a[-1]),
+                _v=variant, _p=pattern),
+            pins + [("tokens", _spec((n_mono,), I32))],
+            ["logits"])
+
+    for v, pat_ratio, masked in train_set(cfg, group):
+        pattern = M.hybrid_pattern(cfg.n_layers, pat_ratio)
+        tag = pat_tag(pat_ratio) + ("" if masked else "_nm")
+        variant = v if v != "softmax" else "basic"
+        specs = M.param_specs(cfg, variant, pattern)
+        np_ = len(specs)
+        pins = [(f"p.{n}", _spec(s)) for n, s, _ in specs]
+        mins = [(f"m.{n}", _spec(s)) for n, s, _ in specs]
+        vins = [(f"v.{n}", _spec(s)) for n, s, _ in specs]
+        bs, sl = cfg.train_batch, cfg.train_seq
+        add(f"init_{v}_{tag}",
+            functools.partial(
+                lambda seed, _v=None, _p=None:
+                M.init_params_fn(cfg, _v, _p, seed), _v=variant, _p=pattern),
+            [("seed", _spec((1,), I32))],
+            [f"p.{n}" for n, _, _ in specs])
+        add(f"train_step_{v}_{tag}",
+            functools.partial(
+                lambda *a, _v=None, _p=None, _m=None, _n=None:
+                M.train_step(cfg, _v, _p, _m, _n, *a),
+                _v=variant, _p=pattern, _m=masked, _n=np_),
+            pins + mins + vins + [
+                ("tokens", _spec((bs, sl), I32)),
+                ("targets", _spec((bs, sl), I32)),
+                ("loss_mask", _spec((bs, sl))),
+                ("lr", _spec((1,))), ("step", _spec((1,)))],
+            [f"p.{n}" for n, _, _ in specs]
+            + [f"m.{n}" for n, _, _ in specs]
+            + [f"v.{n}" for n, _, _ in specs] + ["loss"])
+
+    return arts
+
+
+def cfg_sp_sizes(cfg):
+    """SP world sizes for which gathered-KV artifacts are built."""
+    return [2, 4] if cfg.name == "tiny" else [4]
+
+
+def pat_tag(ratio: str) -> str:
+    return {"0": "pure", "1/8": "h8", "1/4": "h4", "1/2": "h2",
+            "all": "std"}[ratio]
+
+
+def mono_set(cfg, group):
+    """(variant, pattern-ratio) pairs for forward_mono oracles."""
+    if cfg.name == "tiny":
+        s = [(v, "0") for v in M.LINEAR_VARIANTS]
+        # tiny has 2 layers: "1/2" = "LN" exercises the hybrid (LASP-2H)
+        s += [("basic", "1/4"), ("basic", "1/2"), ("softmax", "all")]
+        return s
+    return [("basic", "0"), ("gla", "0"), ("basic", "1/4"),
+            ("basic", "1/2"), ("softmax", "all")]
+
+
+def train_set(cfg, group):
+    """(variant, pattern-ratio, masked) for init+train_step artifacts."""
+    if cfg.name == "tiny":
+        return [("basic", "0", True), ("gla", "0", True),
+                ("basic", "1/4", True), ("softmax", "all", True),
+                ("basic", "0", False)]
+    if cfg.name == "medium":
+        return [("basic", "0", True), ("basic", "1/4", True)]
+    # small
+    core = [("basic", "0", True), ("softmax", "all", True),
+            ("basic", "0", False)]
+    if group in ("bench", "all"):
+        for v in M.LINEAR_VARIANTS:
+            core.append((v, "0", True))
+            core.append((v, "1/4", True))
+        for v in ("basic", "lightning", "retention", "gla"):
+            core.append((v, "1/8", True))
+            core.append((v, "1/2", True))
+        # dedup, keep order
+        seen, out = set(), []
+        for e in core:
+            if e not in seen:
+                seen.add(e)
+                out.append(e)
+        return out
+    return core
+
+
+# ------------------------------------------------------------- lowering
+def lower_artifact(art: Artifact, out_dir: str, force: bool) -> dict:
+    path = os.path.join(out_dir, f"{art.name}.hlo.txt")
+    in_specs = [s for _, s in art.ins]
+    out_shapes = jax.eval_shape(art.fn, *in_specs)
+    if isinstance(out_shapes, (list, tuple)):
+        outs = list(out_shapes)
+    else:
+        outs = [out_shapes]
+    assert len(outs) == len(art.out_names), (
+        art.name, len(outs), len(art.out_names))
+    if force or not os.path.exists(path):
+        t0 = time.time()
+        lowered = jax.jit(art.fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"  {art.name}: {len(text) / 1e6:.2f} MB "
+              f"({time.time() - t0:.1f}s)", flush=True)
+    return {
+        "ins": [(n, _dt(s.dtype), s.shape) for n, s in art.ins],
+        "outs": [(n, _dt(o.dtype), o.shape)
+                 for n, o in zip(art.out_names, outs)],
+        "file": f"{art.name}.hlo.txt",
+    }
+
+
+def write_manifest(cfg, entries, out_dir):
+    lines = ["lasp2-manifest 1", f"preset {cfg.name}"]
+    for k in ("d_model", "n_heads", "n_layers", "vocab", "chunk_len",
+              "max_seq", "qk_reduced", "train_batch", "train_seq"):
+        lines.append(f"field {k} {getattr(cfg, k)}")
+    lines.append(f"field head_dim {cfg.head_dim}")
+    lines.append(f"field ffn_dim {cfg.ffn_dim}")
+    for name, meta in entries.items():
+        lines.append(f"artifact {name} {meta['file']}")
+        for n, dt, shape in meta["ins"]:
+            lines.append(f"in {n} {dt} {','.join(map(str, shape))}")
+        for n, dt, shape in meta["outs"]:
+            lines.append(f"out {n} {dt} {','.join(map(str, shape))}")
+        lines.append("end")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny",
+                    choices=list(M.PRESETS.keys()))
+    ap.add_argument("--group", default="core",
+                    choices=["core", "bench", "all"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="output dir (default artifacts/<preset>)")
+    args = ap.parse_args()
+
+    cfg = M.PRESETS[args.preset]
+    out_dir = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__)))), "artifacts", cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    arts = build_registry(cfg, args.group)
+    print(f"[aot] preset={cfg.name} group={args.group}: "
+          f"{len(arts)} artifacts -> {out_dir}", flush=True)
+    entries = {}
+    for art in arts:
+        entries[art.name] = lower_artifact(art, out_dir, args.force)
+    write_manifest(cfg, entries, out_dir)
+    print(f"[aot] manifest written ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

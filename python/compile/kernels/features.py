@@ -1,0 +1,45 @@
+"""Feature maps for the Based and ReBased linear-attention variants.
+
+Based (Arora et al., 2024) approximates exp(q.k) with its 2nd-order Taylor
+expansion, which factors into the feature map
+
+    phi(x) = [1, x, vec(x x^T)/sqrt(2)]          (dim 1 + d + d^2)
+
+applied to a REDUCED head dimension (the paper uses d=16) so the expanded
+feature dim stays small.  ReBased (Aksenov et al., 2024) replaces the Taylor
+kernel with a learnable quadratic: phi(x) = (gamma . x + beta)^2 (per-dim
+affine then square; we keep the feature dim = d).
+
+Both then run through the BASIC (g = 1) chunked linear-attention path — the
+memory state simply becomes [feat_dim, dv], and LASP-2's AllGather carries
+that state unchanged.  This mirrors the paper's setup where Based/ReBased
+are "attention modules" slotted into the same SP machinery.
+
+Note (documented substitution): the original Based adds a softmax-style
+denominator and a small sliding-window exact-attention term; we use the
+unnormalized form consistent with this paper's Eq. (3) so that ALL variants
+share the memory-state interface that LASP-2 communicates.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def phi_based(x):
+    """2nd-order Taylor feature map.  x: [..., d] -> [..., 1 + d + d^2]."""
+    d = x.shape[-1]
+    ones = jnp.ones(x.shape[:-1] + (1,), dtype=x.dtype)
+    outer = (x[..., :, None] * x[..., None, :]).reshape(
+        x.shape[:-1] + (d * d,)
+    ) / jnp.sqrt(jnp.asarray(2.0, dtype=x.dtype))
+    return jnp.concatenate([ones, x, outer], axis=-1)
+
+
+def based_feature_dim(d: int) -> int:
+    return 1 + d + d * d
+
+
+def phi_rebased(x, gamma, beta):
+    """Learnable quadratic feature map.  x: [..., d], gamma/beta: [d]."""
+    return jnp.square(x * gamma + beta)

@@ -1,0 +1,84 @@
+"""Lightning-Attention-style tiled kernel (Qin et al., 2024b).
+
+Lightning Attention's contribution is an IO-aware tiling that handles the
+intra-block part with the (masked) left product and the inter-block part
+with the right product, INSIDE one kernel, carrying the running state
+between tiles.  The math is identical to basic linear attention — which is
+exactly why the paper lists it as a separate "attention module" with the
+same SP treatment: LASP-2 is agnostic to the per-chunk kernel.
+
+Here the kernel walks the chunk in `block` tiles sequentially on ONE grid
+step (a `fori_loop` over tiles with a VMEM scratch state), mirroring the
+Triton implementation's program-per-head structure.  Equality with
+`linear_attn.intra_chunk + inter_chunk` is asserted in the test suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .linear_attn import INTERPRET
+
+
+def _lightning_kernel(q_ref, k_ref, v_ref, m0_ref, o_ref, *, block: int):
+    c, dk = q_ref.shape
+    dv = v_ref.shape[-1]
+    nb = c // block
+
+    def tile(t, state):
+        ds = pl.ds(t * block, block)
+        q = q_ref[ds, :]                       # [b, dk]
+        k = k_ref[ds, :]                       # [b, dk]
+        v = v_ref[ds, :]                       # [b, dv]
+        scores = q @ k.T                       # intra-tile, masked
+        rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(rows >= cols, scores, jnp.zeros_like(scores))
+        o_ref[ds, :] = scores @ v + q @ state  # inter via running state
+        return state + k.T @ v                 # right-product state update
+
+    final = jax.lax.fori_loop(0, nb, tile, m0_ref[...])
+    del final
+
+
+DEFAULT_TILE = 32
+
+
+@jax.custom_vjp
+def lightning_chunk_output(q, k, v, m_prefix):
+    """Full chunk output (intra + inter) with Lightning-style tiling.
+
+    q, k: [C, dk], v: [C, dv], m_prefix: [dk, dv] -> [C, dv].
+    Numerically identical to `fused_chunk_output` (tested).  Differentiable
+    via the same Alg.-4 custom VJP as the fused kernel.
+    """
+    c, dk = q.shape
+    dv = v.shape[-1]
+    b = min(DEFAULT_TILE, c)
+    assert c % b == 0
+    return pl.pallas_call(
+        functools.partial(_lightning_kernel, block=b),
+        out_shape=jax.ShapeDtypeStruct((c, dv), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v, m_prefix)
+
+
+def _lightning_fwd(q, k, v, m_prefix):
+    return lightning_chunk_output(q, k, v, m_prefix), (q, k, v, m_prefix)
+
+
+def _lightning_bwd(res, do):
+    from .linear_attn import bwd_chunk_dstate, bwd_intra
+
+    q, k, v, m_prefix = res
+    dqi, dki, dvi = bwd_intra(q, k, v, do)
+    dq = dqi + do @ m_prefix.T
+    dm = bwd_chunk_dstate(q, do)
+    return dq, dki, dvi, dm
+
+
+lightning_chunk_output.defvjp(_lightning_fwd, _lightning_bwd)

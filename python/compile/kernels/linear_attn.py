@@ -1,0 +1,254 @@
+"""Layer-1 Pallas kernels for chunked linear attention (LASP-2 hot spots).
+
+Three kernels implement the per-chunk compute of Alg. 1/2:
+
+  intra_chunk(q, k, v)      ->  O_intra = [(Q K^T) . Psi] V          (line 8)
+  chunk_state(k, v)         ->  M_t     = K^T V                      (line 6)
+  inter_chunk(q, m)         ->  O_inter = Q M_{1:t-1}                (line 10)
+
+All kernels are single-head ([C, d] operands); multi-head is a `jax.vmap`
+at the call site (model.py), which Pallas supports and which lowers to a
+batched grid.
+
+Hardware adaptation (paper: Triton/A100; here: Pallas/TPU-style):
+  * the intra kernel streams ROW BLOCKS of Q against the whole chunk's K, V
+    resident in VMEM — the BlockSpec plays the role of the paper's Triton
+    threadblock tiling.  For C<=512, d<=128 the working set is well under
+    the ~16MB VMEM budget (see DESIGN.md §8).
+  * score and output matmuls are MXU-shaped ([BQ, d] x [d, C], [BQ, C] x
+    [C, d]); the mask is applied with a broadcasted-iota compare, not a
+    materialized [N, N] mask.
+  * `interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+    custom-calls; real-TPU perf is estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot execute Mosaic custom-calls.
+
+DEFAULT_BLOCK_Q = 64
+
+
+def _intra_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int):
+    """One program instance computes `block_q` output rows of the masked
+    intra-chunk product [(Q K^T) . Psi] V."""
+    i = pl.program_id(0)
+    q = q_ref[...]            # [block_q, dk]
+    k = k_ref[...]            # [C, dk]
+    v = v_ref[...]            # [C, dv]
+    scores = q @ k.T          # [block_q, C]  (MXU matmul)
+    # causal mask: global row index within the chunk vs column index
+    rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(rows >= cols, scores, jnp.zeros_like(scores))
+    o_ref[...] = scores @ v   # [block_q, dv]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def intra_chunk(q, k, v, block_q: int = DEFAULT_BLOCK_Q):
+    """O_intra = [(Q K^T) . Psi] V for one chunk.  q, k: [C, dk], v: [C, dv]."""
+    c, dk = q.shape
+    dv = v.shape[-1]
+    bq = min(block_q, c)
+    assert c % bq == 0, f"chunk {c} not divisible by block {bq}"
+    return pl.pallas_call(
+        functools.partial(_intra_kernel, block_q=bq),
+        grid=(c // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, dk), lambda i: (i, 0)),      # Q row block
+            pl.BlockSpec((c, dk), lambda i: (0, 0)),       # full K in VMEM
+            pl.BlockSpec((c, dv), lambda i: (0, 0)),       # full V in VMEM
+        ],
+        out_specs=pl.BlockSpec((bq, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, dv), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+def _state_kernel(k_ref, v_ref, m_ref):
+    """M = K^T V (one matmul; contraction dim = chunk length C, which keeps
+    the MXU's 128-deep systolic contraction busy for C >= 128)."""
+    m_ref[...] = k_ref[...].T @ v_ref[...]
+
+
+@jax.custom_vjp
+def chunk_state(k, v):
+    """M_t = K_t^T V_t.  k: [C, dk], v: [C, dv] -> [dk, dv].
+
+    Differentiable (custom VJP): dK = V dM^T, dV = K dM — the inter parts
+    of Alg. 4 lines 10-11."""
+    c, dk = k.shape
+    dv = v.shape[-1]
+    return pl.pallas_call(
+        _state_kernel,
+        out_shape=jax.ShapeDtypeStruct((dk, dv), k.dtype),
+        interpret=INTERPRET,
+    )(k, v)
+
+
+def _state_fwd(k, v):
+    return chunk_state(k, v), (k, v)
+
+
+def _state_bwd(res, dm):
+    k, v = res
+    return v @ dm.T, k @ dm
+
+
+chunk_state.defvjp(_state_fwd, _state_bwd)
+
+
+def _inter_kernel(q_ref, m_ref, o_ref):
+    o_ref[...] = q_ref[...] @ m_ref[...]
+
+
+@jax.custom_vjp
+def inter_chunk(q, m):
+    """O_inter = Q M.  q: [C, dk], m: [dk, dv] -> [C, dv].
+
+    Differentiable (custom VJP): the backward is Alg. 3's
+    dQ = dO M^T, dM = Q^T dO — the latter via the bwd_chunk_dstate kernel.
+    """
+    c, dk = q.shape
+    dv = m.shape[-1]
+    return pl.pallas_call(
+        _inter_kernel,
+        out_shape=jax.ShapeDtypeStruct((c, dv), q.dtype),
+        interpret=INTERPRET,
+    )(q, m)
+
+
+def _inter_fwd(q, m):
+    return inter_chunk(q, m), (q, m)
+
+
+def _inter_bwd(res, do):
+    q, m = res
+    return do @ m.T, bwd_chunk_dstate(q, do)
+
+
+inter_chunk.defvjp(_inter_fwd, _inter_bwd)
+
+
+def _bwd_dstate_kernel(q_ref, do_ref, dm_ref):
+    """dM_t = Q_t^T dO_t (Alg. 3/4 line 3)."""
+    dm_ref[...] = q_ref[...].T @ do_ref[...]
+
+
+@jax.jit
+def bwd_chunk_dstate(q, do):
+    """dM_t = Q_t^T dO_t.  q: [C, dk], do: [C, dv] -> [dk, dv]."""
+    c, dk = q.shape
+    dv = do.shape[-1]
+    return pl.pallas_call(
+        _bwd_dstate_kernel,
+        out_shape=jax.ShapeDtypeStruct((dk, dv), q.dtype),
+        interpret=INTERPRET,
+    )(q, do)
+
+
+def _bwd_intra_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref):
+    """Intra-chunk parts of Alg. 4 (lines 5-7), one whole chunk per program:
+        dQ_intra = [(dO V^T) . Psi]   K
+        dK_intra = [(dO V^T) . Psi]^T Q
+        dV_intra = [(Q K^T)  . Psi]^T dO
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    do = do_ref[...]
+    c = q.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    tril = rows >= cols
+    dov = jnp.where(tril, do @ v.T, jnp.zeros((c, c), q.dtype))
+    qk = jnp.where(tril, q @ k.T, jnp.zeros((c, c), q.dtype))
+    dq_ref[...] = dov @ k
+    dk_ref[...] = dov.T @ q
+    dv_ref[...] = qk.T @ do
+
+
+@jax.jit
+def bwd_intra(q, k, v, do):
+    """Intra-chunk backward.  Returns (dq_intra, dk_intra, dv_intra)."""
+    c, dk_dim = q.shape
+    dv_dim = v.shape[-1]
+    return pl.pallas_call(
+        _bwd_intra_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((c, dk_dim), q.dtype),
+            jax.ShapeDtypeStruct((c, dk_dim), q.dtype),
+            jax.ShapeDtypeStruct((c, dv_dim), q.dtype),
+        ),
+        interpret=INTERPRET,
+    )(q, k, v, do)
+
+
+# ------------------------------------------------------------------ fused
+def _fused_chunk_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, block_q: int):
+    """Fused intra + inter for one chunk: O = [(QK^T).Psi]V + Q M_prefix.
+
+    This fusion is the actual LASP-2 per-device hot path (Alg. 2 lines 8-11
+    collapsed): one pass over the Q row blocks produces the final output, so
+    the intermediate O_intra never round-trips through HBM.
+    """
+    i = pl.program_id(0)
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    m = m_ref[...]
+    scores = q @ k.T
+    rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(rows >= cols, scores, jnp.zeros_like(scores))
+    o_ref[...] = scores @ v + q @ m
+
+
+@jax.custom_vjp
+def fused_chunk_output(q, k, v, m_prefix):
+    """O_t = O_intra + O_inter fused.  q,k: [C,dk], v: [C,dv], m: [dk,dv].
+
+    Differentiable (custom VJP): the backward is exactly Alg. 4 restricted
+    to one chunk — intra parts via the bwd_intra Pallas kernel, inter parts
+    dQ += dO M^T / dM = Q^T dO via bwd_chunk_dstate.  This makes the L1
+    Pallas kernels the training hot path (through the train_step artifact),
+    not just the inference path.
+    """
+    c, dk = q.shape
+    dv = v.shape[-1]
+    bq = min(DEFAULT_BLOCK_Q, c)
+    assert c % bq == 0
+    return pl.pallas_call(
+        functools.partial(_fused_chunk_kernel, block_q=bq),
+        grid=(c // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, dk), lambda i: (i, 0)),
+            pl.BlockSpec((c, dk), lambda i: (0, 0)),
+            pl.BlockSpec((c, dv), lambda i: (0, 0)),
+            pl.BlockSpec((dk, dv), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, dv), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v, m_prefix)
+
+
+def _fused_fwd(q, k, v, m_prefix):
+    return fused_chunk_output(q, k, v, m_prefix), (q, k, v, m_prefix)
+
+
+def _fused_bwd(res, do):
+    q, k, v, m_prefix = res
+    dqi, dki, dvi = bwd_intra(q, k, v, do)
+    dq = dqi + do @ m_prefix.T
+    dm = bwd_chunk_dstate(q, do)
+    return dq, dki, dvi, dm
+
+
+fused_chunk_output.defvjp(_fused_fwd, _fused_bwd)

@@ -1,0 +1,219 @@
+"""Pure-jnp oracles for the LASP-2 kernels.
+
+Every Pallas kernel in this package is checked against these references at
+build time (pytest + hypothesis).  The references are written as directly as
+possible from the paper's equations:
+
+  * `recurrent_linear_attn`   — Eq. (4): token-by-token recurrence
+                                M_s = diag(g_s) M_{s-1} + k_s^T v_s,
+                                o_s = q_s M_s   (g = 1 for basic linear attn)
+  * `full_linear_attn`        — Eq. (3)/(7): masked left-product form
+  * `softmax_attn`            — Eq. (1) with causal mask & position offset
+
+The gated formulation covers all linear variants in the paper via
+per-token/per-key-dim decay gates g in (0, 1]^{dk}:
+  basic linear attention : g = 1
+  Retention (RetNet)     : g = lambda (scalar per head)
+  GLA                    : g = data-dependent sigmoid gates
+Based / ReBased apply a feature map to q, k first (see features.py) and then
+use the basic (g = 1) path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def recurrent_linear_attn(q, k, v, g=None, m0=None):
+    """Ground-truth recurrence, one token at a time.
+
+    q, k: [N, dk], v: [N, dv], g: [N, dk] or None (ones), m0: [dk, dv] or None.
+    Returns (o [N, dv], mT [dk, dv]).
+
+    Recurrence (gate decays the past *before* the current token is added):
+        M_s = diag(g_s) M_{s-1} + k_s^T v_s
+        o_s = q_s M_s
+    """
+    n, dk = q.shape
+    dv = v.shape[-1]
+    if g is None:
+        g = jnp.ones((n, dk), dtype=q.dtype)
+    if m0 is None:
+        m0 = jnp.zeros((dk, dv), dtype=q.dtype)
+
+    def step(m, inp):
+        q_s, k_s, v_s, g_s = inp
+        m = g_s[:, None] * m + jnp.outer(k_s, v_s)
+        o_s = q_s @ m
+        return m, o_s
+
+    mT, o = jax.lax.scan(step, m0, (q, k, v, g))
+    return o, mT
+
+
+def full_linear_attn(q, k, v, masked=True):
+    """Left-product linear attention, Eq. (3) / Eq. (7) (basic, g = 1).
+
+    O = (Q K^T  [odot tril]) V.  q, k: [N, dk], v: [N, dv].
+    """
+    scores = q @ k.T
+    if masked:
+        n = q.shape[0]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.zeros_like(scores))
+    return scores @ v
+
+
+def gate_prefactors(g):
+    """Cumulative gate products B_i = prod_{j<=i} g_j, and carry a = B_{N-1}.
+
+    g: [N, dk] -> (B [N, dk], a [dk]).  With q~ = q * B, k~ = k / B the gated
+    recurrence becomes the basic one:
+        intra scores s_ij = q~_i . k~_j           (j <= i)
+        inter        o_i += (q_i * B_i) M_prev = q~_i M_prev
+        chunk state  P    = (k~ * a)^T V ,  M' = diag(a) M_prev + P
+    """
+    b = jnp.cumprod(g, axis=0)
+    return b, b[-1]
+
+
+def gated_full_linear_attn(q, k, v, g, m0=None):
+    """Masked gated linear attention via the prefactor trick (single chunk).
+
+    Matches recurrent_linear_attn exactly (up to fp error).
+    Returns (o, mT).
+    """
+    b, a = gate_prefactors(g)
+    qt = q * b
+    kt = k / b
+    n = q.shape[0]
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    scores = jnp.where(mask, qt @ kt.T, jnp.zeros((n, n), dtype=q.dtype))
+    o = scores @ v
+    p = (kt * a[None, :]).T @ v
+    if m0 is not None:
+        o = o + qt @ m0
+        mT = a[:, None] * m0 + p
+    else:
+        mT = p
+    return o, mT
+
+
+def chunked_linear_attn(q, k, v, g, num_chunks):
+    """Alg. 2 (LASP-2 w/ masking) math over `num_chunks` chunks, pure jnp.
+
+    This mirrors exactly what the distributed system computes:
+      per chunk: M_t = (k~ * a)^T v, intra = (q~ k~^T . tril) v
+      combine  : M_{1:t-1} via gated prefix scan (Eq. 8/9 generalized)
+      inter    : o += q~ M_{1:t-1}
+    Returns o [N, dv].
+    """
+    n, dk = q.shape
+    dv = v.shape[-1]
+    c = n // num_chunks
+    qc = q.reshape(num_chunks, c, dk)
+    kc = k.reshape(num_chunks, c, dk)
+    vc = v.reshape(num_chunks, c, dv)
+    gc = g.reshape(num_chunks, c, dk)
+
+    outs = []
+    m_prefix = jnp.zeros((dk, dv), dtype=q.dtype)
+    for t in range(num_chunks):
+        o_t, _ = gated_full_linear_attn(qc[t], kc[t], vc[t], gc[t], m0=m_prefix)
+        # prefix update (what the rust coordinator does after the AllGather)
+        b, a = gate_prefactors(gc[t])
+        p_t = ((kc[t] / b) * a[None, :]).T @ vc[t]
+        m_prefix = a[:, None] * m_prefix + p_t
+        outs.append(o_t)
+    return jnp.concatenate(outs, axis=0)
+
+
+def unmasked_chunked_linear_attn(q, k, v, num_chunks):
+    """Alg. 1 (LASP-2 w/o masking) math: M_{1:T} = Sum(AllGather([M_t])),
+    O_t = Q_t M_{1:T}.  Bidirectional (no causal mask), basic variant."""
+    n, dk = q.shape
+    dv = v.shape[-1]
+    c = n // num_chunks
+    kc = k.reshape(num_chunks, c, dk)
+    vc = v.reshape(num_chunks, c, dv)
+    m_all = jnp.einsum("tcd,tce->de", kc, vc)  # Sum of all chunk states
+    return q @ m_all
+
+
+def softmax_attn(q, k, v, causal=True, q_offset=0, scale=None):
+    """Reference softmax attention with global-position causal mask.
+
+    q: [Cq, d] at global positions q_offset + [0..Cq), k, v: [Nk, d] at
+    global positions [0..Nk).
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = (q @ k.T) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(q.shape[0])[:, None]
+        kpos = jnp.arange(k.shape[0])[None, :]
+        scores = jnp.where(qpos >= kpos, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return w @ v
+
+
+def linear_attn_no_trick(q, k, v, q_offset=0, masked=True):
+    """Megatron-SP-on-linear-attention baseline: the left-product form over
+    the FULL gathered sequence (no right-product trick), as the paper's
+    comparison setup prescribes (Sec. 4.1)."""
+    scores = q @ k.T
+    if masked:
+        qpos = q_offset + jnp.arange(q.shape[0])[:, None]
+        kpos = jnp.arange(k.shape[0])[None, :]
+        scores = jnp.where(qpos >= kpos, scores, jnp.zeros_like(scores))
+    return scores @ v
+
+
+# ---------------------------------------------------------------- backward
+def lasp2_masked_backward(q, k, v, do, num_chunks):
+    """Alg. 4 (LASP-2 w/ masking, backward) in pure jnp, basic variant (g=1).
+
+    Returns (dq, dk, dv).  Used as the oracle for the l_bwd1/l_bwd2 artifacts
+    and for the rust distributed-backward integration test.
+    """
+    n, dk_dim = q.shape
+    dv = v.shape[-1]
+    c = n // num_chunks
+    qc = q.reshape(num_chunks, c, dk_dim)
+    kc = k.reshape(num_chunks, c, dk_dim)
+    vc = v.reshape(num_chunks, c, dv)
+    doc = do.reshape(num_chunks, c, dv)
+    mask = jnp.tril(jnp.ones((c, c), dtype=bool))
+    zeros_cc = jnp.zeros((c, c), dtype=q.dtype)
+
+    # forward states M_t and prefix M_{1:t-1}
+    m_t = jnp.einsum("tcd,tce->tde", kc, vc)
+    m_prefix = jnp.concatenate(
+        [jnp.zeros((1, dk_dim, dv), dtype=q.dtype),
+         jnp.cumsum(m_t, axis=0)[:-1]],
+        axis=0,
+    )
+    # dM_t = Q_t^T dO_t ; suffix sums dM_{t+1:T}
+    dm_t = jnp.einsum("tcd,tce->tde", qc, doc)
+    dm_rev = jnp.cumsum(dm_t[::-1], axis=0)[::-1]
+    dm_suffix = jnp.concatenate(
+        [dm_rev[1:], jnp.zeros((1, dk_dim, dv), dtype=q.dtype)], axis=0
+    )
+
+    dqs, dks, dvs = [], [], []
+    for t in range(num_chunks):
+        dov = jnp.where(mask, doc[t] @ vc[t].T, zeros_cc)   # (dO V^T) . Psi
+        qk = jnp.where(mask, qc[t] @ kc[t].T, zeros_cc)     # (Q K^T) . Psi
+        dq = dov @ kc[t] + doc[t] @ m_prefix[t].T
+        dk_ = dov.T @ qc[t] + vc[t] @ dm_suffix[t].T
+        dv_ = qk.T @ doc[t] + kc[t] @ dm_suffix[t]
+        dqs.append(dq)
+        dks.append(dk_)
+        dvs.append(dv_)
+    return (
+        jnp.concatenate(dqs, axis=0),
+        jnp.concatenate(dks, axis=0),
+        jnp.concatenate(dvs, axis=0),
+    )

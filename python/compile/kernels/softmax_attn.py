@@ -1,0 +1,136 @@
+"""Blocked online-softmax (flash-style) Pallas kernel for the hybrid's
+standard-attention layers and the Ring Attention / Megatron-SP baselines.
+
+The kernel computes, for one query chunk at global offset `q_offset` against
+a gathered key/value sequence of length Nk (Alg. 7, line 7):
+
+    O_t = Softmax(Q_t K^T / sqrt(d) . Psi) V
+
+using the FlashAttention-2 streaming recurrence over KV blocks: running row
+max m, running denominator l, rescaled accumulator.  This is the same
+algorithm the paper's testbed uses (FlashAttention-2 on A100); here the KV
+blocks stream through VMEM instead of SRAM.
+
+`ring_attention_step` exposes a single (m, l, acc) update for one KV block —
+the unit of work Ring Attention executes per ring hop; the rust coordinator
+chains W of them with P2P communication in between.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .linear_attn import INTERPRET
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                  causal: bool):
+    cq, d = q_ref.shape
+    nk = k_ref.shape[0]
+    scale = 1.0 / (d ** 0.5)
+    q = q_ref[...] * scale
+    qoff = qoff_ref[0]
+
+    nb = nk // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        ds = pl.ds(j * block_k, block_k)
+        k = k_ref[ds, :]
+        v = v_ref[ds, :]
+        s = q @ k.T                                      # [cq, bk]
+        if causal:
+            rows = qoff + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))      # [cq]
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((cq,), NEG_INF, dtype=q.dtype)
+    l0 = jnp.zeros((cq,), dtype=q.dtype)
+    acc0 = jnp.zeros((cq, v_ref.shape[-1]), dtype=q.dtype)
+    m, l, acc = jax.lax.fori_loop(0, nb, body, (m0, l0, acc0))
+    o_ref[...] = acc / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "causal"))
+def flash_attention(q_offset, q, k, v, block_k: int = 64, causal: bool = True):
+    """Blocked softmax attention.  q: [Cq, d] at global positions
+    q_offset+[0..Cq); k, v: [Nk, d] at positions [0..Nk).  q_offset: i32[1].
+    """
+    cq, d = q.shape
+    nk, dv = k.shape[0], v.shape[-1]
+    bk = min(block_k, nk)
+    assert nk % bk == 0
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=bk, causal=causal),
+        out_shape=jax.ShapeDtypeStruct((cq, dv), q.dtype),
+        interpret=INTERPRET,
+    )(q_offset, q, k, v)
+
+
+def _ring_step_kernel(qoff_ref, koff_ref, q_ref, k_ref, v_ref,
+                      m_ref, l_ref, acc_ref,
+                      m_out, l_out, acc_out):
+    """One online-softmax update against a single KV block that arrived via
+    the ring: the per-hop compute of Ring Attention (Liu et al., 2023)."""
+    cq, d = q_ref.shape
+    scale = 1.0 / (d ** 0.5)
+    q = q_ref[...] * scale
+    s = q @ k_ref[...].T
+    rows = qoff_ref[0] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = koff_ref[0] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(rows >= cols, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    m_out[...] = m_new
+    l_out[...] = alpha * l_ref[...] + p.sum(axis=-1)
+    acc_out[...] = acc_ref[...] * alpha[:, None] + p @ v_ref[...]
+
+
+@jax.jit
+def ring_attention_step(q_offset, k_offset, q, k, v, m, l, acc):
+    """One ring hop: update (m, l, acc) with KV block at global k_offset.
+
+    q: [Cq, d]; k, v: [Ck, d]; m, l: [Cq]; acc: [Cq, dv].
+    Returns (m', l', acc').
+    """
+    cq, d = q.shape
+    dv = v.shape[-1]
+    return pl.pallas_call(
+        _ring_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((cq,), q.dtype),
+            jax.ShapeDtypeStruct((cq,), q.dtype),
+            jax.ShapeDtypeStruct((cq, dv), q.dtype),
+        ),
+        interpret=INTERPRET,
+    )(q_offset, k_offset, q, k, v, m, l, acc)
+
+
+@jax.jit
+def ring_attention_finalize(l, acc):
+    """O = acc / l — after the last ring hop."""
+    return acc / l[:, None]
+
+
+def ring_attention_init(cq: int, dv: int, dtype=jnp.float32):
+    """Initial (m, l, acc) carry for a query chunk."""
+    return (
+        jnp.full((cq,), NEG_INF, dtype=dtype),
+        jnp.zeros((cq,), dtype=dtype),
+        jnp.zeros((cq, dv), dtype=dtype),
+    )

@@ -1,0 +1,573 @@
+"""Layer-2: Linear-Llama3 in JAX (build-time only; lowered to HLO artifacts).
+
+The paper's evaluation model is "Linear-Llama3": Llama3 with standard
+softmax attention replaced by a linear-attention module (basic / Lightning /
+Retention / GLA / Based / ReBased), optionally keeping every 4th layer as
+standard attention (the "1/4 hybrid").  This file defines:
+
+  * per-chunk PHASE functions — the units the rust coordinator executes per
+    device between collectives:
+      linear_part1  : X_t -> Q~_t, K~_t, V_t, M_t, a_t     (Alg. 2 lines 5-6)
+      linear_part2  : ... M_{1:t-1} -> Y_t                 (Alg. 2 lines 8-11
+                                                            + O-proj + MLP)
+      linear_bwd1/2 : Alg. 4 chunk backward phases
+      std_part1/2   : Alg. 7 (AllGather-based context parallelism)
+      mega_attn     : Megatron-SP-style gathered left-product baseline
+      ring_step     : Ring Attention per-hop online-softmax update
+  * MONOLITHIC functions — single-device oracle forward and the Adam
+    `train_step` used for the convergence experiments (Tables 2, 3, 4).
+
+Design notes:
+  * All linear variants are expressed through per-token decay gates g and
+    the prefactor trick (see kernels/ref.py): q~ = q*B, k~ = k/B.  The
+    cross-chunk state combine is the monoid
+        (a1, m1) . (a2, m2) = (a1*a2, diag(a2) m1 + m2)
+    which the rust coordinator evaluates after its AllGather, and which
+    `associative_scan` evaluates here in the monolithic oracle.
+  * No RoPE (substitution, documented in DESIGN.md): positional information
+    comes from learned absolute position embeddings, which keeps the linear
+    and standard branches consistent.
+  * Gates are floored (g = floor + (1-floor)*sigmoid) so that the in-chunk
+    cumprod stays well inside f32 range for C <= 512.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linear_attn as ka
+from .kernels import lightning as kl
+from .kernels import softmax_attn as ks
+from .kernels import features as kf
+from .kernels import ref as kref
+
+LINEAR_VARIANTS = ("basic", "lightning", "retention", "gla", "based",
+                   "rebased")
+GATE_FLOOR = 0.95
+GLA_TAU = 16.0  # gate temperature, as in GLA (Yang et al., 2023)
+
+
+# =========================================================== configuration
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    vocab: int = 256
+    ffn_mult: float = 2.0
+    chunk_len: int = 32           # C: SP chunk length per device
+    max_seq: int = 1024           # position-embedding table size
+    qk_reduced: int = 8           # reduced qk head dim for based/rebased
+    train_batch: int = 2
+    train_seq: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def ffn_dim(self) -> int:
+        return int(self.d_model * self.ffn_mult)
+
+    def qk_dim(self, variant: str) -> int:
+        """Raw per-head qk projection width for a variant."""
+        if variant in ("based", "rebased"):
+            return self.qk_reduced
+        return self.head_dim
+
+    def feat_dim(self, variant: str) -> int:
+        """Memory-state key dim (feature dim) fk: M_t is [H, fk, head_dim]."""
+        r = self.qk_dim(variant)
+        if variant == "based":
+            return kf.based_feature_dim(r)
+        return r
+
+
+PRESETS = {
+    # tests / fast CI
+    "tiny": ModelConfig(name="tiny", d_model=64, n_heads=2, n_layers=2,
+                        vocab=256, chunk_len=32, max_seq=512, qk_reduced=8,
+                        train_batch=2, train_seq=64),
+    # examples / convergence benches
+    "small": ModelConfig(name="small", d_model=256, n_heads=4, n_layers=4,
+                         vocab=512, chunk_len=128, max_seq=2048,
+                         qk_reduced=16, train_batch=4, train_seq=512),
+    # ~100M-parameter end-to-end training driver
+    "medium": ModelConfig(name="medium", d_model=768, n_heads=12,
+                          n_layers=12, vocab=16384, ffn_mult=2.6875,
+                          chunk_len=128, max_seq=1024, qk_reduced=16,
+                          train_batch=1, train_seq=512),
+}
+
+
+def hybrid_pattern(n_layers: int, ratio: str) -> str:
+    """Build the paper's layer pattern strings (Sec. A.5.2).
+
+    ratio in {"0", "1/8", "1/4", "1/2", "all"}: 0 = pure linear,
+    1/4 = "LLLN" repeated, all = pure standard attention (Llama3 baseline).
+    """
+    if ratio == "0":
+        unit = "L"
+    elif ratio == "1/8":
+        unit = "LLLLLLLN"
+    elif ratio == "1/4":
+        unit = "LLLN"
+    elif ratio == "1/2":
+        unit = "LN"
+    elif ratio == "all":
+        unit = "N"
+    else:
+        raise ValueError(f"unknown hybrid ratio {ratio}")
+    s = (unit * n_layers)[:n_layers]
+    return s
+
+
+# ================================================================== params
+def param_specs(cfg: ModelConfig, variant: str, pattern: str):
+    """Deterministic flat parameter list: [(name, shape, init)].
+
+    init in {"normal" (0.02), "xavier", "ones", "zeros"} — the rust side
+    never initializes params itself; the init_params artifact does.
+    """
+    d, h = cfg.d_model, cfg.n_heads
+    dh = cfg.head_dim
+    rq = cfg.qk_dim(variant)
+    f = cfg.ffn_dim
+    specs = [
+        ("embed", (cfg.vocab, d), "normal"),
+        ("pos", (cfg.max_seq, d), "normal"),
+        ("final_ln", (d,), "ones"),
+    ]
+    for i, kind in enumerate(pattern):
+        p = f"layer{i}"
+        specs.append((f"{p}.ln1", (d,), "ones"))
+        if kind == "L":
+            specs.append((f"{p}.wq", (d, h * rq), "xavier"))
+            specs.append((f"{p}.wk", (d, h * rq), "xavier"))
+        else:
+            specs.append((f"{p}.wq", (d, h * dh), "xavier"))
+            specs.append((f"{p}.wk", (d, h * dh), "xavier"))
+        specs.append((f"{p}.wv", (d, h * dh), "xavier"))
+        specs.append((f"{p}.wo", (h * dh, d), "xavier"))
+        if kind == "L" and variant == "gla":
+            specs.append((f"{p}.wg", (d, h * rq), "xavier"))
+        if kind == "L" and variant == "rebased":
+            specs.append((f"{p}.gamma", (rq,), "ones"))
+            specs.append((f"{p}.beta", (rq,), "zeros"))
+        specs.append((f"{p}.ln2", (d,), "ones"))
+        specs.append((f"{p}.w1", (d, f), "xavier"))
+        specs.append((f"{p}.w3", (d, f), "xavier"))
+        specs.append((f"{p}.w2", (f, d), "xavier"))
+    return specs
+
+
+def unflatten_params(cfg, variant, pattern, flat):
+    specs = param_specs(cfg, variant, pattern)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return {name: x for (name, _, _), x in zip(specs, flat)}
+
+
+def init_params_fn(cfg: ModelConfig, variant: str, pattern: str, seed):
+    """seed: i32[1] -> tuple of initialized flat params (the init artifact)."""
+    key = jax.random.PRNGKey(seed[0])
+    specs = param_specs(cfg, variant, pattern)
+    out = []
+    for name, shape, init in specs:
+        key, sub = jax.random.split(key)
+        if init == "ones":
+            out.append(jnp.ones(shape, jnp.float32))
+        elif init == "zeros":
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif init == "normal":
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        else:  # xavier
+            fan_in, fan_out = shape[0], shape[-1]
+            std = (2.0 / (fan_in + fan_out)) ** 0.5
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return tuple(out)
+
+
+# ============================================================= primitives
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def swiglu(x, w1, w3, w2):
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def retention_lambdas(cfg: ModelConfig):
+    """Per-head decay, RetNet-style: lambda_h = 1 - 2^(-5-h), floored."""
+    h = jnp.arange(cfg.n_heads, dtype=jnp.float32)
+    return jnp.maximum(1.0 - jnp.exp2(-5.0 - h), GATE_FLOOR)
+
+
+def _gates(cfg: ModelConfig, variant: str, h_norm, lp, prefix, c):
+    """Per-token decay gates g: [C, H, fk] (ones for non-decay variants)."""
+    hh, fk = cfg.n_heads, cfg.feat_dim(variant)
+    if variant == "retention":
+        lam = retention_lambdas(cfg)                      # [H]
+        return jnp.broadcast_to(lam[None, :, None], (c, hh, fk))
+    if variant == "gla":
+        raw = (h_norm @ lp[f"{prefix}.wg"]).reshape(c, hh, fk)
+        sg = jax.nn.sigmoid(raw) ** (1.0 / GLA_TAU)
+        return GATE_FLOOR + (1.0 - GATE_FLOOR) * sg
+    return jnp.ones((c, hh, fk), jnp.float32)
+
+
+def _qk_features(cfg, variant, q, k, lp, prefix):
+    """Apply the variant's feature map. q,k: [C, H, rq] -> [C, H, fk]."""
+    if variant == "based":
+        return kf.phi_based(q), kf.phi_based(k)
+    if variant == "rebased":
+        g, b = lp[f"{prefix}.gamma"], lp[f"{prefix}.beta"]
+        return kf.phi_rebased(q, g, b), kf.phi_rebased(k, g, b)
+    return q, k
+
+
+# ======================================================== linear SP phases
+def linear_part1(cfg: ModelConfig, variant: str, x, ln1, wq, wk, wv,
+                 extra=None):
+    """Alg. 2 lines 5-6 for one chunk on one device.
+
+    x: [C, D].  Returns (q~ [C,H,fk], k~ [C,H,fk], v [C,H,dh],
+    m_t [H,fk,dh], a_t [H,fk]).
+
+    q~ = q*B and k~ = k/B fold the decay gates so that downstream kernels
+    are the BASIC ones for every variant; m_t is the chunk's state
+    contribution P_t; a_t the chunk's total decay (all-ones when no decay).
+    The rust coordinator AllGathers (m_t, a_t) and computes the gated
+    prefix combine.
+    """
+    c = x.shape[0]
+    hh, dh = cfg.n_heads, cfg.head_dim
+    rq = cfg.qk_dim(variant)
+    lp = {"x.ln1": ln1, "x.wq": wq, "x.wk": wk, "x.wv": wv}
+    if extra is not None:
+        lp.update(extra)
+    hn = rmsnorm(x, ln1)
+    q = (hn @ wq).reshape(c, hh, rq)
+    k = (hn @ wk).reshape(c, hh, rq)
+    v = (hn @ wv).reshape(c, hh, dh)
+    q, k = _qk_features(cfg, variant, q, k, lp, "x")
+    g = _gates(cfg, variant, hn, lp, "x", c)
+    b = jnp.cumprod(g, axis=0)                 # [C, H, fk]
+    a = b[-1]                                  # [H, fk]
+    qt = q * b
+    kt = k / b
+    k_state = kt * a[None]                     # rows scaled for the state
+    # chunk state via the Pallas kernel (vmapped over heads)
+    m = jax.vmap(ka.chunk_state, in_axes=(1, 1), out_axes=0)(k_state, v)
+    return qt, kt, v, m, a
+
+
+def linear_part2(cfg: ModelConfig, variant: str, x, qt, kt, v, m_prefix,
+                 wo, ln2, w1, w3, w2):
+    """Alg. 2 lines 8-11 + output projection + residual MLP for one chunk.
+
+    m_prefix: [H, fk, dh] — the gated prefix state M_{1:t-1} produced by the
+    coordinator's combine after the AllGather.  Uses the fused Pallas kernel
+    (intra + inter in one pass) — or the Lightning tiled kernel when the
+    layer's module is Lightning Attention.
+    """
+    c = x.shape[0]
+    hh, dh = cfg.n_heads, cfg.head_dim
+    if variant == "lightning":
+        attn = jax.vmap(kl.lightning_chunk_output,
+                        in_axes=(1, 1, 1, 0), out_axes=1)(qt, kt, v, m_prefix)
+    else:
+        attn = jax.vmap(ka.fused_chunk_output,
+                        in_axes=(1, 1, 1, 0), out_axes=1)(qt, kt, v, m_prefix)
+    y = x + attn.reshape(c, hh * dh) @ wo
+    z = y + swiglu(rmsnorm(y, ln2), w1, w3, w2)
+    return z
+
+
+def linear_intra(cfg: ModelConfig, variant: str, qt, kt, v):
+    """Alg. 2 line 8 only: O_intra — the compute that OVERLAPS with the
+    AllGather (executed on a separate thread by the rust coordinator)."""
+    return jax.vmap(ka.intra_chunk, in_axes=(1, 1, 1), out_axes=1)(qt, kt, v)
+
+
+def linear_part2b(cfg: ModelConfig, x, qt, o_intra, m_prefix, wo, ln2, w1,
+                  w3, w2):
+    """Alg. 2 lines 10-11 + epilogue, for the overlapped schedule:
+    O_t = O_intra + Q~_t M_{1:t-1}, then O-proj + MLP."""
+    c = x.shape[0]
+    hh, dh = cfg.n_heads, cfg.head_dim
+    inter = jax.vmap(ka.inter_chunk, in_axes=(1, 0), out_axes=1)(qt, m_prefix)
+    attn = o_intra + inter
+    y = x + attn.reshape(c, hh * dh) @ wo
+    z = y + swiglu(rmsnorm(y, ln2), w1, w3, w2)
+    return z
+
+
+def ring_linear_step(qt, k_j, v_j, acc, q_offset, k_offset):
+    """Ring-Attention-style SP applied to a LINEAR attention instance
+    without the right-product trick (the paper's comparison setup): one ring
+    hop accumulates [(Q K_j^T) . Psi_global] V_j into acc.
+
+    qt: [C,H,fk], k_j: [C,H,fk], v_j: [C,H,dh], acc: [C,H,dh]."""
+    c = qt.shape[0]
+    scores = jnp.einsum("chf,dhf->chd", qt, k_j)        # [Cq, H, Ck]
+    qpos = q_offset[0] + jnp.arange(c)[:, None, None]
+    kpos = k_offset[0] + jnp.arange(c)[None, None, :]
+    scores = jnp.where(qpos >= kpos, scores, jnp.zeros_like(scores))
+    return acc + jnp.einsum("chd,dhe->che", scores, v_j)
+
+
+def linear_part2_nomask(cfg: ModelConfig, variant: str, x, qt, v, m_total,
+                        wo, ln2, w1, w3, w2):
+    """Alg. 1 line 8 (+ proj/MLP): bidirectional output O_t = Q_t M_{1:T}."""
+    c = x.shape[0]
+    hh, dh = cfg.n_heads, cfg.head_dim
+    attn = jax.vmap(ka.inter_chunk, in_axes=(1, 0), out_axes=1)(qt, m_total)
+    y = x + attn.reshape(c, hh * dh) @ wo
+    z = y + swiglu(rmsnorm(y, ln2), w1, w3, w2)
+    return z
+
+
+def linear_bwd1(qt, do):
+    """Alg. 4 line 3: dM_t = Q_t^T dO_t.  qt: [C,H,fk], do: [C,H,dh]."""
+    return jax.vmap(ka.bwd_chunk_dstate, in_axes=(1, 1), out_axes=0)(qt, do)
+
+
+def linear_bwd2(qt, kt, v, do, m_prefix, dm_suffix):
+    """Alg. 4 lines 5-12: full chunk gradient from the gathered dM states.
+
+    Returns (dq, dk, dv), each [C, H, *].  Basic variant (g = 1): the
+    convergence-path training of gated variants goes through jax.grad in
+    the train_step artifact instead.
+    """
+    dqi, dki, dvi = jax.vmap(ka.bwd_intra, in_axes=(1, 1, 1, 1),
+                             out_axes=(1, 1, 1))(qt, kt, v, do)
+    # inter parts
+    dq = dqi + jnp.einsum("chd,hfd->chf", do, m_prefix)
+    dk = dki + jnp.einsum("chd,hfd->chf", v, dm_suffix)
+    dv = dvi + jnp.einsum("chf,hfd->chd", kt, dm_suffix)
+    return dq, dk, dv
+
+
+# ====================================================== standard SP phases
+def std_part1(cfg: ModelConfig, x, ln1, wq, wk, wv):
+    """Alg. 7 line 4: per-chunk Q, K, V for a standard-attention layer."""
+    c = x.shape[0]
+    hh, dh = cfg.n_heads, cfg.head_dim
+    hn = rmsnorm(x, ln1)
+    q = (hn @ wq).reshape(c, hh, dh)
+    k = (hn @ wk).reshape(c, hh, dh)
+    v = (hn @ wv).reshape(c, hh, dh)
+    return q, k, v
+
+
+def std_part2(cfg: ModelConfig, x, q, k_all, v_all, q_offset, wo, ln2, w1,
+              w3, w2):
+    """Alg. 7 lines 6-7 (+ proj/MLP): local flash attention over the
+    gathered K, V.  q_offset: i32[1] global position of this chunk."""
+    c = x.shape[0]
+    hh, dh = cfg.n_heads, cfg.head_dim
+    attn = jax.vmap(
+        lambda qh, kh, vh: ks.flash_attention(q_offset, qh, kh, vh),
+        in_axes=(1, 1, 1), out_axes=1)(q, k_all, v_all)
+    y = x + attn.reshape(c, hh * dh) @ wo
+    z = y + swiglu(rmsnorm(y, ln2), w1, w3, w2)
+    return z
+
+
+def mega_attn(cfg: ModelConfig, variant: str, qt, k_all, v_all, q_offset):
+    """Megatron-SP baseline attention on a linear-attention instance WITHOUT
+    the right-product trick (paper Sec. 4.1): full gathered left product.
+    qt: [C,H,fk] (already feature-mapped / decay-folded), k_all: [N,H,fk].
+    """
+    def per_head(qh, kh, vh):
+        return kref.linear_attn_no_trick(qh, kh, vh, q_offset=q_offset[0])
+    return jax.vmap(per_head, in_axes=(1, 1, 1), out_axes=1)(qt, k_all, v_all)
+
+
+def post_attn(cfg: ModelConfig, x, attn, wo, ln2, w1, w3, w2):
+    """Shared epilogue for the baseline schedulers: O-proj + MLP block."""
+    c = x.shape[0]
+    y = x + attn.reshape(c, cfg.n_heads * cfg.head_dim) @ wo
+    z = y + swiglu(rmsnorm(y, ln2), w1, w3, w2)
+    return z
+
+
+def ring_step(q, k, v, m, l, acc, q_offset, k_offset):
+    """Ring Attention per-hop update (vmapped over heads).
+
+    q: [C,H,dh], k/v: [C,H,dh], m/l: [C,H], acc: [C,H,dh]."""
+    def per_head(qh, kh, vh, mh, lh, ah):
+        return ks.ring_attention_step(q_offset, k_offset, qh, kh, vh, mh,
+                                      lh, ah)
+    return jax.vmap(per_head, in_axes=(1, 1, 1, 1, 1, 1),
+                    out_axes=(1, 1, 1))(q, k, v, m, l, acc)
+
+
+def ring_finalize(l, acc):
+    return jax.vmap(ks.ring_attention_finalize, in_axes=(1, 1),
+                    out_axes=1)(l, acc)
+
+
+# ============================================================ embed / head
+def embed(cfg: ModelConfig, tokens, offset, emb, pos):
+    """tokens: i32[C] at global positions offset + [0..C)."""
+    c = tokens.shape[0]
+    idx = offset[0] + jnp.arange(c)
+    return emb[tokens] + pos[idx]
+
+
+def head_logits(cfg: ModelConfig, x, final_ln, emb):
+    """Tied LM head: logits = RMSNorm(x) Emb^T."""
+    return rmsnorm(x, final_ln) @ emb.T
+
+
+def head_loss(cfg: ModelConfig, x, targets, final_ln, emb):
+    """Sum of token cross-entropies for this chunk + token count."""
+    logits = head_logits(cfg, x, final_ln, emb)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    losses = logz - gold
+    return jnp.sum(losses)[None], jnp.asarray(
+        [targets.shape[0]], dtype=jnp.float32)
+
+
+# ================================================= monolithic oracle model
+def _state_combine(a1, m1, a2, m2):
+    """Gated prefix-combine monoid (what rust does after the AllGather)."""
+    return a1 * a2, a2[..., None] * m1 + m2
+
+
+def _linear_layer_full(cfg, variant, lp, prefix, x, masked=True):
+    """Whole-sequence linear layer via the chunked math (oracle).
+
+    x: [N, D]; N must be divisible by chunk_len."""
+    n, d = x.shape
+    c = cfg.chunk_len
+    t = n // c
+    hh, dh, fk = cfg.n_heads, cfg.head_dim, cfg.feat_dim(variant)
+
+    # per-chunk part1 (vmapped over chunks = "parallel across devices")
+    def p1(xc):
+        return linear_part1(cfg, variant, xc, lp[f"{prefix}.ln1"],
+                            lp[f"{prefix}.wq"], lp[f"{prefix}.wk"],
+                            lp[f"{prefix}.wv"],
+                            extra={f"x.{kk}": lp[f"{prefix}.{kk}"]
+                                   for kk in ("wg", "gamma", "beta")
+                                   if f"{prefix}.{kk}" in lp})
+    qt, kt, v, m, a = jax.vmap(p1)(x.reshape(t, c, d))
+
+    if masked:
+        # exclusive gated prefix scan over chunk states (the combine)
+        am, mm = jax.lax.associative_scan(
+            lambda c1, c2: _state_combine(c1[0], c1[1], c2[0], c2[1]),
+            (a, m))
+        zero_m = jnp.zeros_like(mm[:1])
+        m_prefix = jnp.concatenate([zero_m, mm[:-1]], axis=0)
+        def p2(xc, qtc, ktc, vc, mp):
+            return linear_part2(cfg, variant, xc, qtc, ktc, vc, mp,
+                                lp[f"{prefix}.wo"], lp[f"{prefix}.ln2"],
+                                lp[f"{prefix}.w1"], lp[f"{prefix}.w3"],
+                                lp[f"{prefix}.w2"])
+        y = jax.vmap(p2)(x.reshape(t, c, d), qt, kt, v, m_prefix)
+    else:
+        m_total = jnp.sum(m, axis=0)  # Alg. 1 line 7 (basic variant: a = 1)
+        def p2(xc, qtc, vc):
+            return linear_part2_nomask(cfg, variant, xc, qtc, vc, m_total,
+                                       lp[f"{prefix}.wo"],
+                                       lp[f"{prefix}.ln2"],
+                                       lp[f"{prefix}.w1"],
+                                       lp[f"{prefix}.w3"],
+                                       lp[f"{prefix}.w2"])
+        y = jax.vmap(p2)(x.reshape(t, c, d), qt, v)
+    return y.reshape(n, d)
+
+
+def _std_layer_full(cfg, lp, prefix, x, masked=True):
+    n, d = x.shape
+    hh, dh = cfg.n_heads, cfg.head_dim
+    hn = rmsnorm(x, lp[f"{prefix}.ln1"])
+    q = (hn @ lp[f"{prefix}.wq"]).reshape(n, hh, dh)
+    k = (hn @ lp[f"{prefix}.wk"]).reshape(n, hh, dh)
+    v = (hn @ lp[f"{prefix}.wv"]).reshape(n, hh, dh)
+    attn = jax.vmap(lambda qh, kh, vh: kref.softmax_attn(
+        qh, kh, vh, causal=masked), in_axes=(1, 1, 1), out_axes=1)(q, k, v)
+    y = x + attn.reshape(n, hh * dh) @ lp[f"{prefix}.wo"]
+    return y + swiglu(rmsnorm(y, lp[f"{prefix}.ln2"]), lp[f"{prefix}.w1"],
+                      lp[f"{prefix}.w3"], lp[f"{prefix}.w2"])
+
+
+def forward_tokens(cfg: ModelConfig, variant: str, pattern: str, params,
+                   tokens, masked=True):
+    """tokens: i32[N] -> logits [N, vocab].  Single-device oracle that the
+    distributed pipeline is tested against (allclose)."""
+    n = tokens.shape[0]
+    x = params["embed"][tokens] + params["pos"][:n]
+    for i, kind in enumerate(pattern):
+        prefix = f"layer{i}"
+        if kind == "L":
+            x = _linear_layer_full(cfg, variant, params, prefix, x,
+                                   masked=masked)
+        else:
+            x = _std_layer_full(cfg, params, prefix, x, masked=masked)
+    return head_logits(cfg, x, params["final_ln"], params["embed"])
+
+
+def forward_mono(cfg, variant, pattern, flat_params, tokens, masked=True):
+    params = unflatten_params(cfg, variant, pattern, flat_params)
+    return (forward_tokens(cfg, variant, pattern, params, tokens,
+                           masked=masked),)
+
+
+# ============================================================== train step
+def _loss_fn(cfg, variant, pattern, params, tokens, targets, loss_mask,
+             masked):
+    def per_seq(tok, tgt, lm):
+        logits = forward_tokens(cfg, variant, pattern, params, tok,
+                                masked=masked)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tgt[:, None], axis=-1)[:, 0]
+        return jnp.sum((logz - gold) * lm), jnp.sum(lm)
+    losses, counts = jax.vmap(per_seq)(tokens, targets, loss_mask)
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+def train_step(cfg: ModelConfig, variant: str, pattern: str, masked: bool,
+               n_params: int, *args):
+    """Flat-signature Adam train step (the convergence-experiment artifact).
+
+    args = params*P, m*P, v*P, tokens [B,S] i32, targets [B,S] i32,
+           loss_mask [B,S] f32, lr f32[1], step f32[1]
+    returns (new_params*P, new_m*P, new_v*P, loss f32[1])
+    """
+    p = n_params
+    flat = list(args[:p])
+    mom = list(args[p:2 * p])
+    vel = list(args[2 * p:3 * p])
+    tokens, targets, loss_mask, lr, step = args[3 * p:]
+    params = unflatten_params(cfg, variant, pattern, flat)
+
+    loss, grads = jax.value_and_grad(
+        lambda prm: _loss_fn(cfg, variant, pattern, prm, tokens, targets,
+                             loss_mask, masked))(params)
+    specs = param_specs(cfg, variant, pattern)
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.1
+    t = step[0]
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    new_p, new_m, new_v = [], [], []
+    for (name, _, init), pv, mv, vv in zip(specs, flat, mom, vel):
+        g = grads[name]
+        mv2 = b1 * mv + (1 - b1) * g
+        vv2 = b2 * vv + (1 - b2) * jnp.square(g)
+        upd = (mv2 / bc1) / (jnp.sqrt(vv2 / bc2) + eps)
+        decay = 0.0 if init in ("ones", "zeros") else wd  # no wd on norms
+        new_p.append(pv - lr[0] * (upd + decay * pv))
+        new_m.append(mv2)
+        new_v.append(vv2)
+    return tuple(new_p + new_m + new_v + [loss[None]])

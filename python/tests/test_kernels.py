@@ -1,0 +1,236 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (chunk length, key/value dims) and dtypes; fixed
+seeds derive from hypothesis-provided integers so failures reproduce.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import features as kf
+from compile.kernels import lightning as kl
+from compile.kernels import linear_attn as ka
+from compile.kernels import ref as kref
+from compile.kernels import softmax_attn as ks
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+def assert_close(a, b, rtol=2e-4, atol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol,
+                               atol=atol)
+
+
+dims = st.sampled_from([4, 8, 16, 32])
+chunks = st.sampled_from([8, 16, 32, 64, 128])
+seeds = st.integers(0, 2**16)
+
+
+# ------------------------------------------------------------- intra-chunk
+@settings(max_examples=20, deadline=None)
+@given(c=chunks, dk=dims, dv=dims, seed=seeds)
+def test_intra_chunk_vs_ref(c, dk, dv, seed):
+    q = rand(seed, c, dk)
+    k = rand(seed + 1, c, dk)
+    v = rand(seed + 2, c, dv)
+    got = ka.intra_chunk(q, k, v)
+    want = kref.full_linear_attn(q, k, v, masked=True)
+    assert_close(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=chunks, dk=dims, seed=seeds)
+def test_intra_chunk_bf16(c, dk, seed):
+    q = rand(seed, c, dk, dtype=jnp.bfloat16)
+    k = rand(seed + 1, c, dk, dtype=jnp.bfloat16)
+    v = rand(seed + 2, c, dk, dtype=jnp.bfloat16)
+    got = ka.intra_chunk(q, k, v).astype(jnp.float32)
+    want = kref.full_linear_attn(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), masked=True)
+    assert_close(got, want, rtol=0.1, atol=0.5)
+
+
+def test_intra_chunk_block_sizes():
+    """Output is independent of the Q row-block tiling."""
+    q, k, v = rand(0, 64, 16), rand(1, 64, 16), rand(2, 64, 8)
+    o64 = ka.intra_chunk(q, k, v, block_q=64)
+    o16 = ka.intra_chunk(q, k, v, block_q=16)
+    o8 = ka.intra_chunk(q, k, v, block_q=8)
+    assert_close(o64, o16)
+    assert_close(o64, o8)
+
+
+# ------------------------------------------------------------- chunk state
+@settings(max_examples=20, deadline=None)
+@given(c=chunks, dk=dims, dv=dims, seed=seeds)
+def test_chunk_state_vs_ref(c, dk, dv, seed):
+    k = rand(seed, c, dk)
+    v = rand(seed + 1, c, dv)
+    assert_close(ka.chunk_state(k, v), k.T @ v)
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=chunks, dk=dims, seed=seeds)
+def test_inter_chunk_vs_ref(c, dk, seed):
+    q = rand(seed, c, dk)
+    m = rand(seed + 1, dk, dk)
+    assert_close(ka.inter_chunk(q, m), q @ m)
+
+
+# -------------------------------------------------------------- fused path
+@settings(max_examples=20, deadline=None)
+@given(c=chunks, dk=dims, dv=dims, seed=seeds)
+def test_fused_equals_intra_plus_inter(c, dk, dv, seed):
+    q = rand(seed, c, dk)
+    k = rand(seed + 1, c, dk)
+    v = rand(seed + 2, c, dv)
+    m = rand(seed + 3, dk, dv)
+    fused = ka.fused_chunk_output(q, k, v, m)
+    split = ka.intra_chunk(q, k, v) + ka.inter_chunk(q, m)
+    assert_close(fused, split)
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=chunks, dk=dims, dv=dims, seed=seeds)
+def test_lightning_equals_fused(c, dk, dv, seed):
+    """Lightning Attention is an IO-aware tiling of the same math."""
+    q = rand(seed, c, dk)
+    k = rand(seed + 1, c, dk)
+    v = rand(seed + 2, c, dv)
+    m = rand(seed + 3, dk, dv)
+    assert_close(kl.lightning_chunk_output(q, k, v, m),
+                 ka.fused_chunk_output(q, k, v, m))
+
+
+def test_fused_matches_recurrence_with_carry():
+    """Chunk with carry-in state == token recurrence started from M0."""
+    c, dk, dv = 32, 8, 8
+    q, k, v = rand(0, c, dk), rand(1, c, dk), rand(2, c, dv)
+    m0 = rand(3, dk, dv)
+    got = ka.fused_chunk_output(q, k, v, m0)
+    want, _ = kref.recurrent_linear_attn(q, k, v, m0=m0)
+    assert_close(got, want)
+
+
+# ------------------------------------------------------------ backward ops
+@settings(max_examples=10, deadline=None)
+@given(c=st.sampled_from([16, 32]), d=dims, seed=seeds)
+def test_custom_vjp_matches_autodiff_of_ref(c, d, seed):
+    """grad through the Pallas fused kernel (Alg. 4 custom VJP) must equal
+    grad through the pure-jnp reference."""
+    q, k, v = rand(seed, c, d), rand(seed + 1, c, d), rand(seed + 2, c, d)
+    m = rand(seed + 3, d, d)
+
+    def loss_pallas(q, k, v, m):
+        return jnp.sum(jnp.tanh(ka.fused_chunk_output(q, k, v, m)))
+
+    def loss_ref(q, k, v, m):
+        o = kref.full_linear_attn(q, k, v, masked=True) + q @ m
+        return jnp.sum(jnp.tanh(o))
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2, 3))(q, k, v, m)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(q, k, v, m)
+    for a, b in zip(gp, gr):
+        assert_close(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_bwd_chunk_dstate():
+    q, do = rand(0, 32, 8), rand(1, 32, 8)
+    assert_close(ka.bwd_chunk_dstate(q, do), q.T @ do)
+
+
+def test_lasp2_backward_oracle_matches_jax_grad():
+    """Alg. 4 (chunked SP backward) == jax.grad of full linear attention."""
+    n, d, t = 64, 8, 4
+    q, k, v = rand(0, n, d), rand(1, n, d), rand(2, n, d)
+    do = rand(3, n, d)
+
+    def fwd(q, k, v):
+        return jnp.vdot(kref.full_linear_attn(q, k, v, masked=True), do)
+
+    dq_ref, dk_ref, dv_ref = jax.grad(fwd, argnums=(0, 1, 2))(q, k, v)
+    dq, dk, dv = kref.lasp2_masked_backward(q, k, v, do, num_chunks=t)
+    assert_close(dq, dq_ref, rtol=1e-3, atol=1e-3)
+    assert_close(dk, dk_ref, rtol=1e-3, atol=1e-3)
+    assert_close(dv, dv_ref, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------- softmax
+@settings(max_examples=15, deadline=None)
+@given(c=st.sampled_from([16, 32, 64]), d=dims,
+       t=st.sampled_from([1, 2, 4]), seed=seeds)
+def test_flash_vs_softmax_ref(c, d, t, seed):
+    """Blocked online-softmax kernel vs reference, incl. chunk offsets."""
+    nk = t * c
+    k = rand(seed + 1, nk, d)
+    v = rand(seed + 2, nk, d)
+    for ti in range(t):
+        q = rand(seed + 10 + ti, c, d)
+        off = jnp.array([ti * c], dtype=jnp.int32)
+        got = ks.flash_attention(off, q, k, v)
+        want = kref.softmax_attn(q, k, v, causal=True, q_offset=ti * c)
+        assert_close(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_flash_noncausal():
+    q, k, v = rand(0, 32, 16), rand(1, 64, 16), rand(2, 64, 16)
+    got = ks.flash_attention(jnp.array([0], jnp.int32), q, k, v,
+                             causal=False)
+    want = kref.softmax_attn(q, k, v, causal=False)
+    assert_close(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.sampled_from([16, 32]), d=dims, w=st.sampled_from([2, 4]),
+       seed=seeds)
+def test_ring_attention_chain_vs_ref(c, d, w, seed):
+    """W ring hops (what the rust Ring Attention scheduler executes) must
+    reproduce exact softmax attention over the full sequence."""
+    n = w * c
+    k = rand(seed + 1, n, d)
+    v = rand(seed + 2, n, d)
+    for ti in range(w):
+        q = rand(seed + 10 + ti, c, d)
+        m, l, acc = ks.ring_attention_init(c, d)
+        qoff = jnp.array([ti * c], jnp.int32)
+        for hop in range(w):
+            koff = jnp.array([hop * c], jnp.int32)
+            m, l, acc = ks.ring_attention_step(
+                qoff, koff, q, k[hop * c:(hop + 1) * c],
+                v[hop * c:(hop + 1) * c], m, l, acc)
+        got = ks.ring_attention_finalize(l, acc)
+        want = kref.softmax_attn(q, k, v, causal=True, q_offset=ti * c)
+        assert_close(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------- feature maps
+def test_based_feature_dim():
+    x = rand(0, 10, 4)
+    assert kf.phi_based(x).shape == (10, kf.based_feature_dim(4))
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.sampled_from([2, 4, 8]), seed=seeds)
+def test_based_taylor_identity(d, seed):
+    """phi(q).phi(k) == 1 + q.k + (q.k)^2/2 — the 2nd-order Taylor of exp."""
+    q = rand(seed, d)
+    k = rand(seed + 1, d)
+    got = jnp.dot(kf.phi_based(q), kf.phi_based(k))
+    s = jnp.dot(q, k)
+    want = 1.0 + s + 0.5 * s * s
+    assert_close(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rebased_feature_map():
+    x = rand(0, 6, 4)
+    gamma = jnp.ones(4) * 2.0
+    beta = jnp.ones(4) * 0.5
+    assert_close(kf.phi_rebased(x, gamma, beta), jnp.square(2.0 * x + 0.5))

@@ -1,0 +1,284 @@
+"""L2 correctness: variant math, phase composition, SP identities, training.
+
+The key identities:
+  * gated chunked formulation == token-by-token recurrence (every variant);
+  * part1/part2 phases composed with the rust-side combine rule == the
+    monolithic forward (this is exactly what the rust integration test does
+    against the real artifacts — here we prove the math end-to-end in jnp);
+  * train_step reduces the loss on a learnable synthetic task.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import features as kf
+from compile.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.PRESETS["tiny"]
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+def assert_close(a, b, rtol=2e-4, atol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol,
+                               atol=atol)
+
+
+# ------------------------------------------------- variant math identities
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([16, 32, 64]), d=st.sampled_from([4, 8]),
+       t=st.sampled_from([2, 4]), seed=st.integers(0, 2**16))
+def test_chunked_equals_recurrent_basic(n, d, t, seed):
+    q, k, v = rand(seed, n, d), rand(seed + 1, n, d), rand(seed + 2, n, d)
+    g = jnp.ones((n, d))
+    got = kref.chunked_linear_attn(q, k, v, g, num_chunks=t)
+    want, _ = kref.recurrent_linear_attn(q, k, v)
+    assert_close(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([16, 32, 64]), d=st.sampled_from([4, 8]),
+       t=st.sampled_from([2, 4]), lam=st.floats(0.9, 0.999),
+       seed=st.integers(0, 2**16))
+def test_chunked_equals_recurrent_retention(n, d, t, lam, seed):
+    """Retention = constant scalar decay gates."""
+    q, k, v = rand(seed, n, d), rand(seed + 1, n, d), rand(seed + 2, n, d)
+    g = jnp.full((n, d), lam, dtype=jnp.float32)
+    got = kref.chunked_linear_attn(q, k, v, g, num_chunks=t)
+    want, _ = kref.recurrent_linear_attn(q, k, v, g=g)
+    assert_close(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([32, 64]), d=st.sampled_from([4, 8]),
+       t=st.sampled_from([2, 4]), seed=st.integers(0, 2**16))
+def test_chunked_equals_recurrent_gla(n, d, t, seed):
+    """GLA = data-dependent per-dim gates (floored, as in the model)."""
+    q, k, v = rand(seed, n, d), rand(seed + 1, n, d), rand(seed + 2, n, d)
+    raw = rand(seed + 3, n, d)
+    g = M.GATE_FLOOR + (1 - M.GATE_FLOOR) * jax.nn.sigmoid(raw)
+    got = kref.chunked_linear_attn(q, k, v, g, num_chunks=t)
+    want, _ = kref.recurrent_linear_attn(q, k, v, g=g)
+    assert_close(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_unmasked_chunked_is_allgather_sum():
+    """Alg. 1: O = Q * Sum(M_t) — bidirectional case."""
+    n, d, t = 64, 8, 4
+    q, k, v = rand(0, n, d), rand(1, n, d), rand(2, n, d)
+    got = kref.unmasked_chunked_linear_attn(q, k, v, num_chunks=t)
+    want = kref.full_linear_attn(q, k, v, masked=False)
+    assert_close(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**16))
+def test_chunk_count_invariance(t, seed):
+    """LASP-2's result must not depend on the SP world size."""
+    n, d = 64, 8
+    q, k, v = rand(seed, n, d), rand(seed + 1, n, d), rand(seed + 2, n, d)
+    g = jnp.ones((n, d))
+    got = kref.chunked_linear_attn(q, k, v, g, num_chunks=t)
+    want = kref.chunked_linear_attn(q, k, v, g, num_chunks=1)
+    assert_close(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------- phase composition == mono
+def make_params(variant, pattern, seed=0):
+    flat = M.init_params_fn(CFG, variant, pattern,
+                            jnp.array([seed], jnp.int32))
+    return flat, M.unflatten_params(CFG, variant, pattern, flat)
+
+
+def combine_states(a_list, m_list):
+    """The rust coordinator's gated prefix combine after the AllGather."""
+    t = len(a_list)
+    prefixes = []
+    a_acc = jnp.ones_like(a_list[0])
+    m_acc = jnp.zeros_like(m_list[0])
+    for i in range(t):
+        prefixes.append(m_acc)
+        m_acc = a_list[i][..., None] * m_acc + m_list[i]
+        a_acc = a_acc * a_list[i]
+    return prefixes, m_acc
+
+
+@pytest.mark.parametrize("variant", M.LINEAR_VARIANTS)
+def test_phases_compose_to_mono_forward(variant):
+    """Drive part1 -> (simulated AllGather+combine) -> part2 per chunk and
+    compare with the monolithic forward — the LASP-2 workflow in python."""
+    pattern = "LL"
+    flat, params = make_params(variant, pattern, seed=3)
+    n = CFG.chunk_len * 4
+    tokens = jax.random.randint(jax.random.PRNGKey(9), (n,), 0, CFG.vocab)
+
+    want = M.forward_tokens(CFG, variant, pattern, params, tokens)
+
+    # distributed-style execution
+    c = CFG.chunk_len
+    t = n // c
+    x = params["embed"][tokens] + params["pos"][:n]
+    xc = [x[i * c:(i + 1) * c] for i in range(t)]
+    for li, kind in enumerate(pattern):
+        p = f"layer{li}"
+        extra = {f"x.{kk}": params[f"{p}.{kk}"]
+                 for kk in ("wg", "gamma", "beta") if f"{p}.{kk}" in params}
+        outs = [M.linear_part1(CFG, variant, xc[i], params[f"{p}.ln1"],
+                               params[f"{p}.wq"], params[f"{p}.wk"],
+                               params[f"{p}.wv"], extra=extra)
+                for i in range(t)]
+        a_list = [o[4] for o in outs]
+        m_list = [o[3] for o in outs]
+        prefixes, _ = combine_states(a_list, m_list)
+        xc = [M.linear_part2(CFG, variant, xc[i], outs[i][0], outs[i][1],
+                             outs[i][2], prefixes[i], params[f"{p}.wo"],
+                             params[f"{p}.ln2"], params[f"{p}.w1"],
+                             params[f"{p}.w3"], params[f"{p}.w2"])
+              for i in range(t)]
+    h = jnp.concatenate(xc, axis=0)
+    got = M.head_logits(CFG, h, params["final_ln"], params["embed"])
+    assert_close(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_std_phases_compose_to_mono_forward():
+    """Alg. 7 phases (standard attention hybrid layer) == mono forward."""
+    pattern = "NN"
+    flat, params = make_params("basic", pattern, seed=5)
+    n = CFG.chunk_len * 4
+    tokens = jax.random.randint(jax.random.PRNGKey(11), (n,), 0, CFG.vocab)
+    want = M.forward_tokens(CFG, "basic", pattern, params, tokens)
+
+    c = CFG.chunk_len
+    t = n // c
+    x = params["embed"][tokens] + params["pos"][:n]
+    xc = [x[i * c:(i + 1) * c] for i in range(t)]
+    for li in range(len(pattern)):
+        p = f"layer{li}"
+        qkv = [M.std_part1(CFG, xc[i], params[f"{p}.ln1"], params[f"{p}.wq"],
+                           params[f"{p}.wk"], params[f"{p}.wv"])
+               for i in range(t)]
+        k_all = jnp.concatenate([o[1] for o in qkv], axis=0)  # AllGather K
+        v_all = jnp.concatenate([o[2] for o in qkv], axis=0)  # AllGather V
+        xc = [M.std_part2(CFG, xc[i], qkv[i][0], k_all, v_all,
+                          jnp.array([i * c], jnp.int32), params[f"{p}.wo"],
+                          params[f"{p}.ln2"], params[f"{p}.w1"],
+                          params[f"{p}.w3"], params[f"{p}.w2"])
+              for i in range(t)]
+    h = jnp.concatenate(xc, axis=0)
+    got = M.head_logits(CFG, h, params["final_ln"], params["embed"])
+    assert_close(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_bwd_phases_match_grad():
+    """Alg. 3/4 phase functions composed == jax.grad of full linear attn."""
+    c, hh, dh, t = CFG.chunk_len, CFG.n_heads, CFG.head_dim, 4
+    n = c * t
+    q = rand(0, n, hh, dh)
+    k = rand(1, n, hh, dh)
+    v = rand(2, n, hh, dh)
+    do = rand(3, n, hh, dh)
+
+    def fwd(q, k, v):
+        def per_head(qh, kh, vh, doh):
+            return jnp.vdot(kref.full_linear_attn(qh, kh, vh, masked=True),
+                            doh)
+        return jnp.sum(jax.vmap(per_head, in_axes=(1, 1, 1, 1))(q, k, v,
+                                                                do))
+
+    dq_ref, dk_ref, dv_ref = jax.grad(fwd, argnums=(0, 1, 2))(q, k, v)
+
+    qc = q.reshape(t, c, hh, dh)
+    kc = k.reshape(t, c, hh, dh)
+    vc = v.reshape(t, c, hh, dh)
+    doc = do.reshape(t, c, hh, dh)
+    # forward states + prefix (as the rust forward pass caches them)
+    m_t = [jnp.einsum("chd,che->hde", kc[i], vc[i]) for i in range(t)]
+    m_prefix = [jnp.zeros_like(m_t[0])]
+    for i in range(t - 1):
+        m_prefix.append(m_prefix[-1] + m_t[i])
+    # bwd1 on every device, then AllGather + suffix sums
+    dm = [M.linear_bwd1(qc[i], doc[i]) for i in range(t)]
+    dm_suffix = [jnp.zeros_like(dm[0]) for _ in range(t)]
+    acc = jnp.zeros_like(dm[0])
+    for i in reversed(range(t - 1)):
+        acc = acc + dm[i + 1]
+        dm_suffix[i] = acc
+    for i in range(t):
+        dq, dk, dv = M.linear_bwd2(qc[i], kc[i], vc[i], doc[i],
+                                   m_prefix[i], dm_suffix[i])
+        assert_close(dq, dq_ref.reshape(t, c, hh, dh)[i], rtol=1e-3,
+                     atol=1e-3)
+        assert_close(dk, dk_ref.reshape(t, c, hh, dh)[i], rtol=1e-3,
+                     atol=1e-3)
+        assert_close(dv, dv_ref.reshape(t, c, hh, dh)[i], rtol=1e-3,
+                     atol=1e-3)
+
+
+# ------------------------------------------------------------- params/init
+@pytest.mark.parametrize("variant", ["basic", "gla", "rebased"])
+def test_param_specs_roundtrip(variant):
+    pattern = M.hybrid_pattern(CFG.n_layers, "1/4")
+    specs = M.param_specs(CFG, variant, pattern)
+    names = [s[0] for s in specs]
+    assert len(names) == len(set(names))
+    flat = M.init_params_fn(CFG, variant, pattern,
+                            jnp.array([0], jnp.int32))
+    assert len(flat) == len(specs)
+    for (nm, shape, _), arr in zip(specs, flat):
+        assert arr.shape == shape, nm
+
+
+def test_hybrid_patterns():
+    assert M.hybrid_pattern(16, "0") == "L" * 16
+    assert M.hybrid_pattern(16, "1/4") == "LLLN" * 4
+    assert M.hybrid_pattern(16, "1/2") == "LN" * 8
+    assert M.hybrid_pattern(16, "1/8") == "LLLLLLLN" * 2
+    assert M.hybrid_pattern(16, "all") == "N" * 16
+    assert M.hybrid_pattern(2, "1/4") == "LL"
+
+
+# ---------------------------------------------------------------- training
+@pytest.mark.parametrize("variant,pattern_ratio,masked", [
+    ("basic", "0", True),
+    ("gla", "0", True),
+    ("basic", "1/4", True),
+    ("basic", "0", False),
+])
+def test_train_step_reduces_loss(variant, pattern_ratio, masked):
+    """A few Adam steps on a trivially learnable task must reduce loss."""
+    pattern = M.hybrid_pattern(CFG.n_layers, pattern_ratio)
+    specs = M.param_specs(CFG, variant, pattern)
+    np_ = len(specs)
+    flat = list(M.init_params_fn(CFG, variant, pattern,
+                                 jnp.array([1], jnp.int32)))
+    mom = [jnp.zeros_like(p) for p in flat]
+    vel = [jnp.zeros_like(p) for p in flat]
+    bs, sl = CFG.train_batch, CFG.train_seq
+    # learnable task: constant repeating token pattern
+    base = jnp.arange(sl) % 7
+    tokens = jnp.broadcast_to(base, (bs, sl)).astype(jnp.int32)
+    targets = jnp.broadcast_to((jnp.arange(sl) + 1) % 7, (bs, sl)).astype(
+        jnp.int32)
+    loss_mask = jnp.ones((bs, sl), jnp.float32)
+    lr = jnp.array([3e-3], jnp.float32)
+
+    step_fn = jax.jit(lambda *a: M.train_step(CFG, variant, pattern,
+                                              masked, np_, *a))
+    losses = []
+    for it in range(8):
+        out = step_fn(*flat, *mom, *vel, tokens, targets, loss_mask, lr,
+                      jnp.array([it + 1.0], jnp.float32))
+        flat = list(out[:np_])
+        mom = list(out[np_:2 * np_])
+        vel = list(out[2 * np_:3 * np_])
+        losses.append(float(out[-1][0]))
+    assert losses[-1] < losses[0] * 0.9, losses
+    assert np.isfinite(losses).all()

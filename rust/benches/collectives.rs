@@ -1,0 +1,59 @@
+//! Bench: communicator micro-benchmarks — AllGather vs P2P-ring latency
+//! across world sizes and payload sizes.  This is the microscopic version
+//! of the paper's §3.3 argument: one collective launch beats many
+//! dependent P2P launches.
+//!
+//! Run via `cargo bench --bench collectives`.
+
+use std::time::Instant;
+
+use lasp2::comm::World;
+use lasp2::tensor::Tensor;
+
+fn bench_case(w: usize, elems: usize, iters: usize) -> (f64, f64) {
+    // AllGather of `elems` f32 per rank
+    let world = World::new(w);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        world.run(|c| {
+            c.all_gather(vec![Tensor::zeros(&[elems])]);
+        });
+    }
+    let ag = t0.elapsed().as_secs_f64() / iters as f64;
+
+    // sequential ring of W-1 hops carrying the same payload (LASP-1 style)
+    let world = World::new(w);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        world.run(|c| {
+            let r = c.rank();
+            let m = if r == 0 {
+                Tensor::zeros(&[elems])
+            } else {
+                c.recv(r - 1).pop().unwrap()
+            };
+            if r + 1 < c.size() {
+                c.send(r + 1, vec![m]);
+            }
+        });
+    }
+    let ring = t0.elapsed().as_secs_f64() / iters as f64;
+    (ag, ring)
+}
+
+fn main() {
+    println!("| world | payload KB | allgather us | seq-ring us | ring/ag |");
+    println!("|---|---|---|---|---|");
+    for w in [2usize, 4, 8] {
+        for elems in [1024usize, 65536, 1048576] {
+            let (ag, ring) = bench_case(w, elems, 15);
+            println!(
+                "| {w} | {} | {:.0} | {:.0} | {:.2}x |",
+                elems * 4 / 1024,
+                ag * 1e6,
+                ring * 1e6,
+                ring / ag
+            );
+        }
+    }
+}

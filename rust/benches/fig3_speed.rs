@@ -1,0 +1,79 @@
+//! Bench: Fig. 3 — speed comparison across SP schedulers.
+//!
+//! Part 1 (SIM): the calibrated cluster model at the paper's scale
+//! (64 GPUs, 128K..2048K) — regenerates the figure's series.
+//! Part 2 (REAL): the actual distributed pipeline over worker threads +
+//! PJRT artifacts at tiny scale, median-of-k wall time per scheduler.
+//!
+//! Run via `cargo bench --bench fig3_speed` (harness = false).
+
+use std::time::Instant;
+
+use lasp2::bench;
+use lasp2::comm::World;
+use lasp2::config::{Pattern, RunConfig, Scheduler, Variant};
+use lasp2::coordinator::{forward_distributed, Params};
+use lasp2::runtime::Engine;
+use lasp2::sim::CostModel;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# Fig. 3 (sim, 64 GPUs, Linear-Llama3-1B)\n");
+    println!("{}", bench::fig3_speed(&CostModel::default()).to_markdown());
+
+    let preset = std::env::var("LASP2_PRESET").unwrap_or_else(|_| "tiny".into());
+    let Ok(engine) = Engine::load_preset(&preset) else {
+        println!("(artifacts for {preset} missing; sim-only run)");
+        return Ok(());
+    };
+    let cfg = engine.model.clone();
+    let world_size = 4;
+    let pattern = Pattern("L".repeat(cfg.n_layers));
+    let params = Params::randn(&cfg, Variant::Basic, &pattern, 7);
+    let n = world_size * cfg.chunk_len;
+    let tokens: Vec<i32> = (0..n as i32).map(|i| i % cfg.vocab as i32).collect();
+
+    println!("# Fig. 3 companion (REAL exec, preset={preset}, W={world_size}, N={n})\n");
+    println!("| scheduler | median ms/fwd | tokens/s | collectives | p2p |");
+    println!("|---|---|---|---|---|");
+    for sched in [
+        Scheduler::MegatronSp,
+        Scheduler::RingAttention,
+        Scheduler::Lasp1,
+        Scheduler::Lasp2,
+        Scheduler::Lasp2Overlap,
+    ] {
+        let run = RunConfig {
+            world: world_size,
+            scheduler: sched,
+            variant: Variant::Basic,
+            pattern: pattern.clone(),
+            gather_splits: 1,
+            seed: 0,
+        };
+        let world = World::new(world_size);
+        forward_distributed(&engine, &world, &run, &params, &tokens, true)?; // warmup
+        world.reset_counters();
+        let mut times = Vec::new();
+        for _ in 0..7 {
+            let t0 = Instant::now();
+            forward_distributed(&engine, &world, &run, &params, &tokens, true)?;
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let med = median(times);
+        let snap = world.counters();
+        println!(
+            "| {} | {:.2} | {:.0} | {} | {} |",
+            sched.name(),
+            med * 1e3,
+            n as f64 / med,
+            snap.collective_ops / 7,
+            snap.p2p_ops / 7
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Bench: per-artifact execution latency of the LASP-2 phase kernels —
+//! the real-exec hot-path profile (feeds the §Perf iteration log).
+//!
+//! Run via `cargo bench --bench kernel_phases`.
+
+use std::time::Instant;
+
+use lasp2::config::Variant;
+use lasp2::runtime::{Engine, Value};
+use lasp2::tensor::Tensor;
+
+fn median_run(
+    exe: &lasp2::runtime::Executable,
+    ins: &[Value],
+    iters: usize,
+) -> f64 {
+    let mut ts = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        exe.run(ins).unwrap();
+        ts.push(t0.elapsed().as_secs_f64());
+    }
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+fn inputs_for(meta: &lasp2::runtime::ArtifactMeta) -> Vec<Value> {
+    meta.inputs
+        .iter()
+        .map(|t| match t.dtype {
+            lasp2::runtime::DType::F32 => {
+                Value::F32(Tensor::randn(&t.shape, 7).scale(0.05))
+            }
+            lasp2::runtime::DType::I32 => {
+                // token-ish ids stay small & non-negative
+                Value::I32(vec![1; t.elems()], t.shape.clone())
+            }
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("LASP2_PRESET").unwrap_or_else(|_| "tiny".into());
+    let engine = Engine::load_preset(&preset)?;
+    let mut names: Vec<String> = vec![
+        "embed".into(),
+        "head".into(),
+        "s_part1".into(),
+        "post_attn".into(),
+        "ring_step".into(),
+        "ring_linear_step".into(),
+        "l_bwd1_basic".into(),
+        "l_bwd2_basic".into(),
+    ];
+    for v in Variant::linear_variants() {
+        names.push(format!("l_part1_{}", v.name()));
+        names.push(format!("l_part2_{}", v.name()));
+        names.push(format!("l_intra_{}", v.name()));
+    }
+    println!("# per-artifact latency (preset={preset}, median of 9)\n");
+    println!("| artifact | median us/call |");
+    println!("|---|---|");
+    for name in names {
+        if !engine.has_artifact(&name) {
+            continue;
+        }
+        let exe = engine.artifact(&name)?;
+        let ins = inputs_for(&exe.meta);
+        exe.run(&ins)?; // warmup
+        let med = median_run(&exe, &ins, 9);
+        println!("| {name} | {:.0} |", med * 1e6);
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Bench: Table 5 — throughput vs AllGather split size.
+//!
+//! SIM at the paper's scale (64 GPUs, 1024K) plus REAL-EXEC timing of the
+//! split gathers through the instrumented communicator.
+//!
+//! Run via `cargo bench --bench table5_splits`.
+
+use std::time::Instant;
+
+use lasp2::bench;
+use lasp2::comm::World;
+use lasp2::sim::CostModel;
+use lasp2::tensor::Tensor;
+
+fn main() {
+    println!("# Table 5 (sim, 64 GPUs, 1024K, state [1,16,2048,2048]-scaled)\n");
+    println!("{}", bench::table5_splits(&CostModel::default()).to_markdown());
+
+    // REAL: time W=4 split gathers of a Linear-Llama3-1B-shaped state
+    // slice ([16, 256, 256] f32 = 4 MB) over the in-memory communicator.
+    let w = 4;
+    let iters = 20;
+    println!("# Table 5 companion (REAL in-memory collectives, W={w}, 4MB state)\n");
+    println!("| splits | median us/gather | collectives/iter |");
+    println!("|---|---|---|");
+    for splits in [1usize, 4, 16, 64] {
+        let world = World::new(w);
+        let times: Vec<f64> = (0..iters)
+            .map(|_| {
+                let t0 = Instant::now();
+                world.run(|c| {
+                    c.all_gather_split(
+                        vec![Tensor::zeros(&[16, 256, 256])],
+                        splits,
+                    );
+                });
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        let mut ts = times.clone();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = ts[ts.len() / 2];
+        let coll = world.counters().collective_ops / iters as u64;
+        println!("| {splits} | {:.0} | {coll} |", med * 1e6);
+    }
+}

@@ -1,0 +1,339 @@
+//! Model/run configuration: presets mirroring `python/compile/model.py`,
+//! hybrid-layer patterns, SP scheduler selection, and a tiny flat-text
+//! config parser (`key = value` lines) for run files.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Linear-attention module variants (paper Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Basic,
+    Lightning,
+    Retention,
+    Gla,
+    Based,
+    Rebased,
+    /// standard softmax attention (the Llama3 baseline / hybrid "N" layers)
+    Softmax,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Basic => "basic",
+            Variant::Lightning => "lightning",
+            Variant::Retention => "retention",
+            Variant::Gla => "gla",
+            Variant::Based => "based",
+            Variant::Rebased => "rebased",
+            Variant::Softmax => "softmax",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "basic" => Variant::Basic,
+            "lightning" => Variant::Lightning,
+            "retention" => Variant::Retention,
+            "gla" => Variant::Gla,
+            "based" => Variant::Based,
+            "rebased" => Variant::Rebased,
+            "softmax" | "standard" => Variant::Softmax,
+            _ => bail!("unknown variant {s}"),
+        })
+    }
+
+    pub fn linear_variants() -> &'static [Variant] {
+        &[
+            Variant::Basic,
+            Variant::Lightning,
+            Variant::Retention,
+            Variant::Gla,
+            Variant::Based,
+            Variant::Rebased,
+        ]
+    }
+
+    /// Variants whose decay carry `a` is not identically 1.
+    pub fn has_decay(&self) -> bool {
+        matches!(self, Variant::Retention | Variant::Gla)
+    }
+}
+
+impl fmt::Display for Variant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Sequence-parallelism scheduler (paper Fig. 3 comparison set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheduler {
+    /// this paper: single AllGather on memory states (Alg. 1/2)
+    Lasp2,
+    /// LASP-2 with the AllGather overlapped with intra-chunk compute
+    Lasp2Overlap,
+    /// LASP-1 (Sun et al., 2024a): ring-style P2P on memory states
+    Lasp1,
+    /// Ring Attention (Liu et al., 2023): ring over K/V chunks
+    RingAttention,
+    /// Megatron-SP style: gather full K/V, compute locally (no trick)
+    MegatronSp,
+}
+
+impl Scheduler {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheduler::Lasp2 => "lasp2",
+            Scheduler::Lasp2Overlap => "lasp2-overlap",
+            Scheduler::Lasp1 => "lasp1",
+            Scheduler::RingAttention => "ring",
+            Scheduler::MegatronSp => "megatron-sp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lasp2" => Scheduler::Lasp2,
+            "lasp2-overlap" | "lasp2_overlap" => Scheduler::Lasp2Overlap,
+            "lasp1" => Scheduler::Lasp1,
+            "ring" | "ring-attention" => Scheduler::RingAttention,
+            "megatron-sp" | "megatron" => Scheduler::MegatronSp,
+            _ => bail!("unknown scheduler {s}"),
+        })
+    }
+
+    pub fn all() -> &'static [Scheduler] {
+        &[
+            Scheduler::Lasp2,
+            Scheduler::Lasp2Overlap,
+            Scheduler::Lasp1,
+            Scheduler::RingAttention,
+            Scheduler::MegatronSp,
+        ]
+    }
+}
+
+impl fmt::Display for Scheduler {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Hybrid layer pattern: which layers are linear (L) vs standard (N).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pattern(pub String);
+
+impl Pattern {
+    /// Mirrors `model.hybrid_pattern`: ratio in {0, 1/8, 1/4, 1/2, all}.
+    pub fn from_ratio(n_layers: usize, ratio: &str) -> Result<Pattern> {
+        let unit = match ratio {
+            "0" => "L",
+            "1/8" => "LLLLLLLN",
+            "1/4" => "LLLN",
+            "1/2" => "LN",
+            "all" => "N",
+            _ => bail!("unknown hybrid ratio {ratio}"),
+        };
+        let s: String = unit.chars().cycle().take(n_layers).collect();
+        Ok(Pattern(s))
+    }
+
+    pub fn tag(ratio: &str) -> &'static str {
+        match ratio {
+            "0" => "pure",
+            "1/8" => "h8",
+            "1/4" => "h4",
+            "1/2" => "h2",
+            "all" => "std",
+            _ => "custom",
+        }
+    }
+
+    pub fn layers(&self) -> impl Iterator<Item = (usize, bool)> + '_ {
+        // (layer index, is_linear)
+        self.0.chars().enumerate().map(|(i, c)| (i, c == 'L'))
+    }
+
+    pub fn n_linear(&self) -> usize {
+        self.0.chars().filter(|c| *c == 'L').count()
+    }
+
+    pub fn n_std(&self) -> usize {
+        self.0.len() - self.n_linear()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+/// Model-shape configuration, parsed from the artifact manifest so that the
+/// rust side can never drift from what was compiled.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub preset: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub chunk_len: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub qk_reduced: usize,
+    pub train_batch: usize,
+    pub train_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn from_fields(preset: &str, f: &HashMap<String, usize>) -> Result<Self> {
+        let get = |k: &str| -> Result<usize> {
+            f.get(k).copied().with_context(|| format!("manifest missing field {k}"))
+        };
+        Ok(ModelConfig {
+            preset: preset.to_string(),
+            d_model: get("d_model")?,
+            n_heads: get("n_heads")?,
+            n_layers: get("n_layers")?,
+            vocab: get("vocab")?,
+            chunk_len: get("chunk_len")?,
+            max_seq: get("max_seq")?,
+            head_dim: get("head_dim")?,
+            ffn_dim: get("ffn_dim")?,
+            qk_reduced: get("qk_reduced")?,
+            train_batch: get("train_batch")?,
+            train_seq: get("train_seq")?,
+        })
+    }
+
+    /// Feature (memory-state key) dim per variant — mirrors python.
+    pub fn feat_dim(&self, v: Variant) -> usize {
+        match v {
+            Variant::Based => 1 + self.qk_reduced + self.qk_reduced * self.qk_reduced,
+            Variant::Rebased => self.qk_reduced,
+            _ => self.head_dim,
+        }
+    }
+
+    /// Per-layer memory-state element count H * fk * dh (the AllGather
+    /// payload size of LASP-2, independent of sequence length — §3.4).
+    pub fn state_elems(&self, v: Variant) -> usize {
+        self.n_heads * self.feat_dim(v) * self.head_dim
+    }
+}
+
+/// Runtime options for a distributed run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub world: usize,
+    pub scheduler: Scheduler,
+    pub variant: Variant,
+    pub pattern: Pattern,
+    /// AllGather split count (Table 5 ablation); 1 = one collective.
+    pub gather_splits: usize,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            world: 4,
+            scheduler: Scheduler::Lasp2,
+            variant: Variant::Basic,
+            pattern: Pattern("LL".into()),
+            gather_splits: 1,
+            seed: 0,
+        }
+    }
+}
+
+/// Tiny `key = value` / `key value` flat config file parser (std-only).
+pub fn parse_kv_file(path: &Path) -> Result<HashMap<String, String>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(parse_kv(&text))
+}
+
+pub fn parse_kv(text: &str) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = match line.split_once('=') {
+            Some((k, v)) => (k, v),
+            None => match line.split_once(' ') {
+                Some((k, v)) => (k, v),
+                None => continue,
+            },
+        };
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_ratios() {
+        assert_eq!(Pattern::from_ratio(16, "1/4").unwrap().0, "LLLN".repeat(4));
+        assert_eq!(Pattern::from_ratio(16, "0").unwrap().0, "L".repeat(16));
+        assert_eq!(Pattern::from_ratio(2, "1/2").unwrap().0, "LN");
+        assert_eq!(Pattern::from_ratio(16, "1/8").unwrap().n_std(), 2);
+        assert!(Pattern::from_ratio(4, "2/3").is_err());
+    }
+
+    #[test]
+    fn variant_roundtrip() {
+        for v in Variant::linear_variants() {
+            assert_eq!(Variant::parse(v.name()).unwrap(), *v);
+        }
+        assert_eq!(Variant::parse("standard").unwrap(), Variant::Softmax);
+    }
+
+    #[test]
+    fn scheduler_roundtrip() {
+        for s in Scheduler::all() {
+            assert_eq!(Scheduler::parse(s.name()).unwrap(), *s);
+        }
+    }
+
+    #[test]
+    fn kv_parser() {
+        let m = parse_kv("a = 1\n# comment\nb 2\nbad-line\nc = x y # t\n");
+        assert_eq!(m["a"], "1");
+        assert_eq!(m["b"], "2");
+        assert_eq!(m["c"], "x y");
+        assert!(!m.contains_key("bad-line"));
+    }
+
+    #[test]
+    fn feat_dims() {
+        let mut f = HashMap::new();
+        for (k, v) in [
+            ("d_model", 64usize), ("n_heads", 2), ("n_layers", 2),
+            ("vocab", 256), ("chunk_len", 32), ("max_seq", 512),
+            ("head_dim", 32), ("ffn_dim", 128), ("qk_reduced", 8),
+            ("train_batch", 2), ("train_seq", 64),
+        ] {
+            f.insert(k.to_string(), v);
+        }
+        let cfg = ModelConfig::from_fields("tiny", &f).unwrap();
+        assert_eq!(cfg.feat_dim(Variant::Basic), 32);
+        assert_eq!(cfg.feat_dim(Variant::Based), 1 + 8 + 64);
+        assert_eq!(cfg.feat_dim(Variant::Rebased), 8);
+        assert_eq!(cfg.state_elems(Variant::Basic), 2 * 32 * 32);
+    }
+}

@@ -1,0 +1,19 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * `params`     — model parameter store (order mirrors the artifacts)
+//! * `schedulers` — LASP-2 / LASP-2(overlap) / LASP-1 / Ring Attention /
+//!                  Megatron-SP per-layer distributed attention (Fig. 3 set)
+//! * `pipeline`   — multi-layer LASP-2H forward across the SP world
+//! * `plan`       — schedule descriptions consumed by the discrete-event
+//!                  simulator (paper-scale extrapolation)
+
+pub mod params;
+pub mod pipeline;
+pub mod plan;
+pub mod schedulers;
+
+pub use params::{param_specs, Params};
+pub use pipeline::{forward_distributed, forward_mono, forward_rank};
+pub use schedulers::{
+    lasp1_attention_backward, lasp2_attention_backward, LinearFwdCache,
+};

@@ -1,0 +1,302 @@
+//! Model parameter store.
+//!
+//! The flat parameter list (names, shapes, ORDER) mirrors
+//! `python/compile/model.py::param_specs` exactly — the train_step /
+//! init / forward_mono artifacts consume parameters positionally in this
+//! order, so any drift is caught by the shape checks in `Executable::run`.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelConfig, Pattern, Variant};
+use crate::runtime::{CachedBuffer, Engine, Value};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    Normal,
+    Xavier,
+    Ones,
+    Zeros,
+}
+
+/// (name, shape, init) — one entry per parameter tensor.
+pub fn param_specs(
+    cfg: &ModelConfig,
+    variant: Variant,
+    pattern: &Pattern,
+) -> Vec<(String, Vec<usize>, Init)> {
+    let (d, h, dh, f) = (cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.ffn_dim);
+    let rq = match variant {
+        Variant::Based | Variant::Rebased => cfg.qk_reduced,
+        _ => dh,
+    };
+    let mut specs: Vec<(String, Vec<usize>, Init)> = vec![
+        ("embed".into(), vec![cfg.vocab, d], Init::Normal),
+        ("pos".into(), vec![cfg.max_seq, d], Init::Normal),
+        ("final_ln".into(), vec![d], Init::Ones),
+    ];
+    for (i, is_linear) in pattern.layers() {
+        let p = format!("layer{i}");
+        specs.push((format!("{p}.ln1"), vec![d], Init::Ones));
+        let qk = if is_linear { h * rq } else { h * dh };
+        specs.push((format!("{p}.wq"), vec![d, qk], Init::Xavier));
+        specs.push((format!("{p}.wk"), vec![d, qk], Init::Xavier));
+        specs.push((format!("{p}.wv"), vec![d, h * dh], Init::Xavier));
+        specs.push((format!("{p}.wo"), vec![h * dh, d], Init::Xavier));
+        if is_linear && variant == Variant::Gla {
+            specs.push((format!("{p}.wg"), vec![d, h * rq], Init::Xavier));
+        }
+        if is_linear && variant == Variant::Rebased {
+            specs.push((format!("{p}.gamma"), vec![rq], Init::Ones));
+            specs.push((format!("{p}.beta"), vec![rq], Init::Zeros));
+        }
+        specs.push((format!("{p}.ln2"), vec![d], Init::Ones));
+        specs.push((format!("{p}.w1"), vec![d, f], Init::Xavier));
+        specs.push((format!("{p}.w3"), vec![d, f], Init::Xavier));
+        specs.push((format!("{p}.w2"), vec![f, d], Init::Xavier));
+    }
+    specs
+}
+
+/// A named parameter set for one (variant, pattern) model.
+///
+/// Parameters are constant on the forward hot path, so their XLA literals
+/// are converted ONCE and cached (perf pass: cuts a host memcpy per weight
+/// per artifact call); the cache is invalidated on mutation.
+pub struct Params {
+    pub variant: Variant,
+    pub pattern: Pattern,
+    names: Vec<String>,
+    map: HashMap<String, Tensor>,
+    lit_cache: Mutex<HashMap<String, std::sync::Arc<CachedBuffer>>>,
+}
+
+impl Clone for Params {
+    fn clone(&self) -> Self {
+        Params {
+            variant: self.variant,
+            pattern: self.pattern.clone(),
+            names: self.names.clone(),
+            map: self.map.clone(),
+            lit_cache: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+impl Params {
+    /// Deterministic rust-side init (for SP-vs-mono equality tests where
+    /// only consistency matters, not the init law).
+    pub fn randn(
+        cfg: &ModelConfig,
+        variant: Variant,
+        pattern: &Pattern,
+        seed: u64,
+    ) -> Params {
+        let specs = param_specs(cfg, variant, pattern);
+        let mut map = HashMap::new();
+        let mut names = Vec::new();
+        for (i, (name, shape, init)) in specs.iter().enumerate() {
+            let t = match init {
+                Init::Ones => Tensor::ones(shape),
+                Init::Zeros => Tensor::zeros(shape),
+                Init::Normal => Tensor::randn(shape, seed + i as u64).scale(0.02),
+                Init::Xavier => {
+                    let fan: usize = shape.iter().sum();
+                    let std = (2.0 / fan as f32).sqrt();
+                    Tensor::randn(shape, seed + i as u64).scale(std)
+                }
+            };
+            map.insert(name.clone(), t);
+            names.push(name.clone());
+        }
+        Params {
+            variant,
+            pattern: pattern.clone(),
+            names,
+            map,
+            lit_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Initialize by executing the AOT `init_<variant>_<tag>` artifact
+    /// (jax.random init, identical to what the paper's training used).
+    pub fn from_init_artifact(
+        engine: &Engine,
+        variant: Variant,
+        pattern: &Pattern,
+        artifact: &str,
+        seed: i32,
+    ) -> Result<Params> {
+        let exe = engine.artifact(artifact)?;
+        let outs = exe.run(&[Value::I32(vec![seed], vec![1])])?;
+        let specs = param_specs(&engine.model, variant, pattern);
+        anyhow::ensure!(outs.len() == specs.len(), "init arity mismatch");
+        let mut map = HashMap::new();
+        let mut names = Vec::new();
+        for ((name, shape, _), t) in specs.iter().zip(outs) {
+            anyhow::ensure!(t.shape() == shape.as_slice(), "init shape {name}");
+            map.insert(name.clone(), t);
+            names.push(name.clone());
+        }
+        Ok(Params {
+            variant,
+            pattern: pattern.clone(),
+            names,
+            map,
+            lit_cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Parameter as a runtime Value backed by a device-resident buffer
+    /// (weights are constant on the forward path; staged once).
+    pub fn value(&self, engine: &Engine, name: &str) -> Result<Value> {
+        if let Some(c) = self.lit_cache.lock().unwrap().get(name) {
+            return Ok(Value::Buf(c.clone()));
+        }
+        let t = self.get(name)?;
+        let c = engine.cache_buffer(t)?;
+        self.lit_cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), c.clone());
+        Ok(Value::Buf(c))
+    }
+
+    pub fn layer_value(&self, engine: &Engine, i: usize, name: &str) -> Result<Value> {
+        self.value(engine, &format!("layer{i}.{name}"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).with_context(|| format!("param {name}"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        assert!(self.map.contains_key(name), "unknown param {name}");
+        self.lit_cache.lock().unwrap().remove(name);
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Flat Value list in spec order (for mono/train artifacts), using the
+    /// device-buffer cache.
+    pub fn flat_values(&self, engine: &Engine) -> Vec<Value> {
+        self.names
+            .iter()
+            .map(|n| self.value(engine, n).expect("param"))
+            .collect()
+    }
+
+    /// Replace all params from a flat tensor list in spec order.
+    pub fn set_flat(&mut self, flat: &[Tensor]) {
+        assert_eq!(flat.len(), self.names.len());
+        self.lit_cache.lock().unwrap().clear();
+        for (n, t) in self.names.iter().zip(flat) {
+            self.map.insert(n.clone(), t.clone());
+        }
+    }
+
+    /// Total parameter count (for the ~100M check in train_e2e).
+    pub fn n_elems(&self) -> usize {
+        self.names.iter().map(|n| self.map[n].len()).sum()
+    }
+
+    /// Layer param accessors in the order the phase artifacts expect.
+    pub fn layer(&self, i: usize, name: &str) -> Result<&Tensor> {
+        self.get(&format!("layer{i}.{name}"))
+    }
+
+    /// Extra part1 inputs for the variant ([] | [wg] | [gamma, beta]).
+    pub fn part1_extra(&self, engine: &Engine, i: usize) -> Result<Vec<Value>> {
+        Ok(match self.variant {
+            Variant::Gla => vec![self.layer_value(engine, i, "wg")?],
+            Variant::Rebased => vec![
+                self.layer_value(engine, i, "gamma")?,
+                self.layer_value(engine, i, "beta")?,
+            ],
+            _ => vec![],
+        })
+    }
+
+    /// The shared epilogue params (wo, ln2, w1, w3, w2) for layer i.
+    pub fn epilogue(&self, engine: &Engine, i: usize) -> Result<Vec<Value>> {
+        Ok(vec![
+            self.layer_value(engine, i, "wo")?,
+            self.layer_value(engine, i, "ln2")?,
+            self.layer_value(engine, i, "w1")?,
+            self.layer_value(engine, i, "w3")?,
+            self.layer_value(engine, i, "w2")?,
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap as Map;
+
+    fn cfg() -> ModelConfig {
+        let mut f = Map::new();
+        for (k, v) in [
+            ("d_model", 64usize), ("n_heads", 2), ("n_layers", 2),
+            ("vocab", 256), ("chunk_len", 32), ("max_seq", 512),
+            ("head_dim", 32), ("ffn_dim", 128), ("qk_reduced", 8),
+            ("train_batch", 2), ("train_seq", 64),
+        ] {
+            f.insert(k.to_string(), v);
+        }
+        ModelConfig::from_fields("tiny", &f).unwrap()
+    }
+
+    #[test]
+    fn spec_counts() {
+        let c = cfg();
+        let pat = Pattern("LL".into());
+        // 3 globals + 2 layers x 9
+        assert_eq!(param_specs(&c, Variant::Basic, &pat).len(), 21);
+        // gla adds wg per linear layer
+        assert_eq!(param_specs(&c, Variant::Gla, &pat).len(), 23);
+        // rebased adds gamma+beta per linear layer
+        assert_eq!(param_specs(&c, Variant::Rebased, &pat).len(), 25);
+        // std layers never get variant extras
+        let pat2 = Pattern("LN".into());
+        assert_eq!(param_specs(&c, Variant::Gla, &pat2).len(), 22);
+    }
+
+    #[test]
+    fn qk_width_depends_on_variant_and_kind() {
+        let c = cfg();
+        let pat = Pattern("LN".into());
+        let specs = param_specs(&c, Variant::Based, &pat);
+        let find = |n: &str| specs.iter().find(|s| s.0 == n).unwrap().1.clone();
+        assert_eq!(find("layer0.wq"), vec![64, 2 * 8]); // linear: reduced
+        assert_eq!(find("layer1.wq"), vec![64, 2 * 32]); // std: full
+    }
+
+    #[test]
+    fn randn_params_roundtrip() {
+        let c = cfg();
+        let pat = Pattern("LL".into());
+        let p = Params::randn(&c, Variant::Basic, &pat, 0);
+        assert_eq!(p.len(), 21);
+        assert!(p.get("layer1.w2").is_ok());
+        assert!(p.get("nope").is_err());
+        let ln = p.get("final_ln").unwrap();
+        assert!(ln.allclose(&Tensor::ones(&[64]), 1e-6));
+        // epilogue/part1_extra need an Engine (device staging); covered by
+        // the integration tests that run against real artifacts.
+    }
+}

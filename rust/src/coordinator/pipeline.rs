@@ -1,0 +1,116 @@
+//! Multi-layer distributed forward: the full Linear-Llama3 pipeline driven
+//! chunk-wise across the SP world (embed -> L layers -> LM head), with the
+//! per-layer scheduler dispatch (LASP-2H semantics: linear layers use the
+//! memory-state AllGather, standard layers the K/V AllGather — Fig. 2).
+
+use anyhow::Result;
+
+use crate::comm::{Communicator, World};
+use crate::config::RunConfig;
+use crate::runtime::{Engine, Value};
+use crate::tensor::Tensor;
+
+use super::schedulers::{self, LinearFwdCache};
+use super::Params;
+
+/// Everything one rank produces in a forward pass.
+pub struct RankForward {
+    pub logits: Tensor,
+    /// per-LINEAR-layer forward caches (for the backward pass), layer-major
+    pub caches: Vec<(usize, LinearFwdCache)>,
+}
+
+/// Run the forward pass for this rank's chunk.
+///
+/// `tokens` is this rank's chunk of token ids (len == chunk_len).
+pub fn forward_rank(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    params: &Params,
+    tokens: &[i32],
+    masked: bool,
+    keep_cache: bool,
+) -> Result<RankForward> {
+    let m = &engine.model;
+    let c = m.chunk_len;
+    anyhow::ensure!(tokens.len() == c, "chunk length mismatch");
+    let offset = (comm.rank() * c) as i32;
+
+    let embed = engine.artifact("embed")?;
+    let mut x = embed.run1(&[
+        Value::I32(tokens.to_vec(), vec![c]),
+        Value::i32_scalar(offset),
+        params.value(engine, "embed")?,
+        params.value(engine, "pos")?,
+    ])?;
+
+    let mut caches = Vec::new();
+    for (i, is_linear) in run.pattern.layers() {
+        if is_linear {
+            let out = schedulers::linear_layer(
+                engine, comm, run, params, i, x, masked, keep_cache,
+            )?;
+            x = out.y;
+            if let Some(cache) = out.cache {
+                caches.push((i, cache));
+            }
+        } else {
+            x = schedulers::std_layer(engine, comm, run, params, i, x)?;
+        }
+    }
+
+    let head = engine.artifact("head")?;
+    let logits = head.run1(&[
+        x.into(),
+        params.value(engine, "final_ln")?,
+        params.value(engine, "embed")?,
+    ])?;
+    Ok(RankForward { logits, caches })
+}
+
+/// Full distributed forward over a W-rank world; returns concatenated
+/// logits [N, vocab] (gathered for verification) and per-rank walltimes.
+pub fn forward_distributed(
+    engine: &std::sync::Arc<Engine>,
+    world: &World,
+    run: &RunConfig,
+    params: &Params,
+    tokens: &[i32],
+    masked: bool,
+) -> Result<Tensor> {
+    let c = engine.model.chunk_len;
+    anyhow::ensure!(tokens.len() == world.size() * c, "token count != W*C");
+    let results = world.run(|comm| {
+        let r = comm.rank();
+        forward_rank(
+            engine,
+            &comm,
+            run,
+            params,
+            &tokens[r * c..(r + 1) * c],
+            masked,
+            false,
+        )
+        .map(|f| f.logits)
+    });
+    let mut chunks = Vec::with_capacity(results.len());
+    for r in results {
+        chunks.push(r?);
+    }
+    Ok(Tensor::cat0(&chunks))
+}
+
+/// Single-device oracle: execute the `forward_mono_*` artifact on the same
+/// tokens/params.  The distributed pipeline must reproduce this (allclose).
+pub fn forward_mono(
+    engine: &Engine,
+    artifact: &str,
+    params: &Params,
+    tokens: &[i32],
+) -> Result<Tensor> {
+    let exe = engine.artifact(artifact)?;
+    let mut ins = params.flat_values(engine);
+    ins.push(Value::I32(tokens.to_vec(), vec![tokens.len()]));
+    exe.run1(&ins)
+}

@@ -1,0 +1,544 @@
+//! The SP schedulers: per-layer distributed attention, one function per
+//! method in the paper's Fig. 3 comparison, all SPMD (called on every
+//! rank's thread with that rank's chunk).
+//!
+//! | scheduler      | comm primitive            | per-layer fwd comm steps |
+//! |----------------|---------------------------|--------------------------|
+//! | LASP-2         | 1 AllGather on (M_t, a_t) | 1 collective             |
+//! | LASP-2 overlap | same, overlapped w/ intra | 1 collective (hidden)    |
+//! | LASP-1         | ring P2P on M             | W-1 sequential hops      |
+//! | Ring Attention | ring P2P on (K_t, V_t)    | W-1 hops (pipelined)     |
+//! | Megatron-SP    | AllGather on (K, V)       | 1 collective, O(N) bytes |
+//!
+//! All functions return the layer output chunk y_t and (for the linear
+//! ones) leave behind the forward state cache needed by the backward pass
+//! (m_prefix per layer — the paper's "cache M_{1:t} in HBM" note).
+
+use anyhow::{bail, Result};
+
+use crate::comm::Communicator;
+use crate::config::{RunConfig, Scheduler, Variant};
+use crate::runtime::{Engine, Value};
+use crate::tensor::{prefix_states, suffix_dstates, ChunkState, Tensor};
+
+/// Forward cache for one linear layer on one rank (backward needs it).
+#[derive(Clone)]
+pub struct LinearFwdCache {
+    pub qt: Tensor,
+    pub kt: Tensor,
+    pub v: Tensor,
+    pub m_prefix: Tensor,
+}
+
+/// Output of one distributed linear-attention layer.
+pub struct LinearLayerOut {
+    pub y: Tensor,
+    pub cache: Option<LinearFwdCache>,
+}
+
+fn part1(
+    engine: &Engine,
+    variant: Variant,
+    layer: usize,
+    params: &super::Params,
+    x: &Tensor,
+) -> Result<(Tensor, Tensor, Tensor, Tensor, Tensor)> {
+    let exe = engine.artifact(&format!("l_part1_{}", variant.name()))?;
+    let mut ins: Vec<Value> = vec![
+        x.clone().into(),
+        params.layer_value(engine, layer, "ln1")?,
+        params.layer_value(engine, layer, "wq")?,
+        params.layer_value(engine, layer, "wk")?,
+        params.layer_value(engine, layer, "wv")?,
+    ];
+    ins.extend(params.part1_extra(engine, layer)?);
+    let mut o = exe.run(&ins)?;
+    let a = o.pop().unwrap();
+    let m = o.pop().unwrap();
+    let v = o.pop().unwrap();
+    let kt = o.pop().unwrap();
+    let qt = o.pop().unwrap();
+    Ok((qt, kt, v, m, a))
+}
+
+/// LASP-2 (Alg. 2 masked / Alg. 1 unmasked): one AllGather on the chunk
+/// memory states, prefix-combine locally, fused part2.
+pub fn lasp2_linear_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+    masked: bool,
+    keep_cache: bool,
+) -> Result<LinearLayerOut> {
+    let variant = run.variant;
+    let (qt, kt, v, m, a) = part1(engine, variant, layer, params, &x)?;
+
+    // THE communication of LASP-2: a single AllGather over [M_t, a_t]
+    // (size independent of sequence length — §3.4).
+    let gathered = comm.all_gather_split(vec![m, a], run.gather_splits);
+    let states: Vec<ChunkState> = gathered
+        .into_iter()
+        .map(|mut g| {
+            let a = g.pop().unwrap();
+            let m = g.pop().unwrap();
+            ChunkState { m, a }
+        })
+        .collect();
+
+    let (y, cache) = if masked {
+        // Alg. 2 line 9: gated PrefixSum, evaluated concurrently per rank
+        let (mut prefixes, _) = prefix_states(&states);
+        let mp = std::mem::replace(
+            &mut prefixes[comm.rank()].m,
+            Tensor::zeros(&[0]),
+        );
+        let exe = engine.artifact(&format!("l_part2_{}", variant.name()))?;
+        // clone activations only when the backward pass needs them cached
+        let cache = keep_cache.then(|| LinearFwdCache {
+            qt: qt.clone(),
+            kt: kt.clone(),
+            v: v.clone(),
+            m_prefix: mp.clone(),
+        });
+        let mut ins: Vec<Value> = vec![
+            x.into(),
+            qt.into(),
+            kt.into(),
+            v.into(),
+            mp.into(),
+        ];
+        ins.extend(params.epilogue(engine, layer)?);
+        (exe.run1(&ins)?, cache)
+    } else {
+        // Alg. 1 line 7: Sum over all chunk states
+        let (_, total) = prefix_states(&states);
+        if variant != Variant::Basic {
+            bail!("unmasked path is defined for the basic variant");
+        }
+        let exe = engine.artifact("l_part2nm_basic")?;
+        let cache = keep_cache.then(|| LinearFwdCache {
+            qt: qt.clone(),
+            kt: kt.clone(),
+            v: v.clone(),
+            m_prefix: total.m.clone(),
+        });
+        let mut ins: Vec<Value> = vec![
+            x.into(),
+            qt.into(),
+            v.into(),
+            total.m.into(),
+        ];
+        ins.extend(params.epilogue(engine, layer)?);
+        (exe.run1(&ins)?, cache)
+    };
+    Ok(LinearLayerOut { y, cache })
+}
+
+/// LASP-2 with communication/computation overlap: the AllGather runs on a
+/// helper thread while this rank computes O_intra (Alg. 2's magenta/cyan
+/// lines executed concurrently).
+pub fn lasp2_overlap_linear_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+    keep_cache: bool,
+) -> Result<LinearLayerOut> {
+    let variant = run.variant;
+    let (qt, kt, v, m, a) = part1(engine, variant, layer, params, &x)?;
+
+    let comm2 = comm.clone();
+    let splits = run.gather_splits;
+    let (states, o_intra) = std::thread::scope(
+        |s| -> Result<(Vec<ChunkState>, Tensor)> {
+            // communication branch
+            let gather = s.spawn(move || comm2.all_gather_split(vec![m, a], splits));
+            // computation branch: O_intra (overlaps with the collective)
+            let exe = engine.artifact(&format!("l_intra_{}", variant.name()))?;
+            let o_intra = exe.run1(&[
+                qt.clone().into(),
+                kt.clone().into(),
+                v.clone().into(),
+            ])?;
+            let gathered = gather.join().expect("gather thread");
+            let states = gathered
+                .into_iter()
+                .map(|mut g| {
+                    let a = g.pop().unwrap();
+                    let m = g.pop().unwrap();
+                    ChunkState { m, a }
+                })
+                .collect();
+            Ok((states, o_intra))
+        },
+    )?;
+
+    let (mut prefixes, _) = prefix_states(&states);
+    let mp = std::mem::replace(&mut prefixes[comm.rank()].m, Tensor::zeros(&[0]));
+    let exe = engine.artifact(&format!("l_part2b_{}", variant.name()))?;
+    let cache = keep_cache.then(|| LinearFwdCache {
+        qt: qt.clone(),
+        kt,
+        v,
+        m_prefix: mp.clone(),
+    });
+    let mut ins: Vec<Value> = vec![
+        x.into(),
+        qt.into(),
+        o_intra.into(),
+        mp.into(),
+    ];
+    ins.extend(params.epilogue(engine, layer)?);
+    let y = exe.run1(&ins)?;
+    Ok(LinearLayerOut { y, cache })
+}
+
+/// LASP-1 (Alg. 6): intra computed in parallel, then a SEQUENTIAL ring of
+/// P2P hops carrying the running memory state — the serialization LASP-2
+/// removes.
+pub fn lasp1_linear_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+    keep_cache: bool,
+) -> Result<LinearLayerOut> {
+    let variant = run.variant;
+    let (qt, kt, v, m, a) = part1(engine, variant, layer, params, &x)?;
+    let intra = engine.artifact(&format!("l_intra_{}", variant.name()))?;
+    let o_intra = intra.run1(&[
+        qt.clone().into(),
+        kt.clone().into(),
+        v.clone().into(),
+    ])?;
+
+    // Sequential ring (Alg. 6 lines 9-15): rank i waits for M_{1:i-1}.
+    let rank = comm.rank();
+    let w = comm.size();
+    let m_prefix = if rank == 0 {
+        Tensor::zeros(m.shape())
+    } else {
+        let mut msg = comm.recv(rank - 1);
+        msg.pop().unwrap()
+    };
+    // O_t = O_intra + Q~ M_{1:t-1}; then forward the updated state.
+    if rank + 1 < w {
+        // M_{1:t} = a_t (x) M_{1:t-1} + M_t  (Eq. 9, gated)
+        let own = ChunkState { m, a };
+        let prev = ChunkState { m: m_prefix.clone(), a: Tensor::ones(own.a.shape()) };
+        let updated = crate::tensor::state_combine(&prev, &own);
+        comm.send(rank + 1, vec![updated.m]);
+    }
+    let exe = engine.artifact(&format!("l_part2b_{}", variant.name()))?;
+    let cache = keep_cache.then(|| LinearFwdCache {
+        qt: qt.clone(),
+        kt,
+        v,
+        m_prefix: m_prefix.clone(),
+    });
+    let mut ins: Vec<Value> = vec![
+        x.into(),
+        qt.into(),
+        o_intra.into(),
+        m_prefix.into(),
+    ];
+    ins.extend(params.epilogue(engine, layer)?);
+    let y = exe.run1(&ins)?;
+    Ok(LinearLayerOut { y, cache })
+}
+
+/// Ring Attention applied to the linear-attention instance WITHOUT the
+/// right-product trick (paper Sec. 4.1 comparison setup): K/V chunks
+/// circulate the ring; each hop accumulates a masked left-product block.
+pub fn ring_linear_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+) -> Result<LinearLayerOut> {
+    let variant = run.variant;
+    if variant != Variant::Basic {
+        bail!("ring baseline is built for the basic variant");
+    }
+    let (qt, kt, v, _m, _a) = part1(engine, variant, layer, params, &x)?;
+    let c = engine.model.chunk_len;
+    let step = engine.artifact("ring_linear_step")?;
+    let rank = comm.rank();
+    let w = comm.size();
+
+    let mut acc = Tensor::zeros(v.shape());
+    let mut cur_k = kt;
+    let mut cur_v = v;
+    let mut cur_idx = rank;
+    for hop in 0..w {
+        acc = step.run1(&[
+            qt.clone().into(),
+            cur_k.clone().into(),
+            cur_v.clone().into(),
+            acc.into(),
+            Value::i32_scalar((rank * c) as i32),
+            Value::i32_scalar((cur_idx * c) as i32),
+        ])?;
+        if hop + 1 < w {
+            comm.send(comm.right(), vec![cur_k, cur_v]);
+            let mut msg = comm.recv(comm.left());
+            cur_v = msg.pop().unwrap();
+            cur_k = msg.pop().unwrap();
+            cur_idx = (cur_idx + w - 1) % w;
+        }
+    }
+    let post = engine.artifact("post_attn")?;
+    let mut ins: Vec<Value> = vec![x.into(), acc.into()];
+    ins.extend(params.epilogue(engine, layer)?);
+    Ok(LinearLayerOut { y: post.run1(&ins)?, cache: None })
+}
+
+/// Megatron-SP style baseline: AllGather the FULL K/V along the sequence
+/// (bytes grow with N) and compute the left product locally.
+pub fn megatron_linear_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+) -> Result<LinearLayerOut> {
+    let variant = run.variant;
+    if variant != Variant::Basic {
+        bail!("megatron-sp baseline is built for the basic variant");
+    }
+    let (qt, kt, v, _m, _a) = part1(engine, variant, layer, params, &x)?;
+    let c = engine.model.chunk_len;
+    let w = comm.size();
+    let gathered = comm.all_gather(vec![kt, v]);
+    let k_all = Tensor::cat0(&gathered.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
+    let v_all = Tensor::cat0(&gathered.iter().map(|g| g[1].clone()).collect::<Vec<_>>());
+    let exe = engine.artifact(&format!("mega_attn_basic_T{w}"))?;
+    let attn = exe.run1(&[
+        qt.into(),
+        k_all.into(),
+        v_all.into(),
+        Value::i32_scalar((comm.rank() * c) as i32),
+    ])?;
+    let post = engine.artifact("post_attn")?;
+    let mut ins: Vec<Value> = vec![x.into(), attn.into()];
+    ins.extend(params.epilogue(engine, layer)?);
+    Ok(LinearLayerOut { y: post.run1(&ins)?, cache: None })
+}
+
+/// Dispatch one linear layer by scheduler.
+pub fn linear_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+    masked: bool,
+    keep_cache: bool,
+) -> Result<LinearLayerOut> {
+    match run.scheduler {
+        Scheduler::Lasp2 => {
+            lasp2_linear_layer(engine, comm, run, params, layer, x, masked, keep_cache)
+        }
+        Scheduler::Lasp2Overlap => {
+            lasp2_overlap_linear_layer(engine, comm, run, params, layer, x, keep_cache)
+        }
+        Scheduler::Lasp1 => {
+            lasp1_linear_layer(engine, comm, run, params, layer, x, keep_cache)
+        }
+        Scheduler::RingAttention => ring_linear_layer(engine, comm, run, params, layer, x),
+        Scheduler::MegatronSp => megatron_linear_layer(engine, comm, run, params, layer, x),
+    }
+}
+
+// ---------------------------------------------------------------- standard
+/// Standard-attention layer, AllGather-based context parallelism (Alg. 7):
+/// the LASP-2H treatment of hybrid "N" layers (K_t, V_t gathered — C x d
+/// per rank, much smaller than Q given the quadratic attention compute).
+pub fn std_layer_allgather(
+    engine: &Engine,
+    comm: &Communicator,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+) -> Result<Tensor> {
+    let c = engine.model.chunk_len;
+    let w = comm.size();
+    let p1 = engine.artifact("s_part1")?;
+    let mut o = p1.run(&[
+        Value::F32(x.clone()),
+        params.layer_value(engine, layer, "ln1")?,
+        params.layer_value(engine, layer, "wq")?,
+        params.layer_value(engine, layer, "wk")?,
+        params.layer_value(engine, layer, "wv")?,
+    ])?;
+    let v = o.pop().unwrap();
+    let k = o.pop().unwrap();
+    let q = o.pop().unwrap();
+    let gathered = comm.all_gather(vec![k, v]);
+    let k_all = Tensor::cat0(&gathered.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
+    let v_all = Tensor::cat0(&gathered.iter().map(|g| g[1].clone()).collect::<Vec<_>>());
+    let p2 = engine.artifact(&format!("s_part2_T{w}"))?;
+    let mut ins: Vec<Value> = vec![
+        x.into(),
+        q.into(),
+        k_all.into(),
+        v_all.into(),
+        Value::i32_scalar((comm.rank() * c) as i32),
+    ];
+    ins.extend(params.epilogue(engine, layer)?);
+    p2.run1(&ins)
+}
+
+/// Standard-attention layer via Ring Attention (online-softmax ring) — the
+/// baseline treatment of "N" layers under the Ring scheduler.
+pub fn std_layer_ring(
+    engine: &Engine,
+    comm: &Communicator,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+) -> Result<Tensor> {
+    let m = &engine.model;
+    let (c, hh, dh) = (m.chunk_len, m.n_heads, m.head_dim);
+    let p1 = engine.artifact("s_part1")?;
+    let mut o = p1.run(&[
+        Value::F32(x.clone()),
+        params.layer_value(engine, layer, "ln1")?,
+        params.layer_value(engine, layer, "wq")?,
+        params.layer_value(engine, layer, "wk")?,
+        params.layer_value(engine, layer, "wv")?,
+    ])?;
+    let v = o.pop().unwrap();
+    let k = o.pop().unwrap();
+    let q = o.pop().unwrap();
+
+    let step = engine.artifact("ring_step")?;
+    let fin = engine.artifact("ring_finalize")?;
+    let rank = comm.rank();
+    let w = comm.size();
+    let mut mstat = Tensor::full(&[c, hh], -1e30);
+    let mut lstat = Tensor::zeros(&[c, hh]);
+    let mut acc = Tensor::zeros(&[c, hh, dh]);
+    let mut cur_k = k;
+    let mut cur_v = v;
+    let mut cur_idx = rank;
+    for hop in 0..w {
+        let mut outs = step.run(&[
+            q.clone().into(),
+            cur_k.clone().into(),
+            cur_v.clone().into(),
+            mstat.into(),
+            lstat.into(),
+            acc.into(),
+            Value::i32_scalar((rank * c) as i32),
+            Value::i32_scalar((cur_idx * c) as i32),
+        ])?;
+        acc = outs.pop().unwrap();
+        lstat = outs.pop().unwrap();
+        mstat = outs.pop().unwrap();
+        if hop + 1 < w {
+            comm.send(comm.right(), vec![cur_k, cur_v]);
+            let mut msg = comm.recv(comm.left());
+            cur_v = msg.pop().unwrap();
+            cur_k = msg.pop().unwrap();
+            cur_idx = (cur_idx + w - 1) % w;
+        }
+    }
+    let attn = fin.run1(&[lstat.into(), acc.into()])?;
+    let post = engine.artifact("post_attn")?;
+    let mut ins: Vec<Value> = vec![x.into(), attn.into()];
+    ins.extend(params.epilogue(engine, layer)?);
+    post.run1(&ins)
+}
+
+/// Dispatch one standard layer by scheduler (LASP-2H unifies on AllGather).
+pub fn std_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+) -> Result<Tensor> {
+    match run.scheduler {
+        Scheduler::RingAttention => std_layer_ring(engine, comm, params, layer, x),
+        _ => std_layer_allgather(engine, comm, params, layer, x),
+    }
+}
+
+// ---------------------------------------------------------------- backward
+/// LASP-2 distributed backward over one attention module (Alg. 3/4): one
+/// AllGather on dM_t, suffix-summed locally, then the chunk gradient.
+pub fn lasp2_attention_backward(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    cache: &LinearFwdCache,
+    do_t: &Tensor,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let bwd1 = engine.artifact("l_bwd1_basic")?;
+    let dm = bwd1.run1(&[cache.qt.clone().into(), do_t.clone().into()])?;
+    // the backward's single collective (Alg. 4 line 4)
+    let gathered = comm.all_gather_split(vec![dm], run.gather_splits);
+    let dms: Vec<Tensor> = gathered.into_iter().map(|mut g| g.pop().unwrap()).collect();
+    let suffix = suffix_dstates(&dms);
+    let bwd2 = engine.artifact("l_bwd2_basic")?;
+    let outs = bwd2.run(&[
+        cache.qt.clone().into(),
+        cache.kt.clone().into(),
+        cache.v.clone().into(),
+        do_t.clone().into(),
+        cache.m_prefix.clone().into(),
+        suffix[comm.rank()].clone().into(),
+    ])?;
+    let mut it = outs.into_iter();
+    Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+}
+
+/// LASP-1 backward: the dM suffix accumulates over a reverse sequential
+/// ring (2(W-1) total hops per iteration when paired with the forward).
+pub fn lasp1_attention_backward(
+    engine: &Engine,
+    comm: &Communicator,
+    cache: &LinearFwdCache,
+    do_t: &Tensor,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let bwd1 = engine.artifact("l_bwd1_basic")?;
+    let dm = bwd1.run1(&[cache.qt.clone().into(), do_t.clone().into()])?;
+    let rank = comm.rank();
+    let w = comm.size();
+    // reverse ring: rank i receives dM_{i+1:T} from rank i+1
+    let dm_suffix = if rank == w - 1 {
+        Tensor::zeros(dm.shape())
+    } else {
+        let mut msg = comm.recv(rank + 1);
+        msg.pop().unwrap()
+    };
+    if rank > 0 {
+        let mut fwd = dm_suffix.clone();
+        fwd.add_assign(&dm);
+        comm.send(rank - 1, vec![fwd]);
+    }
+    let bwd2 = engine.artifact("l_bwd2_basic")?;
+    let outs = bwd2.run(&[
+        cache.qt.clone().into(),
+        cache.kt.clone().into(),
+        cache.v.clone().into(),
+        do_t.clone().into(),
+        cache.m_prefix.clone().into(),
+        dm_suffix.into(),
+    ])?;
+    let mut it = outs.into_iter();
+    Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+}

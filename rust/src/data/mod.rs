@@ -1,0 +1,247 @@
+//! Synthetic training data (the documented SlimPajama substitution).
+//!
+//! The convergence experiments need a LEARNABLE token distribution, not a
+//! specific corpus: we generate a deterministic order-2 Markov chain over
+//! the vocabulary with a sparse transition structure plus embedded
+//! repeating "phrases", which gives a smoothly decreasing LM loss and a
+//! non-trivial gap between weak and strong models — enough to preserve the
+//! paper's relative convergence ordering (Table 2/3/4 shapes).
+
+/// Deterministic xorshift64* PRNG (std-only).
+#[derive(Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+}
+
+/// Order-2 Markov corpus generator with phrase insertions.
+pub struct SynthCorpus {
+    vocab: usize,
+    rng: Rng,
+    /// current bigram context
+    ctx: (usize, usize),
+    /// per-context candidate successors (sparse, derived procedurally)
+    branch: usize,
+    /// repeating phrases injected with probability `phrase_p`
+    phrases: Vec<Vec<usize>>,
+    phrase_p: f32,
+    pending: Vec<usize>,
+}
+
+impl SynthCorpus {
+    pub fn new(vocab: usize, seed: u64) -> SynthCorpus {
+        assert!(vocab >= 16);
+        let mut rng = Rng::new(seed);
+        let n_phrases = 32;
+        let head = (vocab / 4).max(8);
+        let phrases = (0..n_phrases)
+            .map(|_| {
+                let len = 4 + rng.below(8);
+                (0..len).map(|_| rng.below(head)).collect()
+            })
+            .collect();
+        SynthCorpus {
+            vocab,
+            rng,
+            ctx: (0, 1),
+            branch: 2,
+            phrases,
+            phrase_p: 0.05,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Deterministic successor set of a bigram context: a hash selects
+    /// `branch` candidates; the chain mixes them with mild noise.
+    ///
+    /// The chain's mass concentrates on the first vocab/4 token ids (a
+    /// crude Zipf-like skew): a model learns the unigram head within a few
+    /// steps (fast initial loss drop) and the bigram structure over longer
+    /// runs — mirroring how real-corpus LM curves behave.
+    fn successor(&mut self, a: usize, b: usize) -> usize {
+        let h = (a as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((b as u64).wrapping_mul(0xBF58476D1CE4E5B9));
+        // 10% uniform noise keeps entropy > 0 so loss plateaus, not zeroes
+        if self.rng.f32() < 0.1 {
+            return self.rng.below(self.vocab);
+        }
+        let head = (self.vocab / 4).max(8);
+        let pick = self.rng.below(self.branch) as u64;
+        ((h >> (8 + pick * 7)) % head as u64) as usize
+    }
+
+    pub fn next_token(&mut self) -> usize {
+        if let Some(t) = self.pending.pop() {
+            self.ctx = (self.ctx.1, t);
+            return t;
+        }
+        if self.rng.f32() < self.phrase_p {
+            let p = self.phrases[self.rng.below(self.phrases.len())].clone();
+            self.pending = p.into_iter().rev().collect();
+            return self.next_token();
+        }
+        let t = self.successor(self.ctx.0, self.ctx.1);
+        self.ctx = (self.ctx.1, t);
+        t
+    }
+
+    /// Generate `n` tokens as i32 (the runtime token dtype).
+    pub fn tokens(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.next_token() as i32).collect()
+    }
+}
+
+/// A [B, S] batch of LM training data: inputs, next-token targets, and a
+/// loss mask (all-ones for causal LM; MLM-style for bidirectional).
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Streaming batch iterator over the synthetic corpus.
+pub struct BatchIter {
+    corpus: SynthCorpus,
+    batch: usize,
+    seq: usize,
+    /// None = causal LM; Some(p) = bidirectional MLM with mask prob p
+    mlm: Option<f32>,
+    mask_token: i32,
+    rng: Rng,
+}
+
+impl BatchIter {
+    pub fn causal(vocab: usize, batch: usize, seq: usize, seed: u64) -> BatchIter {
+        BatchIter {
+            corpus: SynthCorpus::new(vocab, seed),
+            batch,
+            seq,
+            mlm: None,
+            mask_token: 0,
+            rng: Rng::new(seed ^ 0xABCD),
+        }
+    }
+
+    /// Bidirectional task (paper A.5.1): mask 15% of inputs, predict them.
+    pub fn mlm(vocab: usize, batch: usize, seq: usize, seed: u64) -> BatchIter {
+        BatchIter {
+            corpus: SynthCorpus::new(vocab, seed),
+            batch,
+            seq,
+            mlm: Some(0.15),
+            mask_token: (vocab - 1) as i32,
+            rng: Rng::new(seed ^ 0xABCD),
+        }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, s) = (self.batch, self.seq);
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut targets = Vec::with_capacity(b * s);
+        let mut loss_mask = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            // generate S+1 so targets are the shifted sequence
+            let seq = self.corpus.tokens(s + 1);
+            match self.mlm {
+                None => {
+                    tokens.extend_from_slice(&seq[..s]);
+                    targets.extend_from_slice(&seq[1..]);
+                    loss_mask.extend(std::iter::repeat(1.0f32).take(s));
+                }
+                Some(p) => {
+                    for i in 0..s {
+                        let masked = self.rng.f32() < p;
+                        tokens.push(if masked { self.mask_token } else { seq[i] });
+                        targets.push(seq[i]);
+                        loss_mask.push(if masked { 1.0 } else { 0.0 });
+                    }
+                }
+            }
+        }
+        Batch { tokens, targets, loss_mask, batch: b, seq: s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_deterministic() {
+        let a = SynthCorpus::new(256, 7).tokens(100);
+        let b = SynthCorpus::new(256, 7).tokens(100);
+        assert_eq!(a, b);
+        let c = SynthCorpus::new(256, 8).tokens(100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn corpus_in_vocab() {
+        let toks = SynthCorpus::new(64, 1).tokens(1000);
+        assert!(toks.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_is_learnable_not_uniform() {
+        // unigram mass must concentrate on the head (learnable skew)
+        let toks = SynthCorpus::new(64, 2).tokens(20000);
+        let head_mass = toks.iter().filter(|&&t| t < 16).count() as f64
+            / toks.len() as f64;
+        assert!(head_mass > 0.7, "head mass {head_mass}");
+        // and the bigram support must stay sparse vs uniform
+        let mut counts = vec![0usize; 64 * 64];
+        for w in toks.windows(2) {
+            counts[w[0] as usize * 64 + w[1] as usize] += 1;
+        }
+        let nonzero = counts.iter().filter(|&&c| c > 0).count();
+        assert!(nonzero < 3000, "bigram support {nonzero}");
+    }
+
+    #[test]
+    fn causal_batch_shift() {
+        let mut it = BatchIter::causal(128, 2, 16, 3);
+        let b = it.next_batch();
+        assert_eq!(b.tokens.len(), 32);
+        assert_eq!(b.targets.len(), 32);
+        assert!(b.loss_mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn mlm_batch_masks() {
+        let mut it = BatchIter::mlm(128, 2, 256, 3);
+        let b = it.next_batch();
+        let masked: usize = b.loss_mask.iter().map(|&m| m as usize).sum();
+        // ~15% +- slack
+        assert!(masked > 30 && masked < 130, "{masked}");
+        for i in 0..b.tokens.len() {
+            if b.loss_mask[i] == 1.0 {
+                assert_eq!(b.tokens[i], 127);
+            } else {
+                assert_eq!(b.tokens[i], b.targets[i]);
+            }
+        }
+    }
+}

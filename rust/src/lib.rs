@@ -1,0 +1,31 @@
+//! # lasp2 — reproduction of *LASP-2: Rethinking Sequence Parallelism for
+//! # Linear Attention and Its Hybrid* (Sun et al., 2025)
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the rust coordinator: SP schedulers (LASP-2,
+//!   LASP-1, Ring Attention, Megatron-SP, LASP-2H hybrid dispatch), an
+//!   in-memory multi-device world with instrumented collectives, a
+//!   discrete-event cluster simulator for paper-scale extrapolation, a
+//!   training loop, and the benchmark harness for every table/figure.
+//! * **L2 (python/compile, build-time)** — Linear-Llama3 in JAX, lowered
+//!   once to HLO-text artifacts.
+//! * **L1 (python/compile/kernels, build-time)** — Pallas kernels for the
+//!   chunked linear-attention hot spots.
+//!
+//! Python never runs on the request path: the runtime loads
+//! `artifacts/<preset>/*.hlo.txt` through the PJRT C API (`xla` crate).
+
+pub mod bench;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod train;
+
+pub use config::{ModelConfig, Pattern, RunConfig, Scheduler, Variant};
+pub use runtime::Engine;
+pub use tensor::Tensor;

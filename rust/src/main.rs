@@ -1,0 +1,248 @@
+//! `lasp2` CLI launcher.
+//!
+//! Subcommands (see `lasp2 help`):
+//!   run           distributed forward + SP-vs-mono verification
+//!   train         train a model via the train_step artifact
+//!   bench-fig3    Fig. 3 speed comparison (sim @ 64 GPUs + real-exec)
+//!   bench-fig4    Fig. 4 scalability summary (sim)
+//!   bench-table2  Table 2 convergence (real training)
+//!   bench-table3  Table 3 bidirectional (real training)
+//!   bench-table4  Table 4 hybrid-ratio ablation (real training)
+//!   bench-table5  Table 5 gather-split ablation (sim)
+//!   bench-table6  Table 6 quantitative scalability (sim)
+//!   bench-all     everything above
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use lasp2::bench;
+use lasp2::comm::World;
+use lasp2::config::{Pattern, RunConfig, Scheduler, Variant};
+use lasp2::coordinator::{forward_distributed, forward_mono, Params};
+use lasp2::runtime::Engine;
+use lasp2::sim::CostModel;
+use lasp2::train::{train, TrainOpts};
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+const HELP: &str = "lasp2 — LASP-2 sequence parallelism reproduction
+
+USAGE: lasp2 <command> [--flags]
+
+COMMANDS
+  run           distributed forward, verified against the monolithic oracle
+                  --preset tiny|small  --world N  --scheduler lasp2|lasp1|...
+                  --variant basic|gla|...  --splits K
+  train         real training via the AOT train_step artifact
+                  --preset tiny|small|medium  --variant basic --ratio 0|1/4
+                  --steps N  --lr 3e-3  --mlm  --csv path.csv
+  bench-fig3    speed comparison tokens/s (sim @64 GPUs) + real-exec table
+  bench-fig4    scalability frontier (sim)
+  bench-table2  convergence zoo (real training; needs small bench artifacts)
+  bench-table3  bidirectional LM (real training)
+  bench-table4  hybrid-ratio ablation (real training)
+  bench-table5  AllGather split-size ablation (sim)
+  bench-table6  quantitative scalability table (sim)
+  bench-all     all of the above
+  stats         print per-artifact runtime stats after a run
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "train" => cmd_train(&args),
+        "bench-fig3" => cmd_fig3(&args),
+        "bench-fig4" => {
+            println!("# Fig. 4 — scalability frontier (sim)\n");
+            println!("{}", bench::fig4_scalability(&CostModel::default()).to_markdown());
+            Ok(())
+        }
+        "bench-table2" => cmd_table2(&args),
+        "bench-table3" => cmd_table3(&args),
+        "bench-table4" => cmd_table4(&args),
+        "bench-table5" => {
+            println!("# Table 5 — AllGather split-size ablation (sim)\n");
+            println!("{}", bench::table5_splits(&CostModel::default()).to_markdown());
+            Ok(())
+        }
+        "bench-table6" => {
+            println!("# Table 6 — quantitative scalability (sim)\n");
+            println!("{}", bench::table6_scalability(&CostModel::default()).to_markdown());
+            Ok(())
+        }
+        "bench-all" => {
+            cmd_fig3(&args)?;
+            println!("# Fig. 4\n\n{}", bench::fig4_scalability(&CostModel::default()).to_markdown());
+            cmd_table2(&args)?;
+            cmd_table3(&args)?;
+            cmd_table4(&args)?;
+            println!("# Table 5\n\n{}", bench::table5_splits(&CostModel::default()).to_markdown());
+            println!("# Table 6\n\n{}", bench::table6_scalability(&CostModel::default()).to_markdown());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other}\n\n{HELP}"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "tiny");
+    let world_size = args.usize("world", 4)?;
+    let scheduler = Scheduler::parse(&args.get("scheduler", "lasp2"))?;
+    let variant = Variant::parse(&args.get("variant", "basic"))?;
+    let splits = args.usize("splits", 1)?;
+    let engine = Engine::load_preset(&preset)?;
+    let cfg = engine.model.clone();
+    let pattern = Pattern("L".repeat(cfg.n_layers));
+    let run = RunConfig {
+        world: world_size,
+        scheduler,
+        variant,
+        pattern: pattern.clone(),
+        gather_splits: splits,
+        seed: 0,
+    };
+    let params = Params::randn(&cfg, variant, &pattern, 42);
+    let n = world_size * cfg.chunk_len;
+    let tokens: Vec<i32> = (0..n as i32).map(|i| (i * 7 + 3) % cfg.vocab as i32).collect();
+    println!(
+        "preset={preset} world={world_size} scheduler={scheduler} variant={variant} N={n}"
+    );
+    let world = World::new(world_size);
+    let t0 = std::time::Instant::now();
+    let logits = forward_distributed(&engine, &world, &run, &params, &tokens, true)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let snap = world.counters();
+    println!(
+        "forward: {:.1} ms, {:.0} tokens/s | collectives={} p2p={} bytes={}",
+        dt * 1e3,
+        n as f64 / dt,
+        snap.collective_ops,
+        snap.p2p_ops,
+        snap.bytes,
+    );
+    // verify against the monolithic oracle if it was compiled
+    let mono_name = format!("forward_mono_{}_pure_N{}", variant.name(), n);
+    if engine.has_artifact(&mono_name) {
+        let want = forward_mono(&engine, &mono_name, &params, &tokens)?;
+        let err = logits.max_rel_err(&want);
+        println!("verified vs {mono_name}: max rel err {err:.2e}");
+        anyhow::ensure!(err < 2e-3, "mismatch vs monolithic oracle");
+    } else {
+        println!("(no {mono_name} artifact; skipping verification)");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "tiny");
+    let variant = Variant::parse(&args.get("variant", "basic"))?;
+    let ratio = args.get("ratio", "0");
+    let mlm = args.get("mlm", "false") == "true";
+    let engine = Engine::load_preset(&preset)?;
+    let pattern = Pattern::from_ratio(engine.model.n_layers, &ratio)?;
+    let tag = format!(
+        "{}_{}{}",
+        variant.name(),
+        Pattern::tag(&ratio),
+        if mlm { "_nm" } else { "" }
+    );
+    let opts = TrainOpts {
+        steps: args.usize("steps", 50)?,
+        peak_lr: args.get("lr", "3e-3").parse()?,
+        mlm,
+        csv: args.flags.get("csv").cloned(),
+        seed: args.usize("seed", 0)? as u64,
+        ..Default::default()
+    };
+    let rep = train(&engine, variant, &pattern, &tag, &opts)?;
+    println!(
+        "trained {tag}: {} params, {} steps, final loss {:.4}, tail loss {:.4}, {:.0} tokens/s",
+        rep.params, rep.steps, rep.final_loss, rep.tail_loss, rep.tokens_per_sec
+    );
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    println!("# Fig. 3 — speed comparison, tokens/s (sim, 64 GPUs, Linear-Llama3-1B)\n");
+    println!("{}", bench::fig3_speed(&CostModel::default()).to_markdown());
+    let preset = args.get("preset", "tiny");
+    let world = args.usize("world", 4)?;
+    if let Ok(engine) = Engine::load_preset(&preset) {
+        println!(
+            "# Fig. 3 companion — REAL execution ({preset}, W={world}, {} layers)\n",
+            engine.model.n_layers
+        );
+        let iters = args.usize("iters", 3)?;
+        println!("{}", bench::fig3_realexec(&engine, world, iters)?.to_markdown());
+    }
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "small");
+    let steps = args.usize("steps", 40)?;
+    let engine = Engine::load_preset(&preset)?;
+    println!("# Table 2 — convergence ({preset}, {steps} steps, synthetic corpus)\n");
+    println!("{}", bench::table2_convergence(&engine, steps)?.to_markdown());
+    Ok(())
+}
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "small");
+    let steps = args.usize("steps", 40)?;
+    let engine = Engine::load_preset(&preset)?;
+    println!("# Table 3 — bidirectional LM ({preset}, {steps} steps)\n");
+    println!("{}", bench::table3_bidirectional(&engine, steps)?.to_markdown());
+    Ok(())
+}
+
+fn cmd_table4(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "small");
+    let steps = args.usize("steps", 40)?;
+    let engine = Engine::load_preset(&preset)?;
+    println!("# Table 4 — hybrid-ratio ablation ({preset}, {steps} steps)\n");
+    println!("{}", bench::table4_hybrid_ratio(&engine, steps)?.to_markdown());
+    Ok(())
+}

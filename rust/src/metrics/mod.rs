@@ -1,0 +1,133 @@
+//! Reporting helpers: throughput meters and markdown/CSV table writers
+//! shared by the benchmark harness binaries.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Simple throughput meter.
+pub struct Throughput {
+    t0: Instant,
+    units: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Throughput {
+        Throughput { t0: Instant::now(), units: 0 }
+    }
+
+    pub fn add(&mut self, units: u64) {
+        self.units += units;
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        self.units as f64 / self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// Markdown table builder (the bench harness prints paper-shaped tables).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], w: &[usize], out: &mut String| {
+            out.push('|');
+            for (c, width) in cells.iter().zip(w) {
+                let _ = write!(out, " {c:width$} |");
+            }
+            out.push('\n');
+        };
+        line(&self.header, &w, &mut out);
+        out.push('|');
+        for width in &w {
+            let _ = write!(out, "{}|", "-".repeat(width + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            line(r, &w, &mut out);
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",") + "\n";
+        for r in &self.rows {
+            out += &(r.join(",") + "\n");
+        }
+        out
+    }
+}
+
+/// Human formatting helpers.
+pub fn fmt_si(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}K", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+pub fn fmt_seq(tokens: usize) -> String {
+    if tokens % 1024 == 0 {
+        format!("{}K", tokens / 1024)
+    } else {
+        tokens.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | bb |"));
+        assert!(md.contains("| 1 | 2  |"));
+        assert_eq!(t.to_csv(), "a,bb\n1,2\n");
+    }
+
+    #[test]
+    fn si_format() {
+        assert_eq!(fmt_si(1500.0), "1.5K");
+        assert_eq!(fmt_si(2_000_000.0), "2.00M");
+        assert_eq!(fmt_seq(2048 * 1024), "2048K");
+    }
+}

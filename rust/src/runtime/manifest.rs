@@ -1,0 +1,178 @@
+//! Flat-text manifest parser (`artifacts/<preset>/manifest.txt`).
+//!
+//! Format (written by `python/compile/aot.py`):
+//! ```text
+//! lasp2-manifest 1
+//! preset tiny
+//! field d_model 64
+//! artifact l_part1_basic l_part1_basic.hlo.txt
+//! in x f32 32,64
+//! out qt f32 32,2,32
+//! end
+//! ```
+//! Chosen over JSON so the runtime stays std-only (the offline registry
+//! carries no serde).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            _ => bail!("unknown dtype {s}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+impl ArtifactMeta {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub fields: HashMap<String, usize>,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse_file(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some("lasp2-manifest 1") => {}
+            other => bail!("bad manifest header {other:?}"),
+        }
+        let mut preset = String::new();
+        let mut fields = HashMap::new();
+        let mut artifacts = HashMap::new();
+        let mut cur: Option<ArtifactMeta> = None;
+        for (ln, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let kw = it.next().unwrap();
+            let rest: Vec<&str> = it.collect();
+            match kw {
+                "preset" => preset = rest.first().context("preset")?.to_string(),
+                "field" => {
+                    let (k, v) = (rest[0], rest[1]);
+                    fields.insert(k.to_string(), v.parse::<usize>()?);
+                }
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("line {ln}: nested artifact");
+                    }
+                    cur = Some(ArtifactMeta {
+                        name: rest[0].to_string(),
+                        file: rest[1].to_string(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "in" | "out" => {
+                    let a = cur.as_mut().with_context(|| format!("line {ln}: {kw} outside artifact"))?;
+                    let meta = TensorMeta {
+                        name: rest[0].to_string(),
+                        dtype: DType::parse(rest[1])?,
+                        shape: rest[2]
+                            .split(',')
+                            .filter(|s| !s.is_empty())
+                            .map(|s| s.parse::<usize>())
+                            .collect::<std::result::Result<_, _>>()?,
+                    };
+                    if kw == "in" {
+                        a.inputs.push(meta);
+                    } else {
+                        a.outputs.push(meta);
+                    }
+                }
+                "end" => {
+                    let a = cur.take().with_context(|| format!("line {ln}: end outside artifact"))?;
+                    artifacts.insert(a.name.clone(), a);
+                }
+                other => bail!("line {ln}: unknown keyword {other}"),
+            }
+        }
+        if cur.is_some() {
+            bail!("unterminated artifact");
+        }
+        Ok(Manifest { preset, fields, artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "lasp2-manifest 1\npreset tiny\nfield d_model 64\n\
+artifact foo foo.hlo.txt\nin x f32 32,64\nin t i32 1\nout y f32 32,64\nend\n";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.fields["d_model"], 64);
+        let a = &m.artifacts["foo"];
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![32, 64]);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.outputs[0].name, "y");
+        assert_eq!(a.input_index("t"), Some(1));
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Manifest::parse("nope\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        assert!(Manifest::parse("lasp2-manifest 1\nartifact a b\n").is_err());
+    }
+
+    #[test]
+    fn rejects_orphan_in() {
+        assert!(Manifest::parse("lasp2-manifest 1\nin x f32 1\n").is_err());
+    }
+}

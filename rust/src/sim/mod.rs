@@ -1,0 +1,267 @@
+//! Discrete-event cluster simulator: evaluates scheduler `Plan`s at the
+//! paper's testbed scale (up to 128 GPUs, 4096K-token sequences), which the
+//! CPU-PJRT real-execution path cannot reach.
+//!
+//! The cost model is an α–β (latency–bandwidth) link model plus an
+//! effective-FLOPs compute model, calibrated so that LASP-2 on the paper's
+//! Table-6 anchor point (16 GPUs, 16K tokens) lands near the reported
+//! throughput.  We claim SHAPE fidelity (who wins, by roughly what factor,
+//! where the crossovers and OOM frontier fall), not absolute numbers —
+//! the substrate is a simulator, not 16 DGX-A100s (see DESIGN.md).
+
+use crate::config::Scheduler;
+use crate::coordinator::plan::{build_plan, Plan, PlanOp, SimShape};
+
+/// Hardware model of the simulated cluster (defaults: DGX-A100 pod).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// achievable FLOP/s per device (peak x MFU)
+    pub flops_per_sec: f64,
+    /// collective launch latency (one NCCL kernel)
+    pub alpha_collective: f64,
+    /// P2P op latency (send/recv pair launch + sync) — the paper's "too
+    /// many small P2P operators" penalty
+    pub alpha_p2p: f64,
+    /// intra-node bandwidth (NVSwitch), bytes/s per device
+    pub beta_intra: f64,
+    /// inter-node bandwidth (IB), bytes/s per device
+    pub beta_inter: f64,
+    /// devices per node (bandwidth tier boundary)
+    pub devices_per_node: usize,
+    /// per-device memory capacity (bytes) -> OOM frontier
+    pub mem_capacity: f64,
+    /// fixed per-iteration overhead: optimizer step over ~1B params, data
+    /// loading, launch storm, logging — calibrated from Table 6's
+    /// near-constant iteration time at short sequences (~1.6 s)
+    pub fixed_overhead: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            // 312 TFLOP/s bf16 peak x ~0.42 MFU (calibrated on Table 6's
+            // 64-GPU/1024K row)
+            flops_per_sec: 312e12 * 0.42,
+            alpha_collective: 12e-6,
+            alpha_p2p: 30e-6,
+            beta_intra: 250e9,
+            beta_inter: 22e9,
+            devices_per_node: 8,
+            mem_capacity: 80e9,
+            fixed_overhead: 1.55,
+        }
+    }
+}
+
+impl CostModel {
+    /// Topology-aware effective bandwidth: in a ring/collective over W
+    /// devices laid out 8-per-node, only 1/node-size of the hops cross the
+    /// slow inter-node links.
+    fn beta(&self, world: usize) -> f64 {
+        if world <= self.devices_per_node {
+            self.beta_intra
+        } else {
+            let f_inter = 1.0 / self.devices_per_node as f64;
+            1.0 / ((1.0 - f_inter) / self.beta_intra + f_inter / self.beta_inter)
+        }
+    }
+
+    fn compute_time(&self, flops: f64) -> f64 {
+        flops / self.flops_per_sec
+    }
+
+    /// Ring-AllGather: single launch, (W-1) pipelined slices.
+    fn allgather_time(&self, bytes_per_rank: f64, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        self.alpha_collective
+            + (world as f64 - 1.0) * bytes_per_rank / self.beta(world)
+    }
+
+    /// One explicit P2P hop (launch + transfer).
+    fn p2p_time(&self, bytes: f64, world: usize) -> f64 {
+        self.alpha_p2p + bytes / self.beta(world)
+    }
+}
+
+/// Result of simulating one configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SimResult {
+    pub iter_time: f64,
+    pub tokens_per_sec: f64,
+    pub mem_gb: f64,
+    pub oom: bool,
+    pub comm_time: f64,
+    pub compute_time: f64,
+}
+
+fn eval_ops(ops: &[PlanOp], cm: &CostModel, world: usize, comm: &mut f64, comp: &mut f64) -> f64 {
+    let mut t = 0.0;
+    for op in ops {
+        match op {
+            PlanOp::Compute { flops, .. } => {
+                let dt = cm.compute_time(*flops);
+                *comp += dt;
+                t += dt;
+            }
+            PlanOp::AllGather { bytes_per_rank } => {
+                let dt = cm.allgather_time(*bytes_per_rank, world);
+                *comm += dt;
+                t += dt;
+            }
+            PlanOp::P2pHop { bytes } => {
+                let dt = cm.p2p_time(*bytes, world);
+                *comm += dt;
+                t += dt;
+            }
+            PlanOp::Sequential { hops, per_hop_flops, bytes } => {
+                // serialized chain across ranks: the last rank waits for
+                // every hop (LASP-1's low computation parallelism)
+                let dt = *hops as f64
+                    * (cm.p2p_time(*bytes, world) + cm.compute_time(*per_hop_flops));
+                *comm += *hops as f64 * cm.p2p_time(*bytes, world);
+                *comp += *hops as f64 * cm.compute_time(*per_hop_flops);
+                t += dt;
+            }
+            PlanOp::Overlap { a, b } => {
+                let mut ca = 0.0;
+                let mut pa = 0.0;
+                let ta = eval_ops(a, cm, world, &mut ca, &mut pa);
+                let mut cb = 0.0;
+                let mut pb = 0.0;
+                let tb = eval_ops(b, cm, world, &mut cb, &mut pb);
+                // attribute the hidden branch's time as overlapped
+                *comm += ca + cb;
+                *comp += pa + pb;
+                t += ta.max(tb);
+            }
+        }
+    }
+    t
+}
+
+/// Simulate one plan on the cost model.
+pub fn simulate_plan(plan: &Plan, shape: &SimShape, cm: &CostModel) -> SimResult {
+    let mut comm = 0.0;
+    let mut comp = 0.0;
+    let iter_time = cm.fixed_overhead
+        + eval_ops(&plan.ops, cm, shape.world, &mut comm, &mut comp);
+    let tokens = shape.batch * shape.seq_len();
+    SimResult {
+        iter_time,
+        tokens_per_sec: tokens / iter_time,
+        mem_gb: plan.mem_bytes / 1e9,
+        oom: plan.mem_bytes > cm.mem_capacity,
+        comm_time: comm,
+        compute_time: comp,
+    }
+}
+
+/// Convenience: build + simulate.
+pub fn simulate(
+    shape: &SimShape,
+    sched: Scheduler,
+    gather_splits: usize,
+    cm: &CostModel,
+) -> SimResult {
+    let plan = build_plan(shape, sched, gather_splits);
+    simulate_plan(&plan, shape, cm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheduler as S;
+
+    fn fig3_shape(seq_k: usize) -> SimShape {
+        SimShape::linear_llama3_1b(64, seq_k * 1024, 1)
+    }
+
+    #[test]
+    fn lasp2_beats_lasp1_beats_ring_at_long_seq() {
+        // Fig. 3's ordering at 2048K over 64 GPUs.
+        let cm = CostModel::default();
+        let s = fig3_shape(2048);
+        let l2 = simulate(&s, S::Lasp2Overlap, 1, &cm).tokens_per_sec;
+        let l1 = simulate(&s, S::Lasp1, 1, &cm).tokens_per_sec;
+        let ra = simulate(&s, S::RingAttention, 1, &cm).tokens_per_sec;
+        let ms = simulate(&s, S::MegatronSp, 1, &cm).tokens_per_sec;
+        assert!(l2 > l1, "LASP-2 {l2} vs LASP-1 {l1}");
+        assert!(l1 > ra, "LASP-1 {l1} vs Ring {ra}");
+        assert!(l2 > ms, "LASP-2 {l2} vs Megatron-SP {ms}");
+    }
+
+    #[test]
+    fn advantage_grows_with_seq_len() {
+        // the paper: 17.8% over Ring at 512K -> 36.6% at 2048K; we assert
+        // the monotone-shape claim (gap ratio grows with N).
+        let cm = CostModel::default();
+        let gap = |k: usize| {
+            let s = fig3_shape(k);
+            simulate(&s, S::Lasp2Overlap, 1, &cm).tokens_per_sec
+                / simulate(&s, S::RingAttention, 1, &cm).tokens_per_sec
+        };
+        assert!(gap(2048) > gap(512), "{} vs {}", gap(2048), gap(512));
+    }
+
+    #[test]
+    fn memory_scales_down_with_world() {
+        // Fig. 4 / Table 6: same N, more GPUs -> less memory per GPU.
+        let cm = CostModel::default();
+        let m32 = simulate(
+            &SimShape::linear_llama3_1b(32, 512 * 1024, 1), S::Lasp2, 1, &cm);
+        let m128 = simulate(
+            &SimShape::linear_llama3_1b(128, 512 * 1024, 1), S::Lasp2, 1, &cm);
+        assert!(m128.mem_gb < m32.mem_gb);
+    }
+
+    #[test]
+    fn oom_frontier_matches_table6_shape() {
+        // Table 6: 512K OOMs on 16 GPUs but fits on 32; 2048K needs 128.
+        let cm = CostModel::default();
+        let fits = |w: usize, k: usize| {
+            !simulate(&SimShape::linear_llama3_1b(w, k * 1024, 1), S::Lasp2, 1, &cm).oom
+        };
+        assert!(fits(16, 128));
+        assert!(!fits(16, 512));
+        assert!(fits(32, 512));
+        assert!(!fits(64, 2048));
+        assert!(fits(128, 2048));
+        assert!(!fits(128, 4096)); // the paper's all-OOM row
+    }
+
+    #[test]
+    fn linear_scalability_of_throughput() {
+        // Fig. 4: throughput roughly doubles when both N and W double.
+        let cm = CostModel::default();
+        let t1 = simulate(
+            &SimShape::linear_llama3_1b(32, 256 * 1024, 1), S::Lasp2, 1, &cm)
+            .tokens_per_sec;
+        let t2 = simulate(
+            &SimShape::linear_llama3_1b(64, 512 * 1024, 1), S::Lasp2, 1, &cm)
+            .tokens_per_sec;
+        let ratio = t2 / t1;
+        assert!(ratio > 1.6 && ratio < 2.4, "{ratio}");
+    }
+
+    #[test]
+    fn split_gather_slightly_slower() {
+        // Table 5: more splits -> slightly lower throughput (launch alphas).
+        let cm = CostModel::default();
+        let s = SimShape::linear_llama3_1b(64, 1024 * 1024, 1);
+        let t1 = simulate(&s, S::Lasp2, 1, &cm).tokens_per_sec;
+        let t64 = simulate(&s, S::Lasp2, 64, &cm).tokens_per_sec;
+        assert!(t64 < t1);
+        assert!((t1 - t64) / t1 < 0.05, "effect should be small: {t1} {t64}");
+    }
+
+    #[test]
+    fn overlap_helps() {
+        let cm = CostModel::default();
+        let s = fig3_shape(256);
+        let a = simulate(&s, S::Lasp2, 1, &cm).iter_time;
+        let b = simulate(&s, S::Lasp2Overlap, 1, &cm).iter_time;
+        assert!(b <= a);
+    }
+}

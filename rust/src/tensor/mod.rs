@@ -1,0 +1,418 @@
+//! Minimal row-major f32 tensor used on the coordinator side.
+//!
+//! The heavy math lives in the AOT-compiled XLA artifacts; the coordinator
+//! only needs small dense ops for (a) the gated prefix-combine of memory
+//! states after the AllGather (Eq. 8/9 generalized), (b) verification
+//! against oracles in tests, and (c) building inputs.  Kept dependency-free
+//! and fully unit-tested.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, "{:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs {} elems",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar1(v: f32) -> Self {
+        Self { shape: vec![1], data: vec![v] }
+    }
+
+    /// Deterministic pseudo-random tensor (xorshift), for tests/benches.
+    pub fn randn(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let mut data = Vec::with_capacity(n);
+        let mut next = || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for _ in 0..n {
+            // Box-Muller
+            let u1 = next().max(1e-12);
+            let u2 = next();
+            data.push(
+                ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos())
+                    as f32,
+            );
+        }
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D matmul: [m, k] x [k, n] -> [m, n].
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul dims {:?} x {:?}", self.shape, rhs.shape);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[p * n..(p + 1) * n];
+                let o = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    o[j] += a * row[j];
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    pub fn add(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape, rhs.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Tensor::new(self.shape.clone(), data)
+    }
+
+    pub fn add_assign(&mut self, rhs: &Tensor) {
+        assert_eq!(self.shape, rhs.shape);
+        for (a, b) in self.data.iter_mut().zip(&rhs.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape, rhs.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Tensor::new(self.shape.clone(), data)
+    }
+
+    pub fn mul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape, rhs.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| a * b)
+            .collect();
+        Tensor::new(self.shape.clone(), data)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor::new(self.shape.clone(), self.data.iter().map(|a| a * s).collect())
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Max |a - b| / (1 + |b|) over all elements.
+    pub fn max_rel_err(&self, rhs: &Tensor) -> f32 {
+        assert_eq!(self.shape, rhs.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn allclose(&self, rhs: &Tensor, tol: f32) -> bool {
+        self.shape == rhs.shape && self.max_rel_err(rhs) <= tol
+    }
+
+    /// Split along axis 0 into `parts` equal tensors.
+    pub fn chunk0(&self, parts: usize) -> Vec<Tensor> {
+        assert!(!self.shape.is_empty() && self.shape[0] % parts == 0);
+        let rows = self.shape[0] / parts;
+        let stride: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = rows;
+        (0..parts)
+            .map(|p| {
+                Tensor::new(
+                    shape.clone(),
+                    self.data[p * rows * stride..(p + 1) * rows * stride].to_vec(),
+                )
+            })
+            .collect()
+    }
+
+    /// Concatenate along axis 0.
+    pub fn cat0(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let mut shape = parts[0].shape.clone();
+        let tail = &parts[0].shape[1..];
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            assert_eq!(&p.shape[1..], tail);
+            rows += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        shape[0] = rows;
+        Tensor::new(shape, data)
+    }
+}
+
+/// The LASP-2 memory state of one chunk for one layer:
+/// `m`: [H, fk, dh] state contribution P_t, `a`: [H, fk] total decay carry.
+/// For non-decay variants `a` is all-ones and the combine degenerates to the
+/// paper's plain Sum / PrefixSum (Alg. 1 line 7 / Alg. 2 line 9).
+#[derive(Clone, Debug)]
+pub struct ChunkState {
+    pub m: Tensor,
+    pub a: Tensor,
+}
+
+impl ChunkState {
+    pub fn zero_like(other: &ChunkState) -> ChunkState {
+        ChunkState {
+            m: Tensor::zeros(other.m.shape()),
+            a: Tensor::ones(other.a.shape()),
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.m.byte_size() + self.a.byte_size()
+    }
+}
+
+/// The gated prefix-combine monoid:
+///   (a1, m1) . (a2, m2) = (a1*a2, a2 (x) m1 + m2)
+/// `m`: [H, fk, dh], `a`: [H, fk] broadcast over the trailing dh axis.
+/// This is what each device evaluates after the AllGather; associativity is
+/// proptest-checked (it underpins both the recursion in Eq. 9 and the split
+/// -gather ablation of Table 5).
+pub fn state_combine(left: &ChunkState, right: &ChunkState) -> ChunkState {
+    let (ms, as_) = (left.m.shape(), left.a.shape());
+    assert_eq!(ms, right.m.shape());
+    assert_eq!(as_, right.a.shape());
+    let dh = ms[ms.len() - 1];
+    let mut m = right.m.clone();
+    let a2 = right.a.data();
+    let m1 = left.m.data();
+    for (i, mv) in m.data_mut().iter_mut().enumerate() {
+        *mv += a2[i / dh] * m1[i];
+    }
+    ChunkState { m, a: left.a.mul(&right.a) }
+}
+
+/// Exclusive gated prefix states M_{1:t-1} for every chunk t, plus total.
+/// (What LASP-2 computes on every device after its single AllGather.)
+pub fn prefix_states(states: &[ChunkState]) -> (Vec<ChunkState>, ChunkState) {
+    let mut acc = ChunkState::zero_like(&states[0]);
+    let mut out = Vec::with_capacity(states.len());
+    for s in states {
+        out.push(acc.clone());
+        acc = state_combine(&acc, s);
+    }
+    (out, acc)
+}
+
+/// Suffix sums of gradient states dM_{t+1:T} (Alg. 4 line 9; basic variant,
+/// plain sums).
+pub fn suffix_dstates(dstates: &[Tensor]) -> Vec<Tensor> {
+    let t = dstates.len();
+    let mut out = vec![Tensor::zeros(dstates[0].shape()); t];
+    let mut acc = Tensor::zeros(dstates[0].shape());
+    for i in (0..t.saturating_sub(1)).rev() {
+        acc.add_assign(&dstates[i + 1]);
+        out[i] = acc.clone();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_vs_naive_random() {
+        let a = Tensor::randn(&[7, 5], 1);
+        let b = Tensor::randn(&[5, 9], 2);
+        let c = a.matmul(&b);
+        for i in 0..7 {
+            for j in 0..9 {
+                let mut s = 0.0;
+                for p in 0..5 {
+                    s += a.data()[i * 5 + p] * b.data()[p * 9 + j];
+                }
+                assert!((c.data()[i * 9 + j] - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::randn(&[4, 6], 3);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn chunk_cat_roundtrip() {
+        let a = Tensor::randn(&[8, 3], 4);
+        let parts = a.chunk0(4);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(Tensor::cat0(&parts), a);
+    }
+
+    #[test]
+    fn combine_identity() {
+        let s = ChunkState { m: Tensor::randn(&[2, 4, 4], 5), a: Tensor::ones(&[2, 4]) };
+        let id = ChunkState::zero_like(&s);
+        let r = state_combine(&id, &s);
+        assert!(r.m.allclose(&s.m, 1e-6));
+        let r2 = state_combine(&s, &id);
+        assert!(r2.m.allclose(&s.m, 1e-6));
+    }
+
+    #[test]
+    fn combine_matches_sum_when_no_decay() {
+        // a = 1 everywhere -> prefix states are plain prefix sums (Alg. 2).
+        let states: Vec<ChunkState> = (0..4)
+            .map(|i| ChunkState {
+                m: Tensor::randn(&[2, 3, 3], i as u64 + 10),
+                a: Tensor::ones(&[2, 3]),
+            })
+            .collect();
+        let (prefixes, total) = prefix_states(&states);
+        let mut acc = Tensor::zeros(&[2, 3, 3]);
+        for (i, s) in states.iter().enumerate() {
+            assert!(prefixes[i].m.allclose(&acc, 1e-5), "chunk {i}");
+            acc.add_assign(&s.m);
+        }
+        assert!(total.m.allclose(&acc, 1e-5));
+    }
+
+    #[test]
+    fn combine_associative_with_decay() {
+        let mk = |seed: u64| ChunkState {
+            m: Tensor::randn(&[2, 3, 4], seed),
+            a: Tensor::new(
+                vec![2, 3],
+                Tensor::randn(&[2, 3], seed + 100)
+                    .data()
+                    .iter()
+                    .map(|v| 0.9 + 0.1 * (v.tanh() * 0.5 + 0.5))
+                    .collect(),
+            ),
+        };
+        let (a, b, c) = (mk(1), mk(2), mk(3));
+        let l = state_combine(&state_combine(&a, &b), &c);
+        let r = state_combine(&a, &state_combine(&b, &c));
+        assert!(l.m.allclose(&r.m, 1e-5));
+        assert!(l.a.allclose(&r.a, 1e-5));
+    }
+
+    #[test]
+    fn suffix_sums() {
+        let ds: Vec<Tensor> = (0..4).map(|i| Tensor::full(&[2, 2], i as f32)).collect();
+        let suf = suffix_dstates(&ds);
+        // dM_{t+1:T}: t=0 -> 1+2+3=6, t=1 -> 5, t=2 -> 3, t=3 -> 0
+        assert_eq!(suf[0].data()[0], 6.0);
+        assert_eq!(suf[1].data()[0], 5.0);
+        assert_eq!(suf[2].data()[0], 3.0);
+        assert_eq!(suf[3].data()[0], 0.0);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        assert_eq!(Tensor::randn(&[10], 7), Tensor::randn(&[10], 7));
+        assert_ne!(Tensor::randn(&[10], 7), Tensor::randn(&[10], 8));
+    }
+}

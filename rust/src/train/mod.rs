@@ -1,0 +1,200 @@
+//! Training loop driver: runs the AOT `train_step_*` artifact (full
+//! forward + backward + Adam, compiled once by XLA) from rust, feeding
+//! synthetic batches and logging the loss curve.  Used by the convergence
+//! experiments (Tables 2/3/4) and the end-to-end example.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Pattern, Variant};
+use crate::coordinator::{param_specs, Params};
+use crate::data::BatchIter;
+use crate::runtime::{Engine, Value};
+use crate::tensor::Tensor;
+
+/// Cosine LR schedule with linear warmup (paper Sec. 4.1 hyperparameters).
+pub fn lr_schedule(step: usize, total: usize, peak: f32, min_lr: f32) -> f32 {
+    let warmup = (total / 10).max(1);
+    if step < warmup {
+        return peak * (step + 1) as f32 / warmup as f32;
+    }
+    let t = (step - warmup) as f32 / (total - warmup).max(1) as f32;
+    min_lr + 0.5 * (peak - min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub peak_lr: f32,
+    pub min_lr: f32,
+    pub seed: u64,
+    /// bidirectional (MLM) task — Table 3
+    pub mlm: bool,
+    pub log_every: usize,
+    /// optional CSV path for the loss curve
+    pub csv: Option<String>,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            steps: 100,
+            peak_lr: 3e-3,
+            min_lr: 1e-6,
+            seed: 0,
+            mlm: false,
+            log_every: 10,
+            csv: None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub final_loss: f32,
+    /// mean loss over the last 10% of steps (the "converged" metric)
+    pub tail_loss: f32,
+    pub tokens_per_sec: f64,
+    pub params: usize,
+    pub steps: usize,
+}
+
+/// Train a (variant, pattern) model with the given train-step artifact.
+///
+/// `artifact_tag` example: "basic_pure" -> uses `init_basic_pure` +
+/// `train_step_basic_pure`.
+pub fn train(
+    engine: &Arc<Engine>,
+    variant: Variant,
+    pattern: &Pattern,
+    artifact_tag: &str,
+    opts: &TrainOpts,
+) -> Result<TrainReport> {
+    let cfg = &engine.model;
+    let init_name = format!("init_{artifact_tag}");
+    let step_name = format!("train_step_{artifact_tag}");
+    let params = Params::from_init_artifact(
+        engine, variant, pattern, &init_name, opts.seed as i32,
+    )
+    .with_context(|| format!("init artifact {init_name}"))?;
+    let n_params = params.len();
+    let total_elems = params.n_elems();
+    let specs = param_specs(cfg, variant, pattern);
+
+    let step_exe = engine.artifact(&step_name)?;
+    let (bsz, seq) = (cfg.train_batch, cfg.train_seq);
+    let mut data = if opts.mlm {
+        BatchIter::mlm(cfg.vocab, bsz, seq, opts.seed)
+    } else {
+        BatchIter::causal(cfg.vocab, bsz, seq, opts.seed)
+    };
+
+    // state: flat params + adam moments
+    let mut flat: Vec<Tensor> = specs
+        .iter()
+        .map(|(n, _, _)| params.get(n).unwrap().clone())
+        .collect();
+    let mut mom: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
+    let mut vel: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
+
+    let mut csv = match &opts.csv {
+        Some(p) => {
+            if let Some(dir) = Path::new(p).parent() {
+                std::fs::create_dir_all(dir).ok();
+            }
+            let mut f = std::fs::File::create(p)?;
+            writeln!(f, "step,loss,lr,tokens_per_sec")?;
+            Some(f)
+        }
+        None => None,
+    };
+
+    let mut losses = Vec::with_capacity(opts.steps);
+    let t0 = Instant::now();
+    let mut tokens_seen = 0usize;
+    for it in 0..opts.steps {
+        let b = data.next_batch();
+        let lr = lr_schedule(it, opts.steps, opts.peak_lr, opts.min_lr);
+        let mut ins: Vec<Value> = Vec::with_capacity(3 * n_params + 5);
+        ins.extend(flat.iter().map(|t| Value::F32(t.clone())));
+        ins.extend(mom.iter().map(|t| Value::F32(t.clone())));
+        ins.extend(vel.iter().map(|t| Value::F32(t.clone())));
+        ins.push(Value::I32(b.tokens.clone(), vec![bsz, seq]));
+        ins.push(Value::I32(b.targets.clone(), vec![bsz, seq]));
+        ins.push(Value::F32(Tensor::new(vec![bsz, seq], b.loss_mask.clone())));
+        ins.push(Value::F32(Tensor::scalar1(lr)));
+        ins.push(Value::F32(Tensor::scalar1((it + 1) as f32)));
+        let mut outs = step_exe.run(&ins)?;
+        let loss_t = outs.pop().unwrap();
+        let loss = loss_t.data()[0];
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {it}: {loss}");
+        vel = outs.split_off(2 * n_params);
+        mom = outs.split_off(n_params);
+        flat = outs;
+        tokens_seen += bsz * seq;
+        losses.push(loss);
+        let elapsed = t0.elapsed().as_secs_f64();
+        let tps = tokens_seen as f64 / elapsed;
+        if let Some(f) = csv.as_mut() {
+            writeln!(f, "{it},{loss},{lr},{tps:.1}")?;
+        }
+        if opts.log_every > 0 && (it % opts.log_every == 0 || it + 1 == opts.steps) {
+            eprintln!(
+                "[train {artifact_tag}] step {it:>4} loss {loss:.4} lr {lr:.2e} ({tps:.0} tok/s)"
+            );
+        }
+    }
+    let tail_n = (opts.steps / 10).max(1);
+    let tail_loss =
+        losses[opts.steps - tail_n..].iter().sum::<f32>() / tail_n as f32;
+    Ok(TrainReport {
+        final_loss: *losses.last().unwrap(),
+        tail_loss,
+        tokens_per_sec: tokens_seen as f64 / t0.elapsed().as_secs_f64(),
+        losses,
+        params: total_elems,
+        steps: opts.steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let total = 100;
+        // warmup rises
+        assert!(lr_schedule(0, total, 1e-3, 1e-6) < lr_schedule(5, total, 1e-3, 1e-6));
+        // peak near end of warmup
+        let peak = lr_schedule(10, total, 1e-3, 1e-6);
+        assert!((peak - 1e-3).abs() < 1e-4);
+        // decays to ~min
+        assert!(lr_schedule(99, total, 1e-3, 1e-6) < 1e-4);
+    }
+
+    #[test]
+    fn tiny_training_reduces_loss() {
+        let engine = Engine::load_preset("tiny").expect("tiny artifacts");
+        let pattern = Pattern("LL".into());
+        let opts = TrainOpts {
+            steps: 20,
+            peak_lr: 3e-3,
+            log_every: 0,
+            ..Default::default()
+        };
+        let rep = train(&engine, Variant::Basic, &pattern, "basic_pure", &opts)
+            .unwrap();
+        assert!(rep.losses.iter().all(|l| l.is_finite()));
+        assert!(
+            rep.tail_loss < rep.losses[0],
+            "no learning: {:?}",
+            rep.losses
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! §3.4 theoretical cost analysis, reproduced as executable assertions,
+//! plus calibration anchors for the simulator against Table 6.
+
+use lasp2::config::Scheduler;
+use lasp2::coordinator::plan::{build_plan, SimShape};
+use lasp2::sim::{simulate, CostModel};
+
+/// Paper §3.4: per-iteration communication steps.
+///   LASP-1: 2(W-1)    LASP-2: 2        (per linear-attention layer)
+#[test]
+fn cost_analysis_steps() {
+    for w in [2usize, 8, 64, 128] {
+        let mut s = SimShape::linear_llama3_1b(w, w * 8192, 16);
+        s.n_linear_layers = 1.0;
+        let l2 = build_plan(&s, Scheduler::Lasp2, 1).account(w);
+        assert_eq!(l2.collective_steps, 2);
+        assert_eq!(l2.p2p_steps, 0);
+        let l1 = build_plan(&s, Scheduler::Lasp1, 1).account(w);
+        assert_eq!(l1.p2p_steps, 2 * (w - 1));
+    }
+}
+
+/// Paper §3.4: communication traffic per step is BHd² for both methods,
+/// so over I iterations LASP-1 moves 2(W-1)IBHd² and LASP-2 2IBHd² in
+/// STEP-count terms (ring-allgather moves the same bytes but in one
+/// pipelined collective).
+#[test]
+fn cost_analysis_traffic_model() {
+    let w = 64;
+    let mut s = SimShape::linear_llama3_1b(w, w * 8192, 16);
+    s.n_linear_layers = 1.0;
+    let state = s.state_bytes();
+    let l1 = build_plan(&s, Scheduler::Lasp1, 1).account(w);
+    let l2 = build_plan(&s, Scheduler::Lasp2, 1).account(w);
+    // LASP-1: 2(W-1) hops x BHd² bytes each
+    assert!((l1.bytes - 2.0 * (w as f64 - 1.0) * state).abs() < 1.0);
+    // LASP-2: 2 ring-allgathers, each moving (W-1) x BHd² per rank
+    assert!((l2.bytes - 2.0 * (w as f64 - 1.0) * state).abs() < 1.0);
+}
+
+/// Paper §3.4's worked example: Linear-Llama3-1B, B=16, H=16, d=2048
+/// -> BHd² ≈ 1.07B elements ≈ 2.14 GB in FP16 (we carry f32 at runtime,
+/// the element count is what's asserted).
+#[test]
+fn cost_analysis_state_size_example() {
+    let s = SimShape {
+        d_model: 2048.0,
+        n_heads: 16.0,
+        head_dim: 2048.0,
+        feat_dim: 2048.0,
+        ffn_dim: 5504.0,
+        n_linear_layers: 16.0,
+        n_std_layers: 0.0,
+        batch: 16.0,
+        world: 64,
+        chunk: 1024.0,
+    };
+    let elems = s.state_bytes() / 4.0;
+    let fp16_gb = elems * 2.0 / 1e9;
+    assert!((elems / 1.07e9 - 1.0).abs() < 0.01);
+    assert!((fp16_gb / 2.14 - 1.0).abs() < 0.02);
+}
+
+/// The simulator's Fig.-3 ordering and gap growth (the paper's headline:
+/// +17.8% over Ring at 512K -> +36.6% at 2048K; +7.3% -> +15.2% over
+/// LASP-1).  We assert ordering, monotone growth, and that the gaps are in
+/// a plausible band (5%..200%), not the exact percentages.
+#[test]
+fn fig3_shape_holds() {
+    let cm = CostModel::default();
+    let gaps: Vec<(f64, f64)> = [512usize, 1024, 2048]
+        .iter()
+        .map(|&k| {
+            let s = SimShape::linear_llama3_1b(64, k * 1024, 1);
+            let l2 = simulate(&s, Scheduler::Lasp2Overlap, 1, &cm).tokens_per_sec;
+            let l1 = simulate(&s, Scheduler::Lasp1, 1, &cm).tokens_per_sec;
+            let ra = simulate(&s, Scheduler::RingAttention, 1, &cm).tokens_per_sec;
+            (l2 / ra - 1.0, l2 / l1 - 1.0)
+        })
+        .collect();
+    for (g_ring, g_lasp1) in &gaps {
+        // Ring moves O(C)-sized KV blocks with per-hop launches: our model
+        // penalizes it more than the paper's testbed did (documented in
+        // EXPERIMENTS.md); the SHAPE claims are the ordering + growth.
+        assert!(*g_ring > 0.05 && *g_ring < 4.0, "ring gap {g_ring}");
+        assert!(*g_lasp1 > 0.0 && *g_lasp1 < 1.0, "lasp1 gap {g_lasp1}");
+    }
+    assert!(gaps[2].0 > gaps[0].0, "ring gap must grow with seq len");
+    assert!(gaps[2].1 > gaps[0].1, "lasp1 gap must grow with seq len");
+}
+
+/// Table 6 calibration anchor: LASP-2 at (16 GPUs, 16K tokens) reported
+/// 9530 tokens/s.  The simulator must land within 2x (we claim shape, not
+/// absolute numbers — but the anchor keeps the model honest).
+#[test]
+fn table6_throughput_anchor() {
+    let cm = CostModel::default();
+    let s = SimShape::linear_llama3_1b(16, 16 * 1024, 1);
+    let r = simulate(&s, Scheduler::Lasp2Overlap, 1, &cm);
+    assert!(
+        r.tokens_per_sec > 9530.0 / 2.0 && r.tokens_per_sec < 9530.0 * 2.0,
+        "anchor tokens/s {}",
+        r.tokens_per_sec
+    );
+}
+
+/// Table 6 memory anchor: the 1B model's per-GPU footprint at short
+/// sequences is ~25.6 GB and grows with C; 512K on 16 GPUs OOMs.
+#[test]
+fn table6_memory_anchor() {
+    let cm = CostModel::default();
+    let base = simulate(
+        &SimShape::linear_llama3_1b(16, 2 * 1024, 1), Scheduler::Lasp2, 1, &cm);
+    assert!((base.mem_gb / 25.6 - 1.0).abs() < 0.15, "base mem {}", base.mem_gb);
+    let m256 = simulate(
+        &SimShape::linear_llama3_1b(16, 256 * 1024, 1), Scheduler::Lasp2, 1, &cm);
+    assert!((m256.mem_gb / 57.8 - 1.0).abs() < 0.3, "256K mem {}", m256.mem_gb);
+    assert!(!m256.oom);
+    let m512 = simulate(
+        &SimShape::linear_llama3_1b(16, 512 * 1024, 1), Scheduler::Lasp2, 1, &cm);
+    assert!(m512.oom, "512K on 16 GPUs must OOM (Table 6)");
+}
+
+/// "LASP-2 performs best with long sequences, large clusters, slow links"
+/// (§3.4's qualitative conclusion): the LASP-2/LASP-1 gap must widen when
+/// the interconnect slows down.
+#[test]
+fn slow_links_favor_lasp2() {
+    let s = SimShape::linear_llama3_1b(64, 512 * 1024, 1);
+    let fast = CostModel::default();
+    let slow = CostModel { beta_inter: 5e9, alpha_p2p: 60e-6, ..fast };
+    let gap = |cm: &CostModel| {
+        simulate(&s, Scheduler::Lasp2Overlap, 1, cm).tokens_per_sec
+            / simulate(&s, Scheduler::Lasp1, 1, cm).tokens_per_sec
+    };
+    assert!(gap(&slow) > gap(&fast));
+}

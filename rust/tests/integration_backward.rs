@@ -1,0 +1,184 @@
+//! Integration: the distributed BACKWARD pass (Alg. 3/4) — LASP-2's single
+//! AllGather on dM_t and LASP-1's reverse sequential ring must produce
+//! identical chunk gradients, matching a serial single-thread reference
+//! built from the same artifacts.  (The jnp oracle equivalence to jax.grad
+//! is proven in python/tests/test_model.py::test_bwd_phases_match_grad.)
+
+use std::sync::Arc;
+
+use lasp2::comm::World;
+use lasp2::config::{Pattern, RunConfig, Scheduler, Variant};
+use lasp2::coordinator::{
+    lasp1_attention_backward, lasp2_attention_backward, LinearFwdCache,
+};
+use lasp2::runtime::Engine;
+use lasp2::tensor::{suffix_dstates, Tensor};
+
+fn engine() -> Arc<Engine> {
+    Engine::load_preset("tiny").expect("run `make artifacts` first")
+}
+
+/// Build per-rank forward caches for W chunks of synthetic q/k/v plus the
+/// incoming gradient dO, with m_prefix computed serially (plain sums,
+/// basic variant).
+fn make_inputs(
+    e: &Engine,
+    w: usize,
+) -> (Vec<LinearFwdCache>, Vec<Tensor>) {
+    let cfg = &e.model;
+    let (c, hh, dh) = (cfg.chunk_len, cfg.n_heads, cfg.head_dim);
+    let shape = [c, hh, dh];
+    let mut caches = Vec::new();
+    let mut dos = Vec::new();
+    let mut m_prefix = Tensor::zeros(&[hh, dh, dh]);
+    for r in 0..w {
+        let qt = Tensor::randn(&shape, 100 + r as u64).scale(0.3);
+        let kt = Tensor::randn(&shape, 200 + r as u64).scale(0.3);
+        let v = Tensor::randn(&shape, 300 + r as u64).scale(0.3);
+        let do_t = Tensor::randn(&shape, 400 + r as u64).scale(0.3);
+        // M_t = K_t^T V_t per head (basic variant, rust math)
+        let mut m_t = Tensor::zeros(&[hh, dh, dh]);
+        for h in 0..hh {
+            for i in 0..c {
+                for a in 0..dh {
+                    let kv = kt.data()[(i * hh + h) * dh + a];
+                    for b in 0..dh {
+                        m_t.data_mut()[(h * dh + a) * dh + b] +=
+                            kv * v.data()[(i * hh + h) * dh + b];
+                    }
+                }
+            }
+        }
+        caches.push(LinearFwdCache { qt, kt, v, m_prefix: m_prefix.clone() });
+        m_prefix.add_assign(&m_t);
+        dos.push(do_t);
+    }
+    (caches, dos)
+}
+
+/// Serial reference: run bwd1 for every chunk in order, suffix-sum in rust,
+/// then bwd2 per chunk — no communication involved.
+fn serial_backward(
+    e: &Engine,
+    caches: &[LinearFwdCache],
+    dos: &[Tensor],
+) -> Vec<(Tensor, Tensor, Tensor)> {
+    let bwd1 = e.artifact("l_bwd1_basic").unwrap();
+    let bwd2 = e.artifact("l_bwd2_basic").unwrap();
+    let dms: Vec<Tensor> = caches
+        .iter()
+        .zip(dos)
+        .map(|(cch, d)| {
+            bwd1.run1(&[cch.qt.clone().into(), d.clone().into()]).unwrap()
+        })
+        .collect();
+    let suffix = suffix_dstates(&dms);
+    caches
+        .iter()
+        .zip(dos)
+        .zip(suffix)
+        .map(|((cch, d), suf)| {
+            let outs = bwd2
+                .run(&[
+                    cch.qt.clone().into(),
+                    cch.kt.clone().into(),
+                    cch.v.clone().into(),
+                    d.clone().into(),
+                    cch.m_prefix.clone().into(),
+                    suf.into(),
+                ])
+                .unwrap();
+            let mut it = outs.into_iter();
+            (it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
+        })
+        .collect()
+}
+
+#[test]
+fn lasp2_distributed_backward_matches_serial() {
+    let e = engine();
+    let w = 4;
+    let (caches, dos) = make_inputs(&e, w);
+    let want = serial_backward(&e, &caches, &dos);
+
+    let run = RunConfig {
+        world: w,
+        scheduler: Scheduler::Lasp2,
+        variant: Variant::Basic,
+        pattern: Pattern("L".into()),
+        gather_splits: 1,
+        seed: 0,
+    };
+    let world = World::new(w);
+    let e2 = e.clone();
+    let caches_ref = &caches;
+    let dos_ref = &dos;
+    let got = world.run(move |comm| {
+        let r = comm.rank();
+        lasp2_attention_backward(&e2, &comm, &run, &caches_ref[r], &dos_ref[r])
+            .unwrap()
+    });
+    for (r, ((dq, dk, dv), (wq, wk, wv))) in got.iter().zip(&want).enumerate() {
+        assert!(dq.allclose(wq, 1e-4), "rank {r} dq");
+        assert!(dk.allclose(wk, 1e-4), "rank {r} dk");
+        assert!(dv.allclose(wv, 1e-4), "rank {r} dv");
+    }
+    // exactly one collective per rank in the backward (Alg. 4 line 4)
+    assert_eq!(world.counters().collective_ops, w as u64);
+}
+
+#[test]
+fn lasp1_backward_matches_lasp2() {
+    let e = engine();
+    let w = 4;
+    let (caches, dos) = make_inputs(&e, w);
+    let want = serial_backward(&e, &caches, &dos);
+
+    let world = World::new(w);
+    let e2 = e.clone();
+    let caches_ref = &caches;
+    let dos_ref = &dos;
+    let got = world.run(move |comm| {
+        let r = comm.rank();
+        lasp1_attention_backward(&e2, &comm, &caches_ref[r], &dos_ref[r]).unwrap()
+    });
+    for (r, ((dq, dk, dv), (wq, wk, wv))) in got.iter().zip(&want).enumerate() {
+        assert!(dq.allclose(wq, 1e-4), "rank {r} dq");
+        assert!(dk.allclose(wk, 1e-4), "rank {r} dk");
+        assert!(dv.allclose(wv, 1e-4), "rank {r} dv");
+    }
+    // LASP-1 backward: W-1 sequential P2P hops, no collectives
+    let snap = world.counters();
+    assert_eq!(snap.p2p_ops, (w - 1) as u64);
+    assert_eq!(snap.collective_ops, 0);
+}
+
+#[test]
+fn backward_split_gather_is_exact() {
+    let e = engine();
+    let w = 4;
+    let (caches, dos) = make_inputs(&e, w);
+    let want = serial_backward(&e, &caches, &dos);
+    let run = RunConfig {
+        world: w,
+        scheduler: Scheduler::Lasp2,
+        variant: Variant::Basic,
+        pattern: Pattern("L".into()),
+        gather_splits: 8,
+        seed: 0,
+    };
+    let world = World::new(w);
+    let e2 = e.clone();
+    let caches_ref = &caches;
+    let dos_ref = &dos;
+    let got = world.run(move |comm| {
+        let r = comm.rank();
+        lasp2_attention_backward(&e2, &comm, &run, &caches_ref[r], &dos_ref[r])
+            .unwrap()
+    });
+    for ((dq, dk, dv), (wq, wk, wv)) in got.iter().zip(&want) {
+        assert!(dq.allclose(wq, 1e-4));
+        assert!(dk.allclose(wk, 1e-4));
+        assert!(dv.allclose(wv, 1e-4));
+    }
+}

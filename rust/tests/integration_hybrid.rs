@@ -1,0 +1,158 @@
+//! Integration: LASP-2H on hybrid models (Fig. 2) — linear layers gather
+//! memory states, standard layers gather K/V (Alg. 7) — verified against
+//! the monolithic hybrid oracle; plus the standard-attention-only model
+//! under both AllGather-CP and Ring Attention.
+
+use std::sync::Arc;
+
+use lasp2::comm::World;
+use lasp2::config::{Pattern, RunConfig, Scheduler, Variant};
+use lasp2::coordinator::{forward_distributed, forward_mono, Params};
+use lasp2::runtime::Engine;
+
+const TOL: f32 = 2e-3;
+
+fn engine() -> Arc<Engine> {
+    Engine::load_preset("tiny").expect("run `make artifacts` first")
+}
+
+fn tokens(n: usize, vocab: usize) -> Vec<i32> {
+    (0..n as i32).map(|i| (i * 13 + 5) % vocab as i32).collect()
+}
+
+#[test]
+fn lasp2h_hybrid_matches_mono() {
+    // tiny has 2 layers; ratio 1/2 -> "LN": one linear + one standard.
+    let e = engine();
+    let cfg = e.model.clone();
+    let pattern = Pattern::from_ratio(cfg.n_layers, "1/2").unwrap();
+    assert_eq!(pattern.0, "LN");
+    let run = RunConfig {
+        world: 4,
+        scheduler: Scheduler::Lasp2,
+        variant: Variant::Basic,
+        pattern: pattern.clone(),
+        gather_splits: 1,
+        seed: 0,
+    };
+    let params = Params::randn(&cfg, Variant::Basic, &pattern, 21);
+    let n = run.world * cfg.chunk_len;
+    let toks = tokens(n, cfg.vocab);
+    let world = World::new(run.world);
+    let got = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    let want = forward_mono(&e, &format!("forward_mono_basic_h2_N{n}"), &params, &toks)
+        .unwrap();
+    let err = got.max_rel_err(&want);
+    assert!(err < TOL, "hybrid max rel err {err}");
+
+    // comm structure: 1 state-gather (linear) + 1 KV-gather (std) per rank
+    let snap = world.counters();
+    assert_eq!(snap.collective_ops, 2 * run.world as u64);
+}
+
+#[test]
+fn lasp2h_hybrid_overlap_matches_mono() {
+    let e = engine();
+    let cfg = e.model.clone();
+    let pattern = Pattern::from_ratio(cfg.n_layers, "1/2").unwrap();
+    let run = RunConfig {
+        world: 4,
+        scheduler: Scheduler::Lasp2Overlap,
+        variant: Variant::Basic,
+        pattern: pattern.clone(),
+        gather_splits: 1,
+        seed: 0,
+    };
+    let params = Params::randn(&cfg, Variant::Basic, &pattern, 22);
+    let n = run.world * cfg.chunk_len;
+    let toks = tokens(n, cfg.vocab);
+    let world = World::new(run.world);
+    let got = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    let want = forward_mono(&e, &format!("forward_mono_basic_h2_N{n}"), &params, &toks)
+        .unwrap();
+    assert!(got.max_rel_err(&want) < TOL);
+}
+
+#[test]
+fn std_only_model_allgather_cp_matches_mono() {
+    // pure standard attention (the Llama3 baseline) under Alg. 7
+    let e = engine();
+    let cfg = e.model.clone();
+    let pattern = Pattern("N".repeat(cfg.n_layers));
+    let run = RunConfig {
+        world: 4,
+        scheduler: Scheduler::Lasp2,
+        variant: Variant::Basic,
+        pattern: pattern.clone(),
+        gather_splits: 1,
+        seed: 0,
+    };
+    let params = Params::randn(&cfg, Variant::Basic, &pattern, 23);
+    let n = run.world * cfg.chunk_len;
+    let toks = tokens(n, cfg.vocab);
+    let world = World::new(run.world);
+    let got = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    let want = forward_mono(&e, &format!("forward_mono_softmax_std_N{n}"), &params, &toks)
+        .unwrap();
+    let err = got.max_rel_err(&want);
+    assert!(err < TOL, "std allgather-CP err {err}");
+}
+
+#[test]
+fn std_only_model_ring_matches_mono() {
+    // the same model under Ring Attention must agree (online softmax
+    // telescopes exactly)
+    let e = engine();
+    let cfg = e.model.clone();
+    let pattern = Pattern("N".repeat(cfg.n_layers));
+    let run = RunConfig {
+        world: 4,
+        scheduler: Scheduler::RingAttention,
+        variant: Variant::Basic,
+        pattern: pattern.clone(),
+        gather_splits: 1,
+        seed: 0,
+    };
+    let params = Params::randn(&cfg, Variant::Basic, &pattern, 23);
+    let n = run.world * cfg.chunk_len;
+    let toks = tokens(n, cfg.vocab);
+    let world = World::new(run.world);
+    let got = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    let want = forward_mono(&e, &format!("forward_mono_softmax_std_N{n}"), &params, &toks)
+        .unwrap();
+    let err = got.max_rel_err(&want);
+    assert!(err < TOL, "std ring err {err}");
+}
+
+#[test]
+fn hybrid_kv_gather_moves_more_bytes_than_state_gather() {
+    // Fig. 2's asymmetry: linear layers move O(d^2)-sized states, std
+    // layers move O(C*d)-sized K/V; with tiny dims C=32=dh the KV payload
+    // (2 tensors C*H*dh) equals 2x the state payload (M + a) — check the
+    // accounting distinguishes them.
+    let e = engine();
+    let cfg = e.model.clone();
+    let kv_bytes = 2 * cfg.chunk_len * cfg.n_heads * cfg.head_dim * 4;
+    let state_bytes = (cfg.state_elems(Variant::Basic) + cfg.n_heads * cfg.head_dim) * 4;
+
+    let measure = |pattern: &str| {
+        let pattern = Pattern(pattern.into());
+        let run = RunConfig {
+            world: 4,
+            scheduler: Scheduler::Lasp2,
+            variant: Variant::Basic,
+            pattern: pattern.clone(),
+            gather_splits: 1,
+            seed: 0,
+        };
+        let params = Params::randn(&cfg, Variant::Basic, &pattern, 2);
+        let toks = tokens(4 * cfg.chunk_len, cfg.vocab);
+        let world = World::new(run.world);
+        forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+        world.counters().bytes
+    };
+    let linear_only = measure("L");
+    let std_only = measure("N");
+    assert_eq!(linear_only, (4 * 3 * state_bytes) as u64);
+    assert_eq!(std_only, (4 * 3 * kv_bytes) as u64);
+}

@@ -1,0 +1,186 @@
+//! Integration: every SP scheduler's distributed forward must reproduce
+//! the monolithic single-device oracle (forward_mono_* artifacts) —
+//! the rust analogue of "LASP-2 is an exact reorganization, not an
+//! approximation".  Requires `make artifacts` (tiny preset).
+
+use std::sync::Arc;
+
+use lasp2::comm::World;
+use lasp2::config::{Pattern, RunConfig, Scheduler, Variant};
+use lasp2::coordinator::{forward_distributed, forward_mono, Params};
+use lasp2::runtime::Engine;
+
+const TOL: f32 = 2e-3;
+
+fn engine() -> Arc<Engine> {
+    Engine::load_preset("tiny").expect("run `make artifacts` first")
+}
+
+fn tokens(n: usize, vocab: usize) -> Vec<i32> {
+    (0..n as i32).map(|i| (i * 31 + 7) % vocab as i32).collect()
+}
+
+fn run_config(sched: Scheduler, variant: Variant, layers: usize) -> RunConfig {
+    RunConfig {
+        world: 4,
+        scheduler: sched,
+        variant,
+        pattern: Pattern("L".repeat(layers)),
+        gather_splits: 1,
+        seed: 0,
+    }
+}
+
+fn check_scheduler_vs_mono(sched: Scheduler, variant: Variant) {
+    let e = engine();
+    let cfg = e.model.clone();
+    let run = run_config(sched, variant, cfg.n_layers);
+    let params = Params::randn(&cfg, variant, &run.pattern, 11);
+    let n = run.world * cfg.chunk_len;
+    let toks = tokens(n, cfg.vocab);
+    let world = World::new(run.world);
+    let got = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    let mono = format!("forward_mono_{}_pure_N{}", variant.name(), n);
+    let want = forward_mono(&e, &mono, &params, &toks).unwrap();
+    let err = got.max_rel_err(&want);
+    assert!(err < TOL, "{sched} {variant}: max rel err {err}");
+}
+
+#[test]
+fn lasp2_matches_mono_all_variants() {
+    for v in Variant::linear_variants() {
+        check_scheduler_vs_mono(Scheduler::Lasp2, *v);
+    }
+}
+
+#[test]
+fn lasp2_overlap_matches_mono() {
+    // the overlapped schedule must be numerically identical
+    for v in [Variant::Basic, Variant::Gla, Variant::Based] {
+        check_scheduler_vs_mono(Scheduler::Lasp2Overlap, v);
+    }
+}
+
+#[test]
+fn lasp1_matches_mono() {
+    for v in [Variant::Basic, Variant::Retention, Variant::Gla] {
+        check_scheduler_vs_mono(Scheduler::Lasp1, v);
+    }
+}
+
+#[test]
+fn ring_attention_matches_mono() {
+    check_scheduler_vs_mono(Scheduler::RingAttention, Variant::Basic);
+}
+
+#[test]
+fn megatron_sp_matches_mono() {
+    check_scheduler_vs_mono(Scheduler::MegatronSp, Variant::Basic);
+}
+
+#[test]
+fn split_gather_is_exact() {
+    // Table 5's split gathers must not change the numbers at all
+    let e = engine();
+    let cfg = e.model.clone();
+    let mut run = run_config(Scheduler::Lasp2, Variant::Basic, cfg.n_layers);
+    let params = Params::randn(&cfg, Variant::Basic, &run.pattern, 3);
+    let n = run.world * cfg.chunk_len;
+    let toks = tokens(n, cfg.vocab);
+    let world = World::new(run.world);
+    let base = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    for splits in [2usize, 4, 16] {
+        run.gather_splits = splits;
+        let world = World::new(run.world);
+        let got = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+        assert!(got.allclose(&base, 1e-6), "splits={splits}");
+    }
+}
+
+#[test]
+fn scheduler_equivalence_at_world_two() {
+    // SP schedulers must agree with each other at any world size
+    // (W=2 here; the N=128 mono oracle covers W=4 elsewhere).
+    let e = engine();
+    let cfg = e.model.clone();
+    let mut run = run_config(Scheduler::Lasp2, Variant::Basic, cfg.n_layers);
+    run.world = 2;
+    let params = Params::randn(&cfg, Variant::Basic, &run.pattern, 5);
+    let n = run.world * cfg.chunk_len;
+    let toks = tokens(n, cfg.vocab);
+    let world = World::new(2);
+    let a = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    for sched in [Scheduler::Lasp1, Scheduler::MegatronSp, Scheduler::RingAttention] {
+        run.scheduler = sched;
+        let world = World::new(2);
+        let b = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+        assert!(a.allclose(&b, 1e-4), "{sched}");
+    }
+}
+
+#[test]
+fn comm_counters_match_cost_analysis() {
+    // §3.4 on the REAL communicator: forward-only counts per iteration.
+    let e = engine();
+    let cfg = e.model.clone();
+    let l = cfg.n_layers as u64;
+    let w = 4u64;
+    let params = Params::randn(
+        &cfg,
+        Variant::Basic,
+        &Pattern("L".repeat(cfg.n_layers)),
+        1,
+    );
+    let toks = tokens(4 * cfg.chunk_len, cfg.vocab);
+
+    // LASP-2: 1 collective per linear layer per rank (forward)
+    let run = run_config(Scheduler::Lasp2, Variant::Basic, cfg.n_layers);
+    let world = World::new(run.world);
+    forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    let snap = world.counters();
+    assert_eq!(snap.collective_ops, l * w, "LASP-2 collectives");
+    assert_eq!(snap.p2p_ops, 0, "LASP-2 should use no P2P");
+
+    // LASP-1: (W-1) sequential P2P sends per layer (forward)
+    let run = run_config(Scheduler::Lasp1, Variant::Basic, cfg.n_layers);
+    let world = World::new(run.world);
+    forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    let snap = world.counters();
+    assert_eq!(snap.p2p_ops, l * (w - 1), "LASP-1 P2P steps");
+    assert_eq!(snap.collective_ops, 0);
+
+    // Ring Attention: (W-1) hops per rank per layer
+    let run = run_config(Scheduler::RingAttention, Variant::Basic, cfg.n_layers);
+    let world = World::new(run.world);
+    forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    let snap = world.counters();
+    assert_eq!(snap.p2p_ops, l * w * (w - 1), "ring hops");
+}
+
+#[test]
+fn lasp2_gather_bytes_are_state_sized() {
+    // the AllGather payload must be exactly (W-1) x state size per rank,
+    // independent of sequence length (the paper's headline property)
+    let e = engine();
+    let cfg = e.model.clone();
+    let pattern = Pattern("L".into());
+    let run = RunConfig {
+        world: 4,
+        scheduler: Scheduler::Lasp2,
+        variant: Variant::Basic,
+        pattern: pattern.clone(),
+        gather_splits: 1,
+        seed: 0,
+    };
+    let params = Params::randn(&cfg, Variant::Basic, &pattern, 2);
+    let toks = tokens(run.world * cfg.chunk_len, cfg.vocab);
+    let world = World::new(run.world);
+    forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+    let snap = world.counters();
+    // payload per rank = M [H, dh, dh] + a [H, dh], f32
+    let state_bytes = (cfg.state_elems(Variant::Basic) + cfg.n_heads * cfg.head_dim) * 4;
+    assert_eq!(
+        snap.bytes,
+        (run.world * (run.world - 1) * state_bytes) as u64
+    );
+}

@@ -1,0 +1,228 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The offline registry carries no proptest, so this uses a seeded-sweep
+//! harness (`for_seeds`): deterministic pseudo-random cases, failure
+//! messages carry the seed for reproduction.  Invariants covered:
+//!   * the gated state-combine monoid (associativity, identity) that
+//!     underlies Eq. 9 and the Table-5 split gathers;
+//!   * prefix/suffix state algebra vs naive folds;
+//!   * collectives (ordering, self-consistency, split equivalence,
+//!     byte accounting) over random world sizes and payload shapes;
+//!   * schedule-plan accounting vs the paper's §3.4 closed forms over
+//!     random model shapes.
+
+use lasp2::comm::World;
+use lasp2::config::Scheduler;
+use lasp2::coordinator::plan::{build_plan, SimShape};
+use lasp2::data::Rng;
+use lasp2::tensor::{
+    prefix_states, state_combine, suffix_dstates, ChunkState, Tensor,
+};
+
+fn for_seeds(n: u64, f: impl Fn(u64, &mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed * 7919 + 13);
+        f(seed, &mut rng);
+    }
+}
+
+fn rand_state(rng: &mut Rng, h: usize, fk: usize, dh: usize, seed: u64) -> ChunkState {
+    let m = Tensor::randn(&[h, fk, dh], seed ^ rng.next_u64());
+    let a = Tensor::new(
+        vec![h, fk],
+        (0..h * fk).map(|_| 0.9 + 0.1 * rng.f32()).collect(),
+    );
+    ChunkState { m, a }
+}
+
+#[test]
+fn prop_combine_associative() {
+    for_seeds(50, |seed, rng| {
+        let h = 1 + rng.below(3);
+        let fk = 1 + rng.below(6);
+        let dh = 1 + rng.below(6);
+        let a = rand_state(rng, h, fk, dh, seed);
+        let b = rand_state(rng, h, fk, dh, seed + 1);
+        let c = rand_state(rng, h, fk, dh, seed + 2);
+        let l = state_combine(&state_combine(&a, &b), &c);
+        let r = state_combine(&a, &state_combine(&b, &c));
+        assert!(l.m.allclose(&r.m, 1e-4), "seed {seed}");
+        assert!(l.a.allclose(&r.a, 1e-4), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_combine_identity() {
+    for_seeds(30, |seed, rng| {
+        let s = rand_state(rng, 2, 4, 4, seed);
+        let id = ChunkState::zero_like(&s);
+        let l = state_combine(&id, &s);
+        let r = state_combine(&s, &id);
+        assert!(l.m.allclose(&s.m, 1e-6) && l.a.allclose(&s.a, 1e-6));
+        assert!(r.m.allclose(&s.m, 1e-6) && r.a.allclose(&s.a, 1e-6));
+    });
+}
+
+#[test]
+fn prop_prefix_states_match_fold() {
+    for_seeds(30, |seed, rng| {
+        let t = 2 + rng.below(6);
+        let states: Vec<ChunkState> =
+            (0..t).map(|i| rand_state(rng, 2, 3, 5, seed + i as u64)).collect();
+        let (prefixes, total) = prefix_states(&states);
+        // naive left fold
+        let mut acc = ChunkState::zero_like(&states[0]);
+        for (i, s) in states.iter().enumerate() {
+            assert!(prefixes[i].m.allclose(&acc.m, 1e-4), "seed {seed} chunk {i}");
+            acc = state_combine(&acc, s);
+        }
+        assert!(total.m.allclose(&acc.m, 1e-4), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_suffix_sums_match_naive() {
+    for_seeds(30, |seed, rng| {
+        let t = 2 + rng.below(6);
+        let ds: Vec<Tensor> =
+            (0..t).map(|i| Tensor::randn(&[2, 3, 3], seed + i as u64)).collect();
+        let suf = suffix_dstates(&ds);
+        for i in 0..t {
+            let mut want = Tensor::zeros(&[2, 3, 3]);
+            for d in ds.iter().skip(i + 1) {
+                want.add_assign(d);
+            }
+            assert!(suf[i].allclose(&want, 1e-4), "seed {seed} chunk {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_all_gather_identical_everywhere() {
+    for_seeds(12, |seed, rng| {
+        let w = 1 + rng.below(6);
+        let rows = 1 + rng.below(8);
+        let cols = 1 + rng.below(8);
+        let world = World::new(w);
+        let results = world.run(|comm| {
+            comm.all_gather(vec![Tensor::randn(
+                &[rows, cols],
+                seed * 100 + comm.rank() as u64,
+            )])
+        });
+        // every rank must see the same gathered list, ordered by rank
+        for r in &results {
+            assert_eq!(r.len(), w);
+            for (rank, msg) in r.iter().enumerate() {
+                let want = Tensor::randn(&[rows, cols], seed * 100 + rank as u64);
+                assert_eq!(msg[0], want, "seed {seed}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_split_gather_equivalence() {
+    for_seeds(10, |seed, rng| {
+        let w = 2 + rng.below(4);
+        let n = 1 + rng.below(40);
+        let splits = 1 + rng.below(7);
+        let world = World::new(w);
+        let base = world.run(|comm| {
+            comm.all_gather(vec![Tensor::randn(&[n], seed + comm.rank() as u64)])
+        });
+        let world2 = World::new(w);
+        let split = world2.run(move |comm| {
+            comm.all_gather_split(
+                vec![Tensor::randn(&[n], seed + comm.rank() as u64)],
+                splits,
+            )
+        });
+        for (a, b) in base.iter().zip(&split) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x[0], y[0], "seed {seed} splits {splits}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_gather_byte_accounting() {
+    for_seeds(10, |seed, rng| {
+        let w = 2 + rng.below(5);
+        let n = 1 + rng.below(100);
+        let world = World::new(w);
+        world.run(|comm| {
+            comm.all_gather(vec![Tensor::randn(&[n], seed)]);
+        });
+        let snap = world.counters();
+        assert_eq!(snap.bytes as usize, w * (w - 1) * n * 4, "seed {seed}");
+        assert_eq!(snap.collective_ops as usize, w);
+    });
+}
+
+#[test]
+fn prop_plan_step_counts_match_paper() {
+    // §3.4 over random shapes: LASP-2 2 steps/iter/layer, LASP-1 2(W-1).
+    for_seeds(25, |seed, rng| {
+        let w = 2 + rng.below(127);
+        let layers = 1 + rng.below(32);
+        let mut shape = SimShape::linear_llama3_1b(w, w * 1024, 1 + rng.below(4));
+        shape.n_linear_layers = layers as f64;
+        let l2 = build_plan(&shape, Scheduler::Lasp2, 1).account(w);
+        assert_eq!(l2.collective_steps, 2 * layers, "seed {seed}");
+        assert_eq!(l2.p2p_steps, 0);
+        let l1 = build_plan(&shape, Scheduler::Lasp1, 1).account(w);
+        assert_eq!(l1.p2p_steps, 2 * (w - 1) * layers, "seed {seed}");
+        assert_eq!(l1.collective_steps, 0);
+        // both move the same state bytes per iteration
+        assert!((l1.bytes - l2.bytes).abs() <= 1e-6 * l2.bytes, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_plan_state_traffic_seq_invariant() {
+    // LASP-2 traffic must not depend on sequence length; Megatron-SP and
+    // Ring traffic must grow linearly with it.
+    for_seeds(15, |seed, rng| {
+        let w = 2 + rng.below(63);
+        let c1 = 1024.0 * (1 + rng.below(8)) as f64;
+        let mk = |c: f64| {
+            let mut s = SimShape::linear_llama3_1b(w, (c as usize) * w, 1);
+            s.chunk = c;
+            s
+        };
+        let l2a = build_plan(&mk(c1), Scheduler::Lasp2, 1).account(w);
+        let l2b = build_plan(&mk(c1 * 2.0), Scheduler::Lasp2, 1).account(w);
+        assert!((l2a.bytes - l2b.bytes).abs() < 1e-6, "seed {seed}");
+        let ma = build_plan(&mk(c1), Scheduler::MegatronSp, 1).account(w);
+        let mb = build_plan(&mk(c1 * 2.0), Scheduler::MegatronSp, 1).account(w);
+        assert!(
+            (mb.bytes / ma.bytes - 2.0).abs() < 1e-6,
+            "seed {seed}: megatron bytes must double"
+        );
+    });
+}
+
+#[test]
+fn prop_ring_send_recv_permutation() {
+    // after k ring hops every rank holds the value originating k ranks to
+    // its right — the ring must be a clean cyclic permutation
+    for_seeds(8, |seed, rng| {
+        let w = 2 + rng.below(6);
+        let hops = 1 + rng.below(w - 1);
+        let world = World::new(w);
+        let results = world.run(|comm| {
+            let mut val = comm.rank() as f32;
+            for _ in 0..hops {
+                comm.send(comm.right(), vec![Tensor::full(&[1], val)]);
+                val = comm.recv(comm.left())[0].data()[0];
+            }
+            val
+        });
+        for (rank, v) in results.iter().enumerate() {
+            let want = ((rank + w - hops) % w) as f32;
+            assert_eq!(*v, want, "seed {seed} w {w} hops {hops}");
+        }
+    });
+}
