@@ -195,6 +195,44 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// Built-in presets mirroring `python/compile/model.py::PRESETS` — the
+    /// shape source of truth for the native backend, which needs no
+    /// artifact manifest on disk.
+    pub fn preset(name: &str) -> Result<ModelConfig> {
+        let (d_model, n_heads, n_layers, vocab, chunk_len, max_seq, qk_reduced, ffn_dim, tb, ts) =
+            match name {
+                "tiny" => (64, 2, 2, 256, 32, 512, 8, 128, 2, 64),
+                "small" => (256, 4, 4, 512, 128, 2048, 16, 512, 4, 512),
+                // ffn_mult 2.6875 -> 2064
+                "medium" => (768, 12, 12, 16384, 128, 1024, 16, 2064, 1, 512),
+                other => bail!("unknown preset {other} (expected tiny|small|medium)"),
+            };
+        Ok(ModelConfig {
+            preset: name.to_string(),
+            d_model,
+            n_heads,
+            n_layers,
+            vocab,
+            chunk_len,
+            max_seq,
+            head_dim: d_model / n_heads,
+            ffn_dim,
+            qk_reduced,
+            train_batch: tb,
+            train_seq: ts,
+        })
+    }
+
+    /// SP world sizes for which gathered-KV artifacts exist (mirrors
+    /// `python/compile/aot.py::cfg_sp_sizes`).
+    pub fn sp_world_sizes(&self) -> &'static [usize] {
+        if self.preset == "tiny" {
+            &[2, 4]
+        } else {
+            &[4]
+        }
+    }
+
     pub fn from_fields(preset: &str, f: &HashMap<String, usize>) -> Result<Self> {
         let get = |k: &str| -> Result<usize> {
             f.get(k).copied().with_context(|| format!("manifest missing field {k}"))
@@ -213,6 +251,16 @@ impl ModelConfig {
             train_batch: get("train_batch")?,
             train_seq: get("train_seq")?,
         })
+    }
+
+    /// Raw per-head q/k projection width for a variant (mirrors python's
+    /// `qk_dim`): Based/ReBased project to the reduced dim before the
+    /// feature map; everything else uses the full head dim.
+    pub fn qk_dim(&self, v: Variant) -> usize {
+        match v {
+            Variant::Based | Variant::Rebased => self.qk_reduced,
+            _ => self.head_dim,
+        }
     }
 
     /// Feature (memory-state key) dim per variant — mirrors python.
@@ -317,6 +365,23 @@ mod tests {
         assert_eq!(m["b"], "2");
         assert_eq!(m["c"], "x y");
         assert!(!m.contains_key("bad-line"));
+    }
+
+    #[test]
+    fn builtin_presets_match_python() {
+        let t = ModelConfig::preset("tiny").unwrap();
+        assert_eq!(
+            (t.d_model, t.n_heads, t.n_layers, t.vocab, t.chunk_len),
+            (64, 2, 2, 256, 32)
+        );
+        assert_eq!((t.head_dim, t.ffn_dim, t.max_seq), (32, 128, 512));
+        assert_eq!(t.sp_world_sizes(), &[2, 4]);
+        let s = ModelConfig::preset("small").unwrap();
+        assert_eq!((s.head_dim, s.ffn_dim), (64, 512));
+        assert_eq!(s.sp_world_sizes(), &[4]);
+        let m = ModelConfig::preset("medium").unwrap();
+        assert_eq!(m.ffn_dim, 2064); // 768 * 2.6875
+        assert!(ModelConfig::preset("huge").is_err());
     }
 
     #[test]

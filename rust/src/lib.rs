@@ -12,7 +12,10 @@
 //! * **L1 (python/compile/kernels, build-time)** — Pallas kernels for the
 //!   chunked linear-attention hot spots.
 //!
-//! Python never runs on the request path: the runtime loads
+//! Python never runs on the request path.  The runtime is pluggable
+//! (see DESIGN.md §Backends): by default every artifact executes on the
+//! hermetic pure-rust NATIVE backend (`runtime/native.rs`); with the
+//! `pjrt` cargo feature the engine instead loads
 //! `artifacts/<preset>/*.hlo.txt` through the PJRT C API (`xla` crate).
 
 pub mod bench;

@@ -1,12 +1,24 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
-//! them from the rust hot path.  Python is never involved at runtime.
+//! Execution runtime: pluggable backends behind one `Engine`/artifact API.
 //!
-//! Wiring (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! All computations are lowered with `return_tuple=True`, so every
-//! execution returns a tuple literal that we decompose.
+//! Every scheduler/pipeline/train call site asks the engine for a named
+//! artifact (`l_part1_basic`, `s_part2_T4`, `train_step_basic_pure`, ...)
+//! and executes it positionally.  Two backends provide those artifacts:
+//!
+//! * **native** (default, `runtime/native.rs`) — every artifact implemented
+//!   in pure rust on the coordinator `Tensor`, with shapes derived from the
+//!   built-in `ModelConfig` presets.  Hermetic: no python, no XLA, no
+//!   artifact files.  This is what `cargo test` exercises.
+//! * **pjrt** (cargo feature `pjrt`, `runtime/pjrt.rs`) — loads the
+//!   AOT-compiled HLO-text artifacts produced by `python -m compile.aot`
+//!   and executes them through the PJRT C API (`xla` crate).  Selected
+//!   automatically when `artifacts/<preset>/manifest.txt` exists.
+//!
+//! See DESIGN.md §Backends for the feature matrix.
 
 mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
 pub use manifest::{ArtifactMeta, DType, Manifest, TensorMeta};
 
@@ -15,35 +27,24 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::ModelConfig;
 use crate::tensor::Tensor;
 
-/// The `xla` crate's PJRT handles are `Rc`-based (`!Send`/`!Sync`) and
-/// `execute()` clones the client `Rc` per output buffer, so concurrent use
-/// from worker threads would race on the non-atomic refcount.  We make the
-/// handles shareable with an unsafe wrapper and route EVERY PJRT call
-/// (compile, execute, buffer->literal, buffer drop) through one global
-/// lock: all `Rc` refcount traffic is serialized, which makes the wrapper
-/// sound.  XLA's CPU executor parallelizes inside a single execute call, so
-/// simulated devices still use the machine's cores; the simulator (not
-/// wall-clock real-exec) is what carries the paper-scale performance claims.
-static PJRT_LOCK: Mutex<()> = Mutex::new(());
-
-struct SendWrap<T>(T);
-// SAFETY: see PJRT_LOCK — all access to the wrapped values is serialized.
-unsafe impl<T> Send for SendWrap<T> {}
-unsafe impl<T> Sync for SendWrap<T> {}
-
-/// A device-resident input buffer staged once and reused across calls (for
-/// constant parameters — weights — the serving-style "weights live on the
-/// device" optimization; also sidesteps a host-buffer leak in the C
-/// wrapper's literal-based `execute`, see Executable::run).
-/// Safety: all PJRT access is serialized by PJRT_LOCK.
+/// A constant input (weights) staged once and reused across calls.  On the
+/// native backend this is simply a host tensor; on PJRT it is a
+/// device-resident buffer (the serving-style "weights live on the device"
+/// optimization).
 pub struct CachedBuffer {
-    buf: SendWrap<xla::PjRtBuffer>,
     shape: Vec<usize>,
+    inner: BufferInner,
+}
+
+enum BufferInner {
+    Host(Tensor),
+    #[cfg(feature = "pjrt")]
+    Device(pjrt::DeviceBuffer),
 }
 
 impl std::fmt::Debug for CachedBuffer {
@@ -53,7 +54,7 @@ impl std::fmt::Debug for CachedBuffer {
 }
 
 /// A runtime input value: f32 tensor, i32 tensor (token ids, offsets), or
-/// a pre-staged device buffer (constant weights).
+/// a pre-staged constant buffer (weights).
 #[derive(Clone, Debug)]
 pub enum Value {
     F32(Tensor),
@@ -81,18 +82,27 @@ impl Value {
         }
     }
 
-    /// Stage onto the device unless already cached (must hold PJRT_LOCK).
-    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<Option<xla::PjRtBuffer>> {
-        let buf = match self {
-            Value::F32(t) => {
-                Some(client.buffer_from_host_buffer(t.data(), t.shape(), None)?)
-            }
-            Value::I32(v, shape) => {
-                Some(client.buffer_from_host_buffer(v, shape, None)?)
-            }
-            Value::Buf(_) => None,
-        };
-        Ok(buf)
+    /// Borrow as a host-resident f32 tensor (native-backend execution).
+    pub(crate) fn host_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::Buf(b) => match &b.inner {
+                BufferInner::Host(t) => Ok(t),
+                #[cfg(feature = "pjrt")]
+                BufferInner::Device(_) => {
+                    bail!("device buffer passed to the native backend")
+                }
+            },
+            Value::I32(..) => bail!("expected f32, got i32"),
+        }
+    }
+
+    /// Borrow as host i32 data (native-backend execution).
+    pub(crate) fn host_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(v, _) => Ok(v),
+            _ => bail!("expected i32 value"),
+        }
     }
 }
 
@@ -102,13 +112,18 @@ impl From<Tensor> for Value {
     }
 }
 
-/// One compiled artifact (an XLA executable plus its manifest signature).
+/// One executable artifact: the manifest signature plus a backend kernel.
 pub struct Executable {
     pub meta: ArtifactMeta,
-    exe: SendWrap<xla::PjRtLoadedExecutable>,
-    client: SendWrap<xla::PjRtClient>,
+    kind: ExecKind,
     /// cumulative execution stats (hot-path profiling)
     pub stats: Mutex<ExecStats>,
+}
+
+enum ExecKind {
+    Native { model: ModelConfig, f: native::KernelFn },
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::LoadedExec),
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -141,33 +156,11 @@ impl Executable {
                 );
             }
         }
-        // All PJRT interaction happens under the global lock (see PJRT_LOCK).
-        //
-        // NOTE: we stage inputs as PjRtBuffers ourselves and call
-        // `execute_b` instead of the literal-based `execute`: the C wrapper
-        // behind `execute` copies every input host->device and never frees
-        // those staging buffers (measured ~inputs-sized leak per call);
-        // with `execute_b` rust owns every buffer and drops it here.
-        let parts = {
-            let _guard = PJRT_LOCK.lock().unwrap();
-            // stage the non-cached inputs; borrow cached weight buffers
-            let owned: Vec<Option<xla::PjRtBuffer>> = inputs
-                .iter()
-                .map(|v| v.to_buffer(&self.client.0))
-                .collect::<Result<_>>()?;
-            let refs: Vec<&xla::PjRtBuffer> = inputs
-                .iter()
-                .zip(&owned)
-                .map(|(v, o)| match (v, o) {
-                    (Value::Buf(c), _) => &c.buf.0,
-                    (_, Some(b)) => b,
-                    _ => unreachable!(),
-                })
-                .collect();
-            let bufs = self.exe.0.execute_b::<&xla::PjRtBuffer>(&refs)?;
-            let out = bufs[0][0].to_literal_sync()?;
-            out.to_tuple()?
-            // input + output device buffers drop here, still under the lock
+        let parts = match &self.kind {
+            ExecKind::Native { model, f } => f.as_ref()(model, inputs)
+                .with_context(|| format!("native kernel {}", self.meta.name))?,
+            #[cfg(feature = "pjrt")]
+            ExecKind::Pjrt(exe) => exe.execute(&self.meta, inputs)?,
         };
         if parts.len() != self.meta.outputs.len() {
             bail!(
@@ -177,18 +170,22 @@ impl Executable {
                 self.meta.outputs.len()
             );
         }
-        let mut res = Vec::with_capacity(parts.len());
-        for (lit, m) in parts.into_iter().zip(&self.meta.outputs) {
-            let data: Vec<f32> = lit.to_vec::<f32>().with_context(|| {
-                format!("{}: output {} not f32", self.meta.name, m.name)
-            })?;
-            res.push(Tensor::new(m.shape.clone(), data));
+        for (t, m) in parts.iter().zip(&self.meta.outputs) {
+            if t.shape() != m.shape.as_slice() {
+                bail!(
+                    "{}: output {} shape {:?} != manifest {:?}",
+                    self.meta.name,
+                    m.name,
+                    t.shape(),
+                    m.shape
+                );
+            }
         }
         let dt = t0.elapsed().as_nanos() as u64;
         let mut st = self.stats.lock().unwrap();
         st.calls += 1;
         st.nanos += dt;
-        Ok(res)
+        Ok(parts)
     }
 
     /// Single-output convenience.
@@ -201,34 +198,33 @@ impl Executable {
     }
 }
 
-/// The PJRT engine: one CPU client + the compiled artifact registry of a
-/// preset.  Artifacts compile lazily on first use and are cached; the
-/// engine is shared (`Arc`) by all worker threads.
+enum Backend {
+    Native(native::Registry),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::Client),
+}
+
+/// The engine: a preset's artifact registry plus the executable cache.
+/// Shared (`Arc`) by all worker threads.
 pub struct Engine {
     pub dir: PathBuf,
     pub manifest: Manifest,
     pub model: ModelConfig,
-    client: SendWrap<xla::PjRtClient>,
+    backend: Backend,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
 }
 
 impl Engine {
-    /// Load the manifest for a preset from `artifacts/<preset>/`.
+    /// Load a preset from `artifacts/<preset>/` when PJRT artifacts exist
+    /// there (and the `pjrt` feature is on); otherwise fall back to the
+    /// native backend driven by the built-in preset shapes.
     pub fn load(artifacts_root: &Path, preset: &str) -> Result<Arc<Engine>> {
         let dir = artifacts_root.join(preset);
-        let manifest = Manifest::parse_file(&dir.join("manifest.txt"))?;
-        let model = ModelConfig::from_fields(&manifest.preset, &manifest.fields)?;
-        let client = {
-            let _guard = PJRT_LOCK.lock().unwrap();
-            SendWrap(xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?)
-        };
-        Ok(Arc::new(Engine {
-            dir,
-            manifest,
-            model,
-            client,
-            cache: Mutex::new(HashMap::new()),
-        }))
+        #[cfg(feature = "pjrt")]
+        if dir.join("manifest.txt").exists() {
+            return Self::load_pjrt(dir);
+        }
+        Self::native(preset, dir)
     }
 
     /// Default artifacts root: $LASP2_ARTIFACTS or ./artifacts.
@@ -238,21 +234,50 @@ impl Engine {
         Self::load(Path::new(&root), preset)
     }
 
+    /// Construct the pure-rust native backend for a built-in preset.
+    pub fn native(preset: &str, dir: PathBuf) -> Result<Arc<Engine>> {
+        let model = ModelConfig::preset(preset)
+            .with_context(|| format!("native backend for preset {preset}"))?;
+        let registry = native::Registry::build(&model);
+        let manifest = registry.manifest(&model);
+        Ok(Arc::new(Engine {
+            dir,
+            manifest,
+            model,
+            backend: Backend::Native(registry),
+            cache: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn load_pjrt(dir: PathBuf) -> Result<Arc<Engine>> {
+        let manifest = Manifest::parse_file(&dir.join("manifest.txt"))?;
+        let model = ModelConfig::from_fields(&manifest.preset, &manifest.fields)?;
+        let client = pjrt::Client::new()?;
+        Ok(Arc::new(Engine {
+            dir,
+            manifest,
+            model,
+            backend: Backend::Pjrt(client),
+            cache: Mutex::new(HashMap::new()),
+        }))
+    }
+
     pub fn has_artifact(&self, name: &str) -> bool {
         self.manifest.artifacts.contains_key(name)
     }
 
-    /// Stage a constant tensor (weights) onto the device once.
+    /// Stage a constant tensor (weights) once for reuse across calls.
     pub fn cache_buffer(&self, t: &Tensor) -> Result<Arc<CachedBuffer>> {
-        let _guard = PJRT_LOCK.lock().unwrap();
-        let buf = self.client.0.buffer_from_host_buffer(t.data(), t.shape(), None)?;
-        Ok(Arc::new(CachedBuffer {
-            buf: SendWrap(buf),
-            shape: t.shape().to_vec(),
-        }))
+        let inner = match &self.backend {
+            Backend::Native(_) => BufferInner::Host(t.clone()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(client) => BufferInner::Device(client.stage(t)?),
+        };
+        Ok(Arc::new(CachedBuffer { shape: t.shape().to_vec(), inner }))
     }
 
-    /// Get (compile-on-first-use) an executable by artifact name.
+    /// Get (instantiate-on-first-use) an executable by artifact name.
     pub fn artifact(&self, name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
@@ -263,29 +288,20 @@ impl Engine {
             .get(name)
             .with_context(|| format!("artifact {name} not in manifest"))?
             .clone();
-        let path = self.dir.join(&meta.file);
         let t0 = Instant::now();
-        let exe = {
-            let _guard = PJRT_LOCK.lock().unwrap();
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("bad path")?,
-            )
-            .map_err(|e| anyhow!("loading {name}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            SendWrap(
-                self.client
-                    .0
-                    .compile(&comp)
-                    .map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
-            )
+        let kind = match &self.backend {
+            Backend::Native(reg) => ExecKind::Native {
+                model: self.model.clone(),
+                f: reg.kernel(name)?,
+            },
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(client) => {
+                ExecKind::Pjrt(client.compile(&self.dir.join(&meta.file), name)?)
+            }
         };
         let exec = Arc::new(Executable {
             meta,
-            exe,
-            client: {
-                let _guard = PJRT_LOCK.lock().unwrap();
-                SendWrap(self.client.0.clone())
-            },
+            kind,
             stats: Mutex::new(ExecStats::default()),
         });
         let mut cache = self.cache.lock().unwrap();
@@ -297,7 +313,8 @@ impl Engine {
         Ok(entry.clone())
     }
 
-    /// Pre-compile a set of artifacts (avoids first-call jitter in benches).
+    /// Pre-instantiate a set of artifacts (avoids first-call jitter in
+    /// benches; a no-op cost on the native backend).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
         for n in names {
             self.artifact(n)?;
@@ -322,7 +339,7 @@ mod tests {
     use super::*;
 
     fn engine() -> Arc<Engine> {
-        Engine::load_preset("tiny").expect("tiny artifacts built?")
+        Engine::load_preset("tiny").expect("native tiny preset")
     }
 
     #[test]
@@ -377,6 +394,25 @@ mod tests {
         let exe = e.artifact("head").unwrap();
         let bad = Tensor::zeros(&[1, 1]);
         assert!(exe.run(&[bad.into()]).is_err());
+    }
+
+    #[test]
+    fn cached_buffer_round_trips_through_artifacts() {
+        // weights staged via cache_buffer must behave exactly like F32 values
+        let e = engine();
+        let m = &e.model;
+        let x = Tensor::randn(&[m.chunk_len, m.d_model], 3);
+        let ln = Tensor::ones(&[m.d_model]);
+        let exe = e.artifact("head").unwrap();
+        let emb = Tensor::randn(&[m.vocab, m.d_model], 4).scale(0.1);
+        let a = exe
+            .run(&[x.clone().into(), ln.clone().into(), emb.clone().into()])
+            .unwrap();
+        let cached = e.cache_buffer(&emb).unwrap();
+        let b = exe
+            .run(&[x.into(), ln.into(), Value::Buf(cached)])
+            .unwrap();
+        assert!(a[0].allclose(&b[0], 1e-7));
     }
 
     #[test]

@@ -186,6 +186,19 @@ impl Tensor {
         Tensor::new(self.shape.clone(), data)
     }
 
+    /// Elementwise division (used by the native backend's decay-prefactor
+    /// trick: k~ = k / B).
+    pub fn div(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape, rhs.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| a / b)
+            .collect();
+        Tensor::new(self.shape.clone(), data)
+    }
+
     pub fn scale(&self, s: f32) -> Tensor {
         Tensor::new(self.shape.clone(), self.data.iter().map(|a| a * s).collect())
     }

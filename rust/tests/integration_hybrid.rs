@@ -13,7 +13,8 @@ use lasp2::runtime::Engine;
 const TOL: f32 = 2e-3;
 
 fn engine() -> Arc<Engine> {
-    Engine::load_preset("tiny").expect("run `make artifacts` first")
+    Engine::load_preset("tiny")
+        .expect("tiny preset loads on the native backend (no artifacts needed)")
 }
 
 fn tokens(n: usize, vocab: usize) -> Vec<i32> {

@@ -1,0 +1,161 @@
+//! Minimal, dependency-free drop-in for the `anyhow` error-handling crate.
+//!
+//! Vendored so that `cargo build && cargo test` work from a bare checkout
+//! with NO network access at all (the CI gate allows crates.io, but the
+//! build should not need even that).  Only the surface this workspace uses
+//! is provided: `Result`, `Error`, the `Context` trait, and the `anyhow!`,
+//! `bail!`, `ensure!` macros.  Swapping back to the real crate is a
+//! one-line change in `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// A string-backed error with a context chain, printed as
+/// `outermost: ...: innermost`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context message (mirrors `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// (and thus `?` on io/parse/... errors) coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment on `Result` and `Option`, as in the real crate.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn fails() -> Result<usize> {
+        let n: usize = "nope".parse()?; // ParseIntError -> Error via From
+        Ok(n)
+    }
+
+    #[test]
+    fn conversion_and_context() {
+        let e = fails().context("parsing config").unwrap_err();
+        assert!(e.to_string().starts_with("parsing config: "));
+        let o: Option<u8> = None;
+        assert_eq!(
+            o.with_context(|| format!("missing {}", "field")).unwrap_err().to_string(),
+            "missing field"
+        );
+    }
+
+    #[test]
+    fn macros() {
+        fn inner(flag: bool) -> Result<u8> {
+            ensure!(flag, "flag was {flag}");
+            ensure!(flag);
+            if !flag {
+                bail!("unreachable {}", 1);
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(true).unwrap(), 1);
+        assert_eq!(inner(false).unwrap_err().to_string(), "flag was false");
+        let e: Error = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e:?}"), "x = 3");
+    }
+}
