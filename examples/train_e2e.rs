@@ -1,13 +1,15 @@
 //! End-to-end training driver (the repo's required full-system proof):
-//! trains a Linear-Llama3 model through the AOT `train_step` artifact
-//! (full forward + Alg.-4-backed backward + Adam, compiled once by XLA)
-//! on the synthetic corpus, and logs the loss curve to CSV.
+//! trains a Linear-Llama3 model through the `train_step` artifact (full
+//! forward + backward + Adam) on the synthetic corpus, and logs the loss
+//! curve to CSV.
 //!
-//!     cargo run --release --example train_e2e -- [preset] [steps]
+//!     cargo run --release --example train_e2e -- [preset] [steps] [variant]
 //!
 //! Defaults: preset=medium (~110M params, the paper-style "~100M
-//! transformer trained for a few hundred steps"), steps=200.  The run is
-//! recorded in EXPERIMENTS.md §End-to-end.
+//! transformer trained for a few hundred steps"), steps=200,
+//! variant=basic.  Any linear variant trains natively, including the
+//! decay-gated ones (gla, retention).  The run is recorded in
+//! EXPERIMENTS.md §End-to-end.
 
 use lasp2::config::{Pattern, Variant};
 use lasp2::runtime::Engine;
@@ -28,11 +30,21 @@ fn main() -> anyhow::Result<()> {
             std::process::exit(2);
         }
     };
+    let variant = match args.get(2) {
+        Some(s) => Variant::parse(s)?,
+        None => Variant::Basic,
+    };
     let cfg = engine.model.clone();
-    let pattern = Pattern::from_ratio(cfg.n_layers, "0")?;
-    let csv = format!("results/train_e2e_{preset}_loss.csv");
+    // linear variants train the pure-linear model; "softmax" maps to the
+    // all-standard-attention baseline (its only registered tag)
+    let (pattern, tag) = if variant == Variant::Softmax {
+        (Pattern::from_ratio(cfg.n_layers, "all")?, "softmax_std".to_string())
+    } else {
+        (Pattern::from_ratio(cfg.n_layers, "0")?, format!("{}_pure", variant.name()))
+    };
+    let csv = format!("results/train_e2e_{preset}_{}_loss.csv", variant.name());
     println!(
-        "training Linear-Llama3 ({preset}): d={} L={} vocab={} batch={} seq={} steps={steps}",
+        "training Linear-Llama3 ({preset}, {variant}): d={} L={} vocab={} batch={} seq={} steps={steps}",
         cfg.d_model, cfg.n_layers, cfg.vocab, cfg.train_batch, cfg.train_seq
     );
     let opts = TrainOpts {
@@ -44,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         log_every: 10,
         csv: Some(csv.clone()),
     };
-    let rep = train(&engine, Variant::Basic, &pattern, "basic_pure", &opts)?;
+    let rep = train(&engine, variant, &pattern, &tag, &opts)?;
     println!("\n=== end-to-end training report ===");
     println!("parameters       : {:.1}M", rep.params as f64 / 1e6);
     println!("steps            : {}", rep.steps);

@@ -1,0 +1,288 @@
+"""Float64 finite-difference validation of the variant-aware
+linear-attention backward implemented in rust/src/runtime/native.rs
+seq_loss_grads.  Mirrors the Rust code operation-for-operation
+(whole-sequence prefactor folding, cumprod gates, GLA gate projection,
+Based/ReBased feature maps); float64 so the FD error floor is ~1e-9.
+
+This is the provenance for DESIGN.md's "derived against a float64
+prototype" claim — run it with only numpy installed:
+
+    python3 python/validate/gated_backward_fd.py
+"""
+import numpy as np
+
+rng = np.random.default_rng(0)
+GATE_FLOOR = 0.95
+GLA_TAU = 16.0
+
+n, d, hh, dh, rq_red = 6, 8, 2, 4, 2   # micro shapes
+
+def sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+def phi_based(x):
+    # x: [n, hh, r] -> [n, hh, 1+r+r*r]
+    r = x.shape[-1]
+    out = np.empty(x.shape[:-1] + (1 + r + r * r,))
+    out[..., 0] = 1.0
+    out[..., 1:1 + r] = x
+    out[..., 1 + r:] = (x[..., :, None] * x[..., None, :]).reshape(x.shape[:-1] + (r * r,)) / np.sqrt(2)
+    return out
+
+def phi_based_bwd(x, dphi):
+    r = x.shape[-1]
+    dx = dphi[..., 1:1 + r].copy()
+    douter = dphi[..., 1 + r:].reshape(x.shape[:-1] + (r, r)) / np.sqrt(2)
+    # phi_ab = x_a x_b / sqrt2 -> dx_a += sum_b (douter[a,b] + douter[b,a]) x_b
+    dx += np.einsum('...ab,...b->...a', douter, x)
+    dx += np.einsum('...ba,...b->...a', douter, x)
+    return dx
+
+def phi_rebased(x, gamma, beta):
+    t = x * gamma + beta
+    return t * t
+
+def phi_rebased_bwd(x, gamma, beta, dphi):
+    t = x * gamma + beta
+    dt = 2.0 * t * dphi
+    dx = dt * gamma
+    dgamma = np.einsum('nhr,nhr->r', dt, x)
+    dbeta = np.einsum('nhr->r', dt)
+    return dx, dgamma, dbeta
+
+def retention_gates(nn, fk):
+    lam = np.maximum(1.0 - 2.0 ** (-(5.0 + np.arange(hh))), GATE_FLOOR)  # [hh]
+    return np.broadcast_to(lam[None, :, None], (nn, hh, fk)).copy()
+
+def gla_gates(raw):
+    # raw: [n, hh*fk] -> g [n, hh, fk]
+    s = sigmoid(raw)
+    g = GATE_FLOOR + (1.0 - GATE_FLOOR) * s ** (1.0 / GLA_TAU)
+    return g
+
+def gla_gates_bwd(raw, dg_flat):
+    # d raw from d g; dg_flat: [n, hh*fk]
+    s = sigmoid(raw)
+    # dg/draw = (1-floor)*(1/tau)*s^(1/tau-1) * s*(1-s) = (1-floor)/tau * s^(1/tau) * (1-s)
+    return dg_flat * (1.0 - GATE_FLOOR) / GLA_TAU * s ** (1.0 / GLA_TAU) * (1.0 - s)
+
+def forward(variant, hn, wq, wk, wv, wg, gamma, beta, masked=True, want_cache=False):
+    rq = rq_red if variant in ('based', 'rebased') else dh
+    qr = (hn @ wq).reshape(n, hh, rq)
+    kr = (hn @ wk).reshape(n, hh, rq)
+    v = (hn @ wv).reshape(n, hh, dh)
+    if variant == 'based':
+        q, k = phi_based(qr), phi_based(kr)
+    elif variant == 'rebased':
+        q, k = phi_rebased(qr, gamma, beta), phi_rebased(kr, gamma, beta)
+    else:
+        q, k = qr, kr
+    fk = q.shape[-1]
+    if variant == 'retention':
+        g = retention_gates(n, fk)
+    elif variant == 'gla':
+        raw = hn @ wg  # [n, hh*fk]
+        g = gla_gates(raw).reshape(n, hh, fk)
+    else:
+        g = None
+    if g is not None:
+        b = np.cumprod(g, axis=0)
+        qt, kt = q * b, k / b
+    else:
+        b = None
+        qt, kt = q, k
+    attn = np.empty((n, hh, dh))
+    tril = np.tril(np.ones((n, n)))
+    for h in range(hh):
+        s = qt[:, h, :] @ kt[:, h, :].T
+        if masked:
+            s = s * tril
+        attn[:, h, :] = s @ v[:, h, :]
+    if want_cache:
+        return attn, dict(qr=qr, kr=kr, q=q, k=k, v=v, g=g, b=b)
+    return attn
+
+def backward(variant, hn, wq, wk, wv, wg, gamma, beta, dattn, masked=True):
+    """Returns grads dict incl. dhn."""
+    attn, c = forward(variant, hn, wq, wk, wv, wg, gamma, beta, masked, want_cache=True)
+    q, k, v, g, b = c['q'], c['k'], c['v'], c['g'], c['b']
+    fk = q.shape[-1]
+    rq = rq_red if variant in ('based', 'rebased') else dh
+    if b is not None:
+        qt, kt = q * b, k / b
+    else:
+        qt, kt = q, k
+    tril = np.tril(np.ones((n, n)))
+    dqt = np.zeros_like(qt); dkt = np.zeros_like(kt); dv = np.zeros_like(v)
+    for h in range(hh):
+        doh = dattn[:, h, :]
+        s = qt[:, h, :] @ kt[:, h, :].T
+        if masked:
+            s = s * tril
+        dv[:, h, :] = s.T @ doh
+        ds = doh @ v[:, h, :].T
+        if masked:
+            ds = ds * tril
+        dqt[:, h, :] = ds @ kt[:, h, :]
+        dkt[:, h, :] = ds.T @ qt[:, h, :]
+    grads = {}
+    if b is not None:
+        dq = dqt * b
+        dk = dkt / b
+        if variant == 'gla':
+            db = dqt * q - dk * k / b
+            # cumprod backward: dg_s = (sum_{i>=s} db_i * b_i) / g_s
+            dbb = db * b
+            suff = np.cumsum(dbb[::-1], axis=0)[::-1]
+            dg = suff / g
+            draw = gla_gates_bwd(hn @ wg, dg.reshape(n, hh * fk))
+            grads['wg'] = hn.T @ draw
+            dhn_gate = draw @ wg.T
+        else:
+            dhn_gate = 0.0
+    else:
+        dq, dk = dqt, dkt
+        dhn_gate = 0.0
+    # feature map backward
+    if variant == 'based':
+        dqr = phi_based_bwd(c['qr'], dq)
+        dkr = phi_based_bwd(c['kr'], dk)
+    elif variant == 'rebased':
+        dqr, dgq, dbq = phi_rebased_bwd(c['qr'], gamma, beta, dq)
+        dkr, dgk, dbk = phi_rebased_bwd(c['kr'], gamma, beta, dk)
+        grads['gamma'] = dgq + dgk
+        grads['beta'] = dbq + dbk
+    else:
+        dqr, dkr = dq, dk
+    dqf = dqr.reshape(n, hh * rq)
+    dkf = dkr.reshape(n, hh * rq)
+    dvf = dv.reshape(n, hh * dh)
+    grads['wq'] = hn.T @ dqf
+    grads['wk'] = hn.T @ dkf
+    grads['wv'] = hn.T @ dvf
+    grads['hn'] = dqf @ wq.T + dkf @ wk.T + dvf @ wv.T + dhn_gate
+    return grads
+
+def recurrent_oracle(q, k, v, g):
+    # token recurrence per head: M_s = diag(g_s) M_{s-1} + k_s^T v_s; o = q_s M_s
+    out = np.zeros((n, hh, dh))
+    for h in range(hh):
+        fk = q.shape[-1]
+        M = np.zeros((fk, dh))
+        for s in range(n):
+            gs = g[s, h, :] if g is not None else np.ones(fk)
+            M = gs[:, None] * M + np.outer(k[s, h, :], v[s, h, :])
+            out[s, h, :] = q[s, h, :] @ M
+    return out
+
+def check(variant):
+    rq = rq_red if variant in ('based', 'rebased') else dh
+    fk = {'based': 1 + rq + rq * rq, 'rebased': rq}.get(variant, dh)
+    hn = rng.standard_normal((n, d)) * 0.5
+    wq = rng.standard_normal((d, hh * rq)) * 0.3
+    wk = rng.standard_normal((d, hh * rq)) * 0.3
+    wv = rng.standard_normal((d, hh * dh)) * 0.3
+    wg = rng.standard_normal((d, hh * fk)) * 0.3
+    gamma = rng.standard_normal(rq) * 0.5 + 1.0
+    beta = rng.standard_normal(rq) * 0.1
+    W = rng.standard_normal((n, hh, dh))
+    loss = lambda **kw: np.sum(forward(variant, **{**dict(hn=hn, wq=wq, wk=wk, wv=wv, wg=wg, gamma=gamma, beta=beta), **kw}) * W)
+    grads = backward(variant, hn, wq, wk, wv, wg, gamma, beta, W)
+    # forward matches the token recurrence oracle
+    attn, c = forward(variant, hn, wq, wk, wv, wg, gamma, beta, want_cache=True)
+    want = recurrent_oracle(c['q'], c['k'], c['v'], c['g'])
+    ferr = np.max(np.abs(attn - want) / (1.0 + np.abs(want)))
+    assert ferr < 1e-10, (variant, ferr)
+    # finite differences
+    params = {'hn': hn, 'wq': wq, 'wk': wk, 'wv': wv}
+    if variant == 'gla':
+        params['wg'] = wg
+    if variant == 'rebased':
+        params['gamma'] = gamma; params['beta'] = beta
+    eps = 1e-6
+    for name, p in params.items():
+        fd = np.zeros_like(p)
+        it = np.nditer(p, flags=['multi_index'])
+        for _ in it:
+            idx = it.multi_index
+            p0 = p[idx]
+            p[idx] = p0 + eps; lp = loss(**{name: p})
+            p[idx] = p0 - eps; lm = loss(**{name: p})
+            p[idx] = p0
+            fd[idx] = (lp - lm) / (2 * eps)
+        an = grads[name]
+        err = np.max(np.abs(fd - an) / (1.0 + np.abs(fd)))
+        assert err < 1e-6, (variant, name, err)
+        print(f"  {variant:10s} {name:6s} max rel err {err:.2e}")
+
+def check_jax(variant):
+    """Optional gold check: the hand backward vs jax.grad (machine eps)."""
+    import jax
+    import jax.numpy as jnp
+    jax.config.update("jax_enable_x64", True)
+    rq = rq_red if variant in ('based', 'rebased') else dh
+
+    def jax_forward(hn, wq, wk, wv, wg, gamma, beta):
+        qr = (hn @ wq).reshape(n, hh, rq)
+        kr = (hn @ wk).reshape(n, hh, rq)
+        v = (hn @ wv).reshape(n, hh, dh)
+        if variant == 'based':
+            def phi(x):
+                r = x.shape[-1]
+                return jnp.concatenate([
+                    jnp.ones(x.shape[:-1] + (1,)), x,
+                    (x[..., :, None] * x[..., None, :]).reshape(x.shape[:-1] + (r * r,))
+                    / jnp.sqrt(2.0)], -1)
+            q, k = phi(qr), phi(kr)
+        elif variant == 'rebased':
+            q, k = (qr * gamma + beta) ** 2, (kr * gamma + beta) ** 2
+        else:
+            q, k = qr, kr
+        fk = q.shape[-1]
+        if variant == 'retention':
+            lam = jnp.maximum(1.0 - 2.0 ** (-(5.0 + jnp.arange(hh))), GATE_FLOOR)
+            g = jnp.broadcast_to(lam[None, :, None], (n, hh, fk))
+        elif variant == 'gla':
+            g = (GATE_FLOOR + (1 - GATE_FLOOR)
+                 * jax.nn.sigmoid(hn @ wg) ** (1 / GLA_TAU)).reshape(n, hh, fk)
+        else:
+            g = None
+        if g is not None:
+            b = jnp.cumprod(g, axis=0)
+            qt, kt = q * b, k / b
+        else:
+            qt, kt = q, k
+        tril = jnp.tril(jnp.ones((n, n)))
+        return jnp.stack([((qt[:, h] @ kt[:, h].T) * tril) @ v[:, h] for h in range(hh)], 1)
+
+    fk = {'based': 1 + rq + rq * rq, 'rebased': rq}.get(variant, dh)
+    hn = rng.standard_normal((n, d)) * 0.5
+    wq = rng.standard_normal((d, hh * rq)) * 0.3
+    wk = rng.standard_normal((d, hh * rq)) * 0.3
+    wv = rng.standard_normal((d, hh * dh)) * 0.3
+    wg = rng.standard_normal((d, hh * fk)) * 0.3
+    gamma = rng.standard_normal(rq) * 0.5 + 1.0
+    beta = rng.standard_normal(rq) * 0.1
+    W = rng.standard_normal((n, hh, dh))
+    loss = lambda *a: jnp.sum(jax_forward(*a) * W)
+    jg = jax.grad(loss, argnums=tuple(range(7)))(hn, wq, wk, wv, wg, gamma, beta)
+    mine = backward(variant, hn, wq, wk, wv, wg, gamma, beta, W)
+    for nm, jgrad in zip(['hn', 'wq', 'wk', 'wv', 'wg', 'gamma', 'beta'], jg):
+        if nm not in mine:
+            continue
+        err = np.max(np.abs(np.asarray(jgrad) - mine[nm]) / (1 + np.abs(np.asarray(jgrad))))
+        assert err < 1e-12, (variant, nm, err)
+        print(f"  {variant:10s} {nm:6s} vs jax.grad  max rel err {err:.2e}")
+
+
+if __name__ == '__main__':
+    for v in ['basic', 'lightning', 'retention', 'gla', 'based', 'rebased']:
+        check(v)
+    try:
+        import jax  # noqa: F401
+        for v in ['basic', 'lightning', 'retention', 'gla', 'based', 'rebased']:
+            check_jax(v)
+        print("jax.grad cross-check OK")
+    except ImportError:
+        print("(jax not installed; skipped the jax.grad cross-check)")
+    print("ALL OK")

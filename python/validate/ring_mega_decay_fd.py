@@ -1,0 +1,52 @@
+"""Float64 validation of the gated ring / megatron-SP chunk math in
+rust/src/coordinator/schedulers.rs: local prefactor folding per chunk +
+the inter-chunk decay product F(s) = prod_{s<=u<rank} a_u folded into
+incoming K~ chunks must equal the token-level gated recurrence.
+
+    python3 python/validate/ring_mega_decay_fd.py
+"""
+import numpy as np
+
+rng = np.random.default_rng(3)
+W, C, fk, dv = 4, 5, 3, 4
+n = W * C
+
+q = rng.standard_normal((n, fk))
+k = rng.standard_normal((n, fk))
+v = rng.standard_normal((n, dv))
+g = 0.95 + 0.05 * rng.random((n, fk))  # gates in (0.95, 1)
+
+# oracle: token recurrence
+M = np.zeros((fk, dv)); want = np.zeros((n, dv))
+for s in range(n):
+    M = g[s][:, None] * M + np.outer(k[s], v[s])
+    want[s] = q[s] @ M
+
+# per-chunk local folding (fold_gates)
+qt = np.zeros_like(q); kt = np.zeros_like(k); a = np.zeros((W, fk))
+for t in range(W):
+    sl = slice(t * C, (t + 1) * C)
+    B = np.cumprod(g[sl], axis=0)
+    qt[sl] = q[sl] * B
+    kt[sl] = k[sl] / B
+    a[t] = B[-1]
+
+# ring/megatron accumulation for each rank r: sum over chunks s<=r of
+# (qt_r (F(s)*kt_s)^T . mask) v_s with F(s) = prod_{u=s}^{r-1} a_u
+got = np.zeros((n, dv))
+for r in range(W):
+    acc = np.zeros((C, dv))
+    F = np.ones(fk)
+    # process own chunk then walk backwards (ring order), folding carries
+    for s in range(r, -1, -1):
+        ks = kt[s * C:(s + 1) * C] * (F if s < r else 1.0)
+        S = qt[r * C:(r + 1) * C] @ ks.T
+        mask = np.ones((C, C)) if s < r else np.tril(np.ones((C, C)))
+        acc += (S * mask) @ v[s * C:(s + 1) * C]
+        if s > 0:
+            F = F * a[s - 1] if s - 1 < r else F  # next incoming chunk s-1: F(s-1)=a_{s-1}*F(s)
+    got[r * C:(r + 1) * C] = acc
+err = np.max(np.abs(got - want) / (1 + np.abs(want)))
+print("ring/mega gated vs recurrence:", err)
+assert err < 1e-10
+print("OK")

@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
     println!("|---|---|");
     for name in names {
         if !engine.has_artifact(&name) {
+            println!("| {name} | SKIPPED (no artifact on this backend) |");
             continue;
         }
         let exe = engine.artifact(&name)?;

@@ -254,9 +254,34 @@ pub fn lasp1_linear_layer(
     Ok(LinearLayerOut { y, cache })
 }
 
+/// Scale a [C, H, fk] tensor by a per-(head, feature) factor vector
+/// (len H*fk), broadcast over the chunk axis — folds an inter-chunk decay
+/// product into a locally-folded K~ chunk.
+fn scale_features(t: &Tensor, f: &[f32]) -> Tensor {
+    let mut out = t.clone();
+    let stride = f.len();
+    for (i, v) in out.data_mut().iter_mut().enumerate() {
+        *v *= f[i % stride];
+    }
+    out
+}
+
+/// True when the baseline K/V-circulating schedulers can run this variant:
+/// they reuse the basic-shaped [C, H, dh] artifacts, so the feature dim
+/// must equal head_dim (everything except Based/ReBased).
+fn baseline_supports(variant: Variant) -> bool {
+    matches!(
+        variant,
+        Variant::Basic | Variant::Lightning | Variant::Retention | Variant::Gla
+    )
+}
+
 /// Ring Attention applied to the linear-attention instance WITHOUT the
 /// right-product trick (paper Sec. 4.1 comparison setup): K/V chunks
 /// circulate the ring; each hop accumulates a masked left-product block.
+/// For decay-gated variants the chunk's carry a_t circulates too and the
+/// receiver folds the inter-chunk decay prod_{s<=u<rank} a_u into the
+/// incoming K~ (the prefactor trick across chunk boundaries).
 pub fn ring_linear_layer(
     engine: &Engine,
     comm: &Communicator,
@@ -266,10 +291,10 @@ pub fn ring_linear_layer(
     x: Tensor,
 ) -> Result<LinearLayerOut> {
     let variant = run.variant;
-    if variant != Variant::Basic {
-        bail!("ring baseline is built for the basic variant");
+    if !baseline_supports(variant) {
+        bail!("ring baseline needs fk == head_dim (got variant {variant})");
     }
-    let (qt, kt, v, _m, _a) = part1(engine, variant, layer, params, &x)?;
+    let (qt, kt, v, _m, a) = part1(engine, variant, layer, params, &x)?;
     let c = engine.model.chunk_len;
     let step = engine.artifact("ring_linear_step")?;
     let rank = comm.rank();
@@ -278,21 +303,45 @@ pub fn ring_linear_layer(
     let mut acc = Tensor::zeros(v.shape());
     let mut cur_k = kt;
     let mut cur_v = v;
+    let mut cur_a = a;
+    // F(s) = prod_{s<=u<rank} a_u for the chunk s currently held (ones for
+    // non-decay variants; wrapped-around chunks s > rank are masked out by
+    // the offset-causal mask, so their stale F never contributes).
+    let mut fvec = vec![1.0f32; cur_a.len()];
     let mut cur_idx = rank;
     for hop in 0..w {
+        let k_use = if variant.has_decay() && hop > 0 {
+            scale_features(&cur_k, &fvec)
+        } else {
+            cur_k.clone()
+        };
         acc = step.run1(&[
             qt.clone().into(),
-            cur_k.clone().into(),
+            k_use.into(),
             cur_v.clone().into(),
             acc.into(),
             Value::i32_scalar((rank * c) as i32),
             Value::i32_scalar((cur_idx * c) as i32),
         ])?;
         if hop + 1 < w {
-            comm.send(comm.right(), vec![cur_k, cur_v]);
-            let mut msg = comm.recv(comm.left());
-            cur_v = msg.pop().unwrap();
-            cur_k = msg.pop().unwrap();
+            // the carry a_t rides along only when decay makes it meaningful
+            // (don't inflate the basic baseline's measured comm bytes)
+            if variant.has_decay() {
+                comm.send(comm.right(), vec![cur_k, cur_v, cur_a]);
+                let mut msg = comm.recv(comm.left());
+                cur_a = msg.pop().unwrap();
+                cur_v = msg.pop().unwrap();
+                cur_k = msg.pop().unwrap();
+                // F(s) = a_s * F(s+1): fold in the newly arrived carry
+                for (f, av) in fvec.iter_mut().zip(cur_a.data()) {
+                    *f *= av;
+                }
+            } else {
+                comm.send(comm.right(), vec![cur_k, cur_v]);
+                let mut msg = comm.recv(comm.left());
+                cur_v = msg.pop().unwrap();
+                cur_k = msg.pop().unwrap();
+            }
             cur_idx = (cur_idx + w - 1) % w;
         }
     }
@@ -303,7 +352,9 @@ pub fn ring_linear_layer(
 }
 
 /// Megatron-SP style baseline: AllGather the FULL K/V along the sequence
-/// (bytes grow with N) and compute the left product locally.
+/// (bytes grow with N) and compute the left product locally.  Decay-gated
+/// variants also gather the per-chunk carries a_t and fold the inter-chunk
+/// decay into the earlier K~ chunks before the local product.
 pub fn megatron_linear_layer(
     engine: &Engine,
     comm: &Communicator,
@@ -313,14 +364,33 @@ pub fn megatron_linear_layer(
     x: Tensor,
 ) -> Result<LinearLayerOut> {
     let variant = run.variant;
-    if variant != Variant::Basic {
-        bail!("megatron-sp baseline is built for the basic variant");
+    if !baseline_supports(variant) {
+        bail!("megatron-sp baseline needs fk == head_dim (got variant {variant})");
     }
-    let (qt, kt, v, _m, _a) = part1(engine, variant, layer, params, &x)?;
+    let (qt, kt, v, _m, a) = part1(engine, variant, layer, params, &x)?;
     let c = engine.model.chunk_len;
     let w = comm.size();
-    let gathered = comm.all_gather(vec![kt, v]);
-    let k_all = Tensor::cat0(&gathered.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
+    let rank = comm.rank();
+    // the carries ride the AllGather only for decay variants (keeps the
+    // basic baseline's measured comm bytes identical to the paper setup)
+    let gathered = if variant.has_decay() {
+        comm.all_gather(vec![kt, v, a])
+    } else {
+        comm.all_gather(vec![kt, v])
+    };
+    let mut k_chunks: Vec<Tensor> = gathered.iter().map(|g| g[0].clone()).collect();
+    if variant.has_decay() {
+        // chunk s < rank is scaled by prod_{s<=u<rank} a_u; chunks past our
+        // own are zeroed by the offset-causal mask and stay unscaled.
+        let mut f = vec![1.0f32; gathered[rank][2].len()];
+        for s in (0..rank).rev() {
+            for (fv, av) in f.iter_mut().zip(gathered[s][2].data()) {
+                *fv *= av;
+            }
+            k_chunks[s] = scale_features(&k_chunks[s], &f);
+        }
+    }
+    let k_all = Tensor::cat0(&k_chunks);
     let v_all = Tensor::cat0(&gathered.iter().map(|g| g[1].clone()).collect::<Vec<_>>());
     let exe = engine.artifact(&format!("mega_attn_basic_T{w}"))?;
     let attn = exe.run1(&[

@@ -68,6 +68,7 @@ COMMANDS
   run           distributed forward, verified against the monolithic oracle
                   --preset tiny|small  --world N  --scheduler lasp2|lasp1|...
                   --variant basic|gla|...  --splits K
+                  --strict  (error out if the verification oracle is missing)
   train         real training via the AOT train_step artifact
                   --preset tiny|small|medium  --variant basic --ratio 0|1/4
                   --steps N  --lr 3e-3  --mlm  --csv path.csv
@@ -132,6 +133,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let scheduler = Scheduler::parse(&args.get("scheduler", "lasp2"))?;
     let variant = Variant::parse(&args.get("variant", "basic"))?;
     let splits = args.usize("splits", 1)?;
+    let strict = args.get("strict", "false") == "true";
     let engine = Engine::load_preset(&preset)?;
     let cfg = engine.model.clone();
     let pattern = Pattern("L".repeat(cfg.n_layers));
@@ -169,6 +171,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         let err = logits.max_rel_err(&want);
         println!("verified vs {mono_name}: max rel err {err:.2e}");
         anyhow::ensure!(err < 2e-3, "mismatch vs monolithic oracle");
+    } else if strict {
+        bail!(
+            "--strict: verification oracle artifact {mono_name} is missing \
+             for preset {preset}; refusing to report an unverified run"
+        );
     } else {
         println!("(no {mono_name} artifact; skipping verification)");
     }

@@ -1,7 +1,10 @@
-//! Training loop driver: runs the AOT `train_step_*` artifact (full
-//! forward + backward + Adam, compiled once by XLA) from rust, feeding
-//! synthetic batches and logging the loss curve.  Used by the convergence
-//! experiments (Tables 2/3/4) and the end-to-end example.
+//! Training loop driver: runs the `train_step_*` artifact (full forward +
+//! backward + Adam) from rust, feeding synthetic batches and logging the
+//! loss curve.  Every linear variant trains on the native backend —
+//! including the decay-gated ones (backward-through-gates) — so no tag is
+//! skipped here; a missing artifact is a hard error, not a silent no-op.
+//! Used by the convergence experiments (Tables 2/3/4) and the end-to-end
+//! example.
 
 use std::io::Write;
 use std::path::Path;
@@ -196,5 +199,32 @@ mod tests {
             "no learning: {:?}",
             rep.losses
         );
+    }
+
+    #[test]
+    fn tiny_gated_training_reduces_loss() {
+        // gated-variant training end-to-end through the native
+        // backward-through-gates train_step artifacts (the Table-2/4 rows
+        // that used to be PJRT-only).
+        let engine = Engine::load_preset("tiny").expect("tiny artifacts");
+        let pattern = Pattern("LL".into());
+        let opts = TrainOpts {
+            steps: 16,
+            peak_lr: 3e-3,
+            log_every: 0,
+            ..Default::default()
+        };
+        for (variant, tag) in [
+            (Variant::Gla, "gla_pure"),
+            (Variant::Retention, "retention_pure"),
+        ] {
+            let rep = train(&engine, variant, &pattern, tag, &opts).unwrap();
+            assert!(rep.losses.iter().all(|l| l.is_finite()), "{tag}");
+            assert!(
+                rep.tail_loss < rep.losses[0],
+                "{tag} no learning: {:?}",
+                rep.losses
+            );
+        }
     }
 }

@@ -124,33 +124,37 @@ fn scheduler_equivalence_at_world_two() {
 fn all_schedulers_agree_pairwise_and_with_oracle_w4() {
     // Native-backend parity gate: LASP-2 / LASP-2(overlap) / LASP-1 /
     // Ring Attention / Megatron-SP must produce identical logits on the
-    // tiny shape at W=4, and all must match the single-device oracle.
+    // tiny shape at W=4, and all must match the single-device oracle —
+    // for the basic variant AND a decay-gated one (gla), whose per-chunk
+    // carry `a` exercises the gated prefix-combine on every scheduler.
     let e = engine();
     let cfg = e.model.clone();
-    let mut run = run_config(Scheduler::Lasp2, Variant::Basic, cfg.n_layers);
-    let params = Params::randn(&cfg, Variant::Basic, &run.pattern, 17);
-    let n = run.world * cfg.chunk_len;
-    let toks = tokens(n, cfg.vocab);
-    let mono = format!("forward_mono_basic_pure_N{n}");
-    let want = forward_mono(&e, &mono, &params, &toks).unwrap();
-    let schedulers = [
-        Scheduler::Lasp2,
-        Scheduler::Lasp2Overlap,
-        Scheduler::Lasp1,
-        Scheduler::RingAttention,
-        Scheduler::MegatronSp,
-    ];
-    let mut results = Vec::new();
-    for sched in schedulers {
-        run.scheduler = sched;
-        let world = World::new(run.world);
-        let got = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
-        let err = got.max_rel_err(&want);
-        assert!(err < TOL, "{sched} vs oracle: {err}");
-        results.push(got);
-    }
-    for (sched, got) in schedulers.iter().zip(&results).skip(1) {
-        assert!(got.allclose(&results[0], 1e-4), "{sched} vs lasp2");
+    for variant in [Variant::Basic, Variant::Gla] {
+        let mut run = run_config(Scheduler::Lasp2, variant, cfg.n_layers);
+        let params = Params::randn(&cfg, variant, &run.pattern, 17);
+        let n = run.world * cfg.chunk_len;
+        let toks = tokens(n, cfg.vocab);
+        let mono = format!("forward_mono_{}_pure_N{n}", variant.name());
+        let want = forward_mono(&e, &mono, &params, &toks).unwrap();
+        let schedulers = [
+            Scheduler::Lasp2,
+            Scheduler::Lasp2Overlap,
+            Scheduler::Lasp1,
+            Scheduler::RingAttention,
+            Scheduler::MegatronSp,
+        ];
+        let mut results = Vec::new();
+        for sched in schedulers {
+            run.scheduler = sched;
+            let world = World::new(run.world);
+            let got = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+            let err = got.max_rel_err(&want);
+            assert!(err < TOL, "{sched} {variant} vs oracle: {err}");
+            results.push(got);
+        }
+        for (sched, got) in schedulers.iter().zip(&results).skip(1) {
+            assert!(got.allclose(&results[0], 1e-4), "{sched} {variant} vs lasp2");
+        }
     }
 }
 
