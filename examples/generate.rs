@@ -1,0 +1,131 @@
+//! Serving demo: constant-memory autoregressive generation on the
+//! LASP-2 recurrent state.
+//!
+//!     cargo run --release --example generate [-- <preset> [variant] [n]]
+//!
+//! What happens:
+//!  1. `Model::load` stages the weights once (preset + init artifact);
+//!  2. a `Session` prefills the prompt through the chunked LASP-2 path
+//!     (one l_part1 + gated prefix combine + l_part2 per linear layer);
+//!  3. `decode` then emits one token per step by updating the per-head
+//!     recurrent state M <- diag(g) M + k^T v — the per-request state
+//!     stays EXACTLY the same size no matter how long the sequence gets;
+//!  4. `snapshot`/`restore` reuse the prefilled prompt for a second
+//!     continuation without re-running prefill;
+//!  5. `Batch` steps several sessions per kernel call.
+
+use std::time::Instant;
+
+use lasp2::config::Variant;
+use lasp2::serve::{argmax, Batch, Model, Session};
+
+/// Greedy-decode `n` tokens starting from the token chosen by `last_row`.
+fn continuation(
+    session: &mut Session<'_>,
+    last_row: &[f32],
+    n: usize,
+) -> anyhow::Result<Vec<i32>> {
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let mut next = argmax(last_row);
+    let mut out = Vec::with_capacity(n);
+    out.push(next);
+    while out.len() < n {
+        let row = session.decode(next)?;
+        next = argmax(row.data());
+        out.push(next);
+    }
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(|s| s.as_str()).unwrap_or("tiny").to_string();
+    let variant = Variant::parse(args.get(1).map(|s| s.as_str()).unwrap_or("gla"))?;
+    let n_tokens: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(32).max(1);
+
+    let model = Model::load(&preset, variant, "0", 0)?;
+    model.warmup_serving()?;
+    let cfg = model.config().clone();
+    println!(
+        "model: preset={} variant={} pattern={} d_model={} chunk_len={}",
+        cfg.preset,
+        variant,
+        model.pattern().0,
+        cfg.d_model,
+        cfg.chunk_len
+    );
+
+    let prompt: Vec<i32> = (0..cfg.chunk_len as i32)
+        .map(|i| (i * 7 + 3) % cfg.vocab as i32)
+        .collect();
+    let mut session = model.session();
+    let t0 = Instant::now();
+    let logits = session.prefill(&prompt)?;
+    println!(
+        "prefill: {} tokens in {:.1} ms (state {} bytes)",
+        prompt.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        session.state_bytes()
+    );
+    let last_row = logits.data()[(prompt.len() - 1) * cfg.vocab..].to_vec();
+
+    // prefix reuse: snapshot after the prompt, decode two continuations
+    let snap = session.snapshot();
+    let bytes_before = session.state_bytes();
+    let t1 = Instant::now();
+    let cont_a = continuation(&mut session, &last_row, n_tokens)?;
+    let dt = t1.elapsed().as_secs_f64().max(1e-9);
+    // the first token comes free from the prefill logits; only
+    // n_tokens - 1 decode steps ran in the timed window
+    println!(
+        "decode: {} tokens in {:.1} ms ({:.0} tokens/s)",
+        n_tokens - 1,
+        dt * 1e3,
+        (n_tokens - 1) as f64 / dt
+    );
+    println!(
+        "state bytes: {} after prefill -> {} after {} more tokens{}",
+        bytes_before,
+        session.state_bytes(),
+        n_tokens - 1,
+        if session.state_bytes() == bytes_before {
+            "  (CONSTANT — the recurrent state does not grow)"
+        } else {
+            "  (grows: std KV-cache layers present)"
+        }
+    );
+    session.restore(&snap);
+    let cont_b = continuation(&mut session, &last_row, n_tokens)?;
+    anyhow::ensure!(
+        cont_a == cont_b,
+        "snapshot/restore must make generation deterministic"
+    );
+    println!("continuation (greedy): {cont_a:?}");
+    println!("snapshot/restore replay: identical — prefix reuse OK");
+
+    // batched decode: 4 sessions stepped per kernel call
+    let mut batch = Batch::new(&model);
+    for _ in 0..4 {
+        let mut s = model.session();
+        s.prefill(&prompt)?;
+        batch.push(s);
+    }
+    let t2 = Instant::now();
+    let mut toks = vec![argmax(&last_row); 4];
+    for _ in 0..n_tokens {
+        let rows = batch.decode(&toks)?;
+        for (t, row) in toks.iter_mut().zip(&rows) {
+            *t = argmax(row.data());
+        }
+    }
+    let dt2 = t2.elapsed().as_secs_f64().max(1e-9);
+    println!(
+        "batched decode: 4 sessions x {} tokens in {:.1} ms ({:.0} tokens/s aggregate)",
+        n_tokens,
+        dt2 * 1e3,
+        (4 * n_tokens) as f64 / dt2
+    );
+    Ok(())
+}

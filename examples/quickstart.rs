@@ -1,63 +1,88 @@
-//! Quickstart: run LASP-2 sequence-parallel inference over 4 simulated
-//! devices and verify it reproduces the single-device oracle exactly.
+//! Quickstart: the two public surfaces of the crate, end to end.
 //!
-//!     make artifacts            # once (builds tiny+small HLO artifacts)
 //!     cargo run --release --example quickstart [-- <preset> [world]]
 //!
-//! What happens:
-//!  1. the PJRT runtime loads the AOT artifacts (no python involved);
-//!  2. 4 worker threads each own one sequence chunk;
-//!  3. every linear layer does Alg. 2: part1 -> ONE AllGather over the
-//!     (M_t, a_t) memory states -> local prefix combine -> fused part2;
-//!  4. the gathered logits are checked against forward_mono (allclose).
+//! 1. **Serving** (`serve::Model`/`serve::Session`): load the model once,
+//!    prefill a prompt through the chunked LASP-2 path, then decode
+//!    autoregressively on the recurrent state — and verify the decoded
+//!    logits reproduce the single-device oracle at every position.
+//! 2. **Sequence parallelism** (`forward_distributed`): the same model
+//!    run over W simulated devices, each linear layer doing Alg. 2:
+//!    part1 -> ONE AllGather over the (M_t, a_t) memory states -> local
+//!    prefix combine -> fused part2 — also verified against the oracle.
 
 use std::time::Instant;
 
 use lasp2::comm::World;
-use lasp2::config::{Pattern, RunConfig, Scheduler, Variant};
-use lasp2::coordinator::{forward_distributed, forward_mono, Params};
-use lasp2::runtime::Engine;
+use lasp2::config::{RunConfig, Scheduler, Variant};
+use lasp2::coordinator::{forward_distributed, forward_mono};
+use lasp2::serve::Model;
+use lasp2::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let preset = args.first().map(|s| s.as_str()).unwrap_or("tiny").to_string();
     let world_size: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
 
-    let engine = Engine::load_preset(&preset)?;
-    let cfg = engine.model.clone();
+    // ---- load once: preset shapes + params, weights staged on first use
+    let model = Model::load(&preset, Variant::Basic, "0", 42)?;
+    let cfg = model.config().clone();
     println!(
         "model: preset={} d_model={} heads={} layers={} chunk_len={}",
         cfg.preset, cfg.d_model, cfg.n_heads, cfg.n_layers, cfg.chunk_len
     );
 
-    let pattern = Pattern("L".repeat(cfg.n_layers));
-    let run = RunConfig {
-        world: world_size,
-        scheduler: Scheduler::Lasp2,
-        variant: Variant::Basic,
-        pattern: pattern.clone(),
-        gather_splits: 1,
-        seed: 0,
-    };
-    let params = Params::randn(&cfg, run.variant, &pattern, 42);
     let n = world_size * cfg.chunk_len;
     let tokens: Vec<i32> = (0..n as i32).map(|i| (i * 7 + 3) % cfg.vocab as i32).collect();
 
-    let world = World::new(world_size);
-    // warm-up compiles the artifacts
-    forward_distributed(&engine, &world, &run, &params, &tokens, true)?;
-    world.reset_counters();
-
+    // ---- 1. serving: prefill + decode, verified position by position
+    let mut session = model.session();
+    let split = n / 2;
     let t0 = Instant::now();
+    let prefill_logits = session.prefill(&tokens[..split])?;
+    let mut rows = vec![prefill_logits];
+    for &t in &tokens[split..] {
+        rows.push(session.decode(t)?.reshape(&[1, cfg.vocab]));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let served = Tensor::cat0(&rows);
+    println!(
+        "serve: prefilled {split} + decoded {} tokens in {:.1} ms (state {} bytes, constant)",
+        n - split,
+        dt * 1e3,
+        session.state_bytes()
+    );
+
+    // ---- 2. distributed: LASP-2 over W devices
+    let run = RunConfig {
+        world: world_size,
+        scheduler: Scheduler::Lasp2,
+        variant: model.variant(),
+        pattern: model.pattern().clone(),
+        gather_splits: 1,
+        seed: 0,
+    };
+    let world = World::new(world_size);
+    let engine = model.engine();
+    // warm-up instantiates the artifacts
+    forward_distributed(engine, &world, &run, model.params(), &tokens, true)?;
+    world.reset_counters();
+    let t1 = Instant::now();
     let iters = 5;
     let mut logits = None;
     for _ in 0..iters {
-        logits = Some(forward_distributed(&engine, &world, &run, &params, &tokens, true)?);
+        logits = Some(forward_distributed(
+            engine,
+            &world,
+            &run,
+            model.params(),
+            &tokens,
+            true,
+        )?);
     }
-    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let dt = t1.elapsed().as_secs_f64() / iters as f64;
     let logits = logits.unwrap();
     let snap = world.counters();
-
     println!(
         "LASP-2 forward over {world_size} devices: N={n} tokens in {:.1} ms  ({:.0} tokens/s)",
         dt * 1e3,
@@ -70,13 +95,18 @@ fn main() -> anyhow::Result<()> {
         snap.bytes as f64 / 1e3 / iters as f64,
     );
 
+    // ---- verify BOTH surfaces against the single-device oracle
     let mono_name = format!("forward_mono_basic_pure_N{n}");
     if engine.has_artifact(&mono_name) {
-        let want = forward_mono(&engine, &mono_name, &params, &tokens)?;
-        let err = logits.max_rel_err(&want);
-        println!("verification vs single-device oracle: max rel err {err:.2e}");
-        anyhow::ensure!(err < 2e-3, "distributed forward diverged from oracle");
-        println!("OK — LASP-2 distributed == monolithic.");
+        let want = forward_mono(engine, &mono_name, model.params(), &tokens)?;
+        let serve_err = served.max_rel_err(&want);
+        let sp_err = logits.max_rel_err(&want);
+        println!("verification vs single-device oracle:");
+        println!("  serve (prefill+decode) max rel err {serve_err:.2e}");
+        println!("  distributed (LASP-2)   max rel err {sp_err:.2e}");
+        anyhow::ensure!(serve_err < 1e-4, "serving decode diverged from oracle");
+        anyhow::ensure!(sp_err < 2e-3, "distributed forward diverged from oracle");
+        println!("OK — decode == LASP-2 distributed == monolithic.");
     } else {
         println!("(oracle forward_mono artifact not built for W={world_size}; skipped)");
     }

@@ -1,0 +1,46 @@
+//! Bench: serving decode — autoregressive tokens/s and the
+//! state-bytes-vs-position table (constant for linear variants' recurrent
+//! state, linear growth for the std KV cache), plus batched decode
+//! scaling through the `serve::Batch` grouped kernels.
+//!
+//! Run via `cargo bench --bench decode_speed`.
+
+use std::time::Instant;
+
+use lasp2::bench;
+use lasp2::config::Variant;
+use lasp2::runtime::Engine;
+use lasp2::serve::{Batch, Model};
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("LASP2_PRESET").unwrap_or_else(|_| "tiny".into());
+    let engine = Engine::load_preset(&preset)?;
+    let n = (engine.model.max_seq / 4).max(8);
+
+    println!("# serving decode — constant-memory inference (preset={preset}, {n} tokens)\n");
+    println!("{}", bench::decode_bench(&engine, n)?.to_markdown());
+
+    // batched decode: sessions stepped per kernel call via serve::Batch
+    println!("\n# batched decode scaling (basic pure, {n} steps per session)\n");
+    println!("| batch | tokens/s (aggregate) |");
+    println!("|---|---|");
+    for b in [1usize, 2, 4, 8] {
+        let model = Model::with_engine(engine.clone(), Variant::Basic, "0", 1)?;
+        model.warmup_serving()?;
+        let mut batch = Batch::new(&model);
+        for _ in 0..b {
+            batch.push(model.session());
+        }
+        let tokens = vec![1i32; b];
+        // one untimed step instantiates the *_B{b} artifacts for this
+        // batch size (warmup_serving only covers B=1)
+        batch.decode(&tokens)?;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            batch.decode(&tokens)?;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!("| {b} | {:.0} |", (b * n) as f64 / dt);
+    }
+    Ok(())
+}

@@ -19,6 +19,7 @@ use crate::config::{Pattern, RunConfig, Scheduler, Variant};
 use crate::coordinator::{forward_distributed, Params};
 use crate::metrics::{fmt_seq, Table};
 use crate::runtime::Engine;
+use crate::serve::{argmax, Model};
 use crate::sim::{simulate, CostModel};
 use crate::coordinator::plan::SimShape;
 use crate::train::{train, TrainOpts};
@@ -139,6 +140,71 @@ pub fn table5_splits(cm: &CostModel) -> Table {
         ]);
     }
     t
+}
+
+/// Serving decode (REAL-EXEC): autoregressive tokens/s plus per-request
+/// state bytes sampled at N/4, N/2, and N decoded tokens.  This is the
+/// paper's constant-memory-inference claim made measurable: the linear
+/// variants' recurrent `ChunkState` is FLAT in position, while the std
+/// softmax baseline's KV cache (and the KV half of a hybrid) grows
+/// linearly.
+pub fn decode_bench(engine: &Arc<Engine>, n_tokens: usize) -> Result<Table> {
+    anyhow::ensure!(
+        (4..=engine.model.max_seq).contains(&n_tokens),
+        "n_tokens {n_tokens} must be in 4..=max_seq ({})",
+        engine.model.max_seq
+    );
+    let mut t = Table::new(&[
+        "model",
+        "pattern",
+        "decode tok/s",
+        "state_bytes@N/4",
+        "state_bytes@N/2",
+        "state_bytes@N",
+        "state growth",
+    ]);
+    let mut cases: Vec<(Variant, &str)> = Variant::linear_variants()
+        .iter()
+        .map(|v| (*v, "0"))
+        .collect();
+    cases.push((Variant::Basic, "1/2"));
+    cases.push((Variant::Softmax, "all"));
+    let marks = [n_tokens / 4, n_tokens / 2, n_tokens];
+    for (variant, ratio) in cases {
+        let model = Model::with_engine(engine.clone(), variant, ratio, 1)?;
+        // instantiate the decode artifacts OUTSIDE the timed region (on
+        // PJRT the first call would otherwise time an HLO compile)
+        model.warmup_serving()?;
+        let mut session = model.session();
+        let mut bytes = [0usize; 3];
+        let mut tok = 1i32;
+        let t0 = Instant::now();
+        for step in 1..=n_tokens {
+            let row = session.decode(tok)?;
+            tok = argmax(row.data());
+            for (j, m) in marks.iter().enumerate() {
+                if step == *m {
+                    bytes[j] = session.state_bytes();
+                }
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let growth = if bytes[2] > bytes[0] {
+            "linear (KV cache)"
+        } else {
+            "constant (recurrent state)"
+        };
+        t.row(&[
+            variant.name().to_string(),
+            model.pattern().0.clone(),
+            format!("{:.0}", n_tokens as f64 / dt),
+            bytes[0].to_string(),
+            bytes[1].to_string(),
+            bytes[2].to_string(),
+            growth.to_string(),
+        ]);
+    }
+    Ok(t)
 }
 
 /// Table 2: convergence (loss + throughput) for the attention-module zoo,

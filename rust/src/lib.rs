@@ -6,7 +6,9 @@
 //!   LASP-1, Ring Attention, Megatron-SP, LASP-2H hybrid dispatch), an
 //!   in-memory multi-device world with instrumented collectives, a
 //!   discrete-event cluster simulator for paper-scale extrapolation, a
-//!   training loop, and the benchmark harness for every table/figure.
+//!   training loop, the serving layer (`serve::Model`/`serve::Session`:
+//!   constant-memory autoregressive decode on the recurrent state), and
+//!   the benchmark harness for every table/figure.
 //! * **L2 (python/compile, build-time)** — Linear-Llama3 in JAX, lowered
 //!   once to HLO-text artifacts.
 //! * **L1 (python/compile/kernels, build-time)** — Pallas kernels for the
@@ -25,10 +27,12 @@ pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tensor;
 pub mod train;
 
 pub use config::{ModelConfig, Pattern, RunConfig, Scheduler, Variant};
 pub use runtime::Engine;
+pub use serve::{Batch, Model, Session};
 pub use tensor::Tensor;

@@ -20,7 +20,9 @@ use lasp2::bench;
 use lasp2::comm::World;
 use lasp2::config::{Pattern, RunConfig, Scheduler, Variant};
 use lasp2::coordinator::{forward_distributed, forward_mono, Params};
+use lasp2::metrics::Table;
 use lasp2::runtime::Engine;
+use lasp2::serve::{argmax, Model};
 use lasp2::sim::CostModel;
 use lasp2::train::{train, TrainOpts};
 
@@ -29,12 +31,18 @@ struct Args {
 }
 
 impl Args {
+    /// Parse `--key value`, `--key=value`, and bare `--flag` (-> "true").
+    /// Everything after the FIRST `=` is the value, so values may contain
+    /// `=` themselves (e.g. `--csv=run=1.csv`).
     fn parse(argv: &[String]) -> Args {
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                    i += 1;
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                     flags.insert(key.to_string(), argv[i + 1].clone());
                     i += 2;
                 } else {
@@ -46,6 +54,10 @@ impl Args {
             }
         }
         Args { flags }
+    }
+
+    fn is_set(&self, key: &str) -> bool {
+        self.get(key, "false") == "true"
     }
 
     fn get(&self, key: &str, default: &str) -> String {
@@ -72,6 +84,10 @@ COMMANDS
   train         real training via the AOT train_step artifact
                   --preset tiny|small|medium  --variant basic --ratio 0|1/4
                   --steps N  --lr 3e-3  --mlm  --csv path.csv
+  generate      serving demo: prefill a prompt, then autoregressive decode
+                on the recurrent state (constant memory for linear layers)
+                  --preset tiny|small  --variant basic|gla|...  --ratio 0|1/2
+                  --tokens N  --prompt 1,2,3  --seed S
   bench-fig3    speed comparison tokens/s (sim @64 GPUs) + real-exec table
   bench-fig4    scalability frontier (sim)
   bench-table2  convergence zoo (real training; needs small bench artifacts)
@@ -79,8 +95,13 @@ COMMANDS
   bench-table4  hybrid-ratio ablation (real training)
   bench-table5  AllGather split-size ablation (sim)
   bench-table6  quantitative scalability table (sim)
+  bench-decode  serving decode: tokens/s + state-bytes-vs-seqlen table
+                  --preset tiny|small  --tokens N
   bench-all     all of the above
-  stats         print per-artifact runtime stats after a run
+
+Flags accept both `--key value` and `--key=value`.  `run`, `train`, and
+`generate` also take `--profile` to print the per-artifact execution time
+table after the run.
 ";
 
 fn main() -> Result<()> {
@@ -90,6 +111,8 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&args),
         "train" => cmd_train(&args),
+        "generate" => cmd_generate(&args),
+        "bench-decode" => cmd_decode_bench(&args),
         "bench-fig3" => cmd_fig3(&args),
         "bench-fig4" => {
             println!("# Fig. 4 — scalability frontier (sim)\n");
@@ -117,6 +140,7 @@ fn main() -> Result<()> {
             cmd_table4(&args)?;
             println!("# Table 5\n\n{}", bench::table5_splits(&CostModel::default()).to_markdown());
             println!("# Table 6\n\n{}", bench::table6_scalability(&CostModel::default()).to_markdown());
+            cmd_decode_bench(&args)?;
             Ok(())
         }
         "help" | "--help" | "-h" => {
@@ -125,6 +149,96 @@ fn main() -> Result<()> {
         }
         other => bail!("unknown command {other}\n\n{HELP}"),
     }
+}
+
+/// `--profile`: the per-artifact execution time table (Engine stats).
+fn print_profile(engine: &Engine) {
+    let mut t = Table::new(&["artifact", "calls", "total_ms", "mean_us/call"]);
+    for (name, st) in engine.stats_report() {
+        if st.calls == 0 {
+            continue;
+        }
+        t.row(&[
+            name,
+            st.calls.to_string(),
+            format!("{:.2}", st.nanos as f64 / 1e6),
+            format!("{:.1}", st.nanos as f64 / 1e3 / st.calls as f64),
+        ]);
+    }
+    println!("\n# per-artifact execution profile\n\n{}", t.to_markdown());
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "tiny");
+    let variant = Variant::parse(&args.get("variant", "basic"))?;
+    let ratio = args.get("ratio", "0");
+    let n_tokens = args.usize("tokens", 32)?;
+    anyhow::ensure!(n_tokens >= 1, "--tokens must be >= 1");
+    let seed = args.usize("seed", 0)? as i32;
+    let model = Model::load(&preset, variant, &ratio, seed)?;
+    let cfg = model.config().clone();
+    let prompt: Vec<i32> = match args.flags.get("prompt") {
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim().parse::<i32>().with_context(|| format!("--prompt token {t:?}")))
+            .collect::<Result<_>>()?,
+        None => (0..cfg.chunk_len as i32)
+            .map(|i| (i * 7 + 3) % cfg.vocab as i32)
+            .collect(),
+    };
+    println!(
+        "preset={preset} variant={variant} pattern={} prompt_len={} decode_tokens={n_tokens}",
+        model.pattern().0,
+        prompt.len()
+    );
+    model.warmup_serving()?;
+    let mut session = model.session();
+
+    let t0 = std::time::Instant::now();
+    let logits = session.prefill(&prompt)?;
+    let prefill_s = t0.elapsed().as_secs_f64();
+    println!(
+        "prefill: {} tokens in {:.1} ms ({:.0} tokens/s), state {} bytes",
+        prompt.len(),
+        prefill_s * 1e3,
+        prompt.len() as f64 / prefill_s,
+        session.state_bytes()
+    );
+
+    let vb = cfg.vocab;
+    let last = &logits.data()[(logits.shape()[0] - 1) * vb..];
+    let mut next = argmax(last);
+    let mut generated = Vec::with_capacity(n_tokens);
+    generated.push(next);
+    let t1 = std::time::Instant::now();
+    while generated.len() < n_tokens {
+        let row = session.decode(next)?;
+        next = argmax(row.data());
+        generated.push(next);
+    }
+    let decode_s = t1.elapsed().as_secs_f64().max(1e-9);
+    println!(
+        "decode: {} tokens in {:.1} ms ({:.0} tokens/s), state {} bytes at pos {}",
+        generated.len() - 1,
+        decode_s * 1e3,
+        (generated.len() - 1) as f64 / decode_s,
+        session.state_bytes(),
+        session.pos()
+    );
+    println!("generated token ids: {generated:?}");
+    if args.is_set("profile") {
+        print_profile(model.engine());
+    }
+    Ok(())
+}
+
+fn cmd_decode_bench(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "tiny");
+    let engine = Engine::load_preset(&preset)?;
+    let n = args.usize("tokens", (engine.model.max_seq / 4).max(8))?;
+    println!("# Serving decode — constant-memory inference ({preset}, {n} tokens)\n");
+    println!("{}", bench::decode_bench(&engine, n)?.to_markdown());
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -179,6 +293,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     } else {
         println!("(no {mono_name} artifact; skipping verification)");
     }
+    if args.is_set("profile") {
+        print_profile(&engine);
+    }
     Ok(())
 }
 
@@ -208,6 +325,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         "trained {tag}: {} params, {} steps, final loss {:.4}, tail loss {:.4}, {:.0} tokens/s",
         rep.params, rep.steps, rep.final_loss, rep.tail_loss, rep.tokens_per_sec
     );
+    if args.is_set("profile") {
+        print_profile(&engine);
+    }
     Ok(())
 }
 
@@ -252,4 +372,46 @@ fn cmd_table4(args: &Args) -> Result<()> {
     println!("# Table 4 — hybrid-ratio ablation ({preset}, {steps} steps)\n");
     println!("{}", bench::table4_hybrid_ratio(&engine, steps)?.to_markdown());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn args_space_separated_and_bare_flags() {
+        let a = parse(&["--preset", "small", "--strict", "--world", "2"]);
+        assert_eq!(a.get("preset", "tiny"), "small");
+        assert_eq!(a.usize("world", 4).unwrap(), 2);
+        assert!(a.is_set("strict"));
+        assert!(!a.is_set("profile"));
+    }
+
+    #[test]
+    fn args_key_equals_value() {
+        let a = parse(&["--preset=small", "--lr=3e-4", "--world=8", "--profile"]);
+        assert_eq!(a.get("preset", "tiny"), "small");
+        assert_eq!(a.get("lr", "0"), "3e-4");
+        assert_eq!(a.usize("world", 4).unwrap(), 8);
+        assert!(a.is_set("profile"));
+    }
+
+    #[test]
+    fn args_equals_value_may_contain_equals_and_mixes_with_space_form() {
+        let a = parse(&["--csv=run=1.csv", "--steps", "10", "--ratio=1/2"]);
+        assert_eq!(a.get("csv", ""), "run=1.csv");
+        assert_eq!(a.usize("steps", 0).unwrap(), 10);
+        assert_eq!(a.get("ratio", "0"), "1/2");
+    }
+
+    #[test]
+    fn args_empty_equals_value_is_empty_string_not_true() {
+        let a = parse(&["--prompt=", "--tokens=4"]);
+        assert_eq!(a.get("prompt", "x"), "");
+        assert_eq!(a.usize("tokens", 0).unwrap(), 4);
+    }
 }

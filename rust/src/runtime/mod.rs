@@ -204,6 +204,12 @@ enum Backend {
     Pjrt(pjrt::Client),
 }
 
+/// Per-artifact cache slot: the outer map lock is only held long enough
+/// to fetch/create the slot; instantiation happens under the slot's own
+/// lock, so racing threads on the SAME name do the work exactly once
+/// while lookups of other (cached or compiling) artifacts never block.
+type CacheSlot = Arc<Mutex<Option<Arc<Executable>>>>;
+
 /// The engine: a preset's artifact registry plus the executable cache.
 /// Shared (`Arc`) by all worker threads.
 pub struct Engine {
@@ -211,7 +217,7 @@ pub struct Engine {
     pub manifest: Manifest,
     pub model: ModelConfig,
     backend: Backend,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    cache: Mutex<HashMap<String, CacheSlot>>,
 }
 
 impl Engine {
@@ -278,8 +284,23 @@ impl Engine {
     }
 
     /// Get (instantiate-on-first-use) an executable by artifact name.
+    ///
+    /// Instantiation happens under a per-name slot lock (see `CacheSlot`):
+    /// two threads racing on the same uncached artifact compile it exactly
+    /// once (the loser blocks on the slot, then reads the winner's entry),
+    /// while artifacts with other names — cached or mid-compile — are
+    /// never blocked.  A failed instantiation leaves the slot empty, so a
+    /// later call retries cleanly.
     pub fn artifact(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        let slot: CacheSlot = self
+            .cache
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone();
+        let mut slot = slot.lock().unwrap();
+        if let Some(e) = &*slot {
             return Ok(e.clone());
         }
         let meta = self
@@ -304,13 +325,12 @@ impl Engine {
             kind,
             stats: Mutex::new(ExecStats::default()),
         });
-        let mut cache = self.cache.lock().unwrap();
-        let entry = cache.entry(name.to_string()).or_insert_with(|| exec);
+        *slot = Some(exec.clone());
         let dt = t0.elapsed();
         if dt.as_millis() > 500 {
             eprintln!("[runtime] compiled {name} in {:.2}s", dt.as_secs_f64());
         }
-        Ok(entry.clone())
+        Ok(exec)
     }
 
     /// Pre-instantiate a set of artifacts (avoids first-call jitter in
@@ -324,10 +344,16 @@ impl Engine {
 
     /// Snapshot of per-artifact execution stats, sorted by total time.
     pub fn stats_report(&self) -> Vec<(String, ExecStats)> {
-        let cache = self.cache.lock().unwrap();
-        let mut rows: Vec<(String, ExecStats)> = cache
-            .iter()
-            .map(|(k, v)| (k.clone(), *v.stats.lock().unwrap()))
+        let slots: Vec<(String, CacheSlot)> = {
+            let cache = self.cache.lock().unwrap();
+            cache.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut rows: Vec<(String, ExecStats)> = slots
+            .into_iter()
+            .filter_map(|(k, slot)| {
+                let guard = slot.lock().unwrap();
+                guard.as_ref().map(|e| (k, *e.stats.lock().unwrap()))
+            })
             .collect();
         rows.sort_by_key(|(_, s)| std::cmp::Reverse(s.nanos));
         rows
@@ -386,6 +412,24 @@ mod tests {
         // embed(tokens, 0) = emb[tokens] + pos[0..C]
         let want0 = emb.data()[0] + pos.data()[0];
         assert!((out[0].data()[0] - want0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn artifact_is_a_single_shared_instance_across_threads() {
+        // all racers must observe the SAME executable (the per-name slot
+        // lock makes the instantiation happen exactly once)
+        let e = engine();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let e = e.clone();
+                std::thread::spawn(move || e.artifact("head").unwrap())
+            })
+            .collect();
+        let execs: Vec<Arc<Executable>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for other in &execs[1..] {
+            assert!(Arc::ptr_eq(&execs[0], other));
+        }
     }
 
     #[test]

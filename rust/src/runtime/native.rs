@@ -24,6 +24,14 @@
 //! folding (q~ = q*B, k~ = k/B, B = cumprod(g)) including the
 //! data-dependent GLA gate projection, and through the Based/ReBased
 //! feature maps (see DESIGN.md §Native training).
+//!
+//! The serving layer (`serve::Model`/`serve::Session`) adds the decode
+//! artifact family: `l_decode_{variant}_B{b}` (one autoregressive step on
+//! the per-head recurrent state, M <- diag(g) M + k^T v, o = q~ M — the
+//! constant-memory inference form), `s_decode_B{b}` (KV-cache softmax
+//! step), `s_prefill` (chunk-sized KV-cache attention for hybrid
+//! prefill), and the decode-shaped `embed_dec_B{b}` / `head_dec_B{b}`,
+//! each registered at every batch size in `DECODE_BATCH_SIZES`.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -33,7 +41,12 @@ use anyhow::{Context, Result};
 use super::{ArtifactMeta, DType, Manifest, TensorMeta, Value};
 use crate::config::{ModelConfig, Pattern, Variant};
 use crate::coordinator::params::{param_specs, Init};
-use crate::tensor::{prefix_states, ChunkState, Tensor};
+use crate::tensor::{prefix_states, state_combine, ChunkState, Tensor};
+
+/// Batch sizes the serving decode artifacts are registered for.  The
+/// `serve::Batch` wrapper groups sessions greedily into the largest
+/// registered size (B=1 always exists, so any group count decomposes).
+pub const DECODE_BATCH_SIZES: &[usize] = &[1, 2, 4, 8];
 
 /// A native artifact kernel: positional `Value` inputs -> output tensors.
 pub type KernelFn = Arc<dyn Fn(&ModelConfig, &[Value]) -> Result<Vec<Tensor>> + Send + Sync>;
@@ -118,6 +131,15 @@ fn head_of(t: &Tensor, h: usize) -> Tensor {
         out.extend_from_slice(&t.data()[base..base + f]);
     }
     Tensor::new(vec![c, f], out)
+}
+
+/// Row `i` of a tensor along axis 0, keeping the leading axis (shape
+/// `[1, rest...]`) — batch-row extraction for the decode kernels.
+fn row0(t: &Tensor, i: usize) -> Tensor {
+    let stride: usize = t.shape()[1..].iter().product();
+    let mut shape = t.shape().to_vec();
+    shape[0] = 1;
+    Tensor::new(shape, t.data()[i * stride..(i + 1) * stride].to_vec())
 }
 
 /// Write `[C, F]` data back into head `h` of a `[C, H, F]` tensor.
@@ -1661,6 +1683,287 @@ impl Registry {
             }
         }
 
+        // ---- serving decode artifacts (serve::Session / serve::Batch) ----
+        // One autoregressive step at batch size B: the linear layers fold
+        // the whole chunked LASP-2 machinery into the per-head recurrent
+        // state update M <- diag(g) M + k^T v with readout o = q~ M (the
+        // Lightning-Attention-2 decode form — O(1) memory in position);
+        // the std layers attend against an explicit KV cache (O(pos)
+        // memory), which is exactly the contrast the decode bench shows.
+        reg.add(
+            "s_prefill",
+            {
+                let mut v = vec![
+                    f32m("x", &[c, d]),
+                    f32m("ln1", &[d]),
+                    f32m("wq", &[d, hh * dh]),
+                    f32m("wk", &[d, hh * dh]),
+                    f32m("wv", &[d, hh * dh]),
+                    f32m("k_cache", &[ms, hh, dh]),
+                    f32m("v_cache", &[ms, hh, dh]),
+                    i32m("len", &[1]),
+                ];
+                epi_ins(&mut v);
+                v
+            },
+            vec![
+                f32m("y", &[c, d]),
+                f32m("k_new", &[c, hh, dh]),
+                f32m("v_new", &[c, hh, dh]),
+            ],
+            Arc::new(|cfg: &ModelConfig, ins: &[Value]| {
+                let x = ins[0].host_f32()?;
+                let ln1 = ins[1].host_f32()?;
+                let kc = ins[5].host_f32()?;
+                let vc = ins[6].host_f32()?;
+                let len = ins[7].host_i32()?[0];
+                let cc = x.shape()[0];
+                let (hh, dh, ms) = (cfg.n_heads, cfg.head_dim, cfg.max_seq);
+                anyhow::ensure!(
+                    len >= 0 && len as usize + cc <= ms,
+                    "s_prefill: kv len {len} + chunk {cc} exceeds max_seq {ms}"
+                );
+                let len = len as usize;
+                let hn = rmsnorm(x, ln1);
+                let q = hn.matmul(ins[2].host_f32()?).reshape(&[cc, hh, dh]);
+                let k = hn.matmul(ins[3].host_f32()?).reshape(&[cc, hh, dh]);
+                let v = hn.matmul(ins[4].host_f32()?).reshape(&[cc, hh, dh]);
+                let stride = hh * dh;
+                let mut kall = Vec::with_capacity((len + cc) * stride);
+                kall.extend_from_slice(&kc.data()[..len * stride]);
+                kall.extend_from_slice(k.data());
+                let mut vall = Vec::with_capacity((len + cc) * stride);
+                vall.extend_from_slice(&vc.data()[..len * stride]);
+                vall.extend_from_slice(v.data());
+                let k_all = Tensor::new(vec![len + cc, hh, dh], kall);
+                let v_all = Tensor::new(vec![len + cc, hh, dh], vall);
+                let attn = softmax_attn_heads(&q, &k_all, &v_all, len as i32);
+                let y = epilogue(
+                    x,
+                    &attn,
+                    ins[8].host_f32()?,
+                    ins[9].host_f32()?,
+                    ins[10].host_f32()?,
+                    ins[11].host_f32()?,
+                    ins[12].host_f32()?,
+                );
+                Ok(vec![y, k, v])
+            }),
+        );
+        for &b in DECODE_BATCH_SIZES {
+            reg.add(
+                &format!("embed_dec_B{b}"),
+                vec![
+                    i32m("tokens", &[b]),
+                    i32m("offsets", &[b]),
+                    f32m("emb", &[vb, d]),
+                    f32m("pos", &[ms, d]),
+                ],
+                vec![f32m("x", &[b, d])],
+                Arc::new(move |cfg: &ModelConfig, ins: &[Value]| {
+                    let toks = ins[0].host_i32()?;
+                    let offs = ins[1].host_i32()?;
+                    let emb = ins[2].host_f32()?;
+                    let pos = ins[3].host_f32()?;
+                    let mut rows = Vec::with_capacity(b);
+                    for bi in 0..b {
+                        anyhow::ensure!(
+                            offs[bi] >= 0,
+                            "negative position offset {}",
+                            offs[bi]
+                        );
+                        rows.push(embed_tokens(
+                            cfg,
+                            emb,
+                            pos,
+                            &toks[bi..bi + 1],
+                            offs[bi] as usize,
+                        )?);
+                    }
+                    Ok(vec![Tensor::cat0(&rows)])
+                }),
+            );
+            reg.add(
+                &format!("head_dec_B{b}"),
+                vec![
+                    f32m("x", &[b, d]),
+                    f32m("final_ln", &[d]),
+                    f32m("emb", &[vb, d]),
+                ],
+                vec![f32m("logits", &[b, vb])],
+                Arc::new(|_cfg: &ModelConfig, ins: &[Value]| {
+                    let x = ins[0].host_f32()?;
+                    let ln = ins[1].host_f32()?;
+                    let emb = ins[2].host_f32()?;
+                    Ok(vec![rmsnorm(x, ln).matmul(&emb.t())])
+                }),
+            );
+            reg.add(
+                &format!("s_decode_B{b}"),
+                {
+                    let mut v = vec![
+                        f32m("x", &[b, d]),
+                        f32m("ln1", &[d]),
+                        f32m("wq", &[d, hh * dh]),
+                        f32m("wk", &[d, hh * dh]),
+                        f32m("wv", &[d, hh * dh]),
+                        f32m("k_cache", &[b, ms, hh, dh]),
+                        f32m("v_cache", &[b, ms, hh, dh]),
+                        i32m("len", &[b]),
+                    ];
+                    epi_ins(&mut v);
+                    v
+                },
+                vec![
+                    f32m("y", &[b, d]),
+                    f32m("k_new", &[b, hh, dh]),
+                    f32m("v_new", &[b, hh, dh]),
+                ],
+                Arc::new(move |cfg: &ModelConfig, ins: &[Value]| {
+                    let x = ins[0].host_f32()?;
+                    let ln1 = ins[1].host_f32()?;
+                    let kc = ins[5].host_f32()?;
+                    let vc = ins[6].host_f32()?;
+                    let lens = ins[7].host_i32()?;
+                    let (hh, dh, ms) = (cfg.n_heads, cfg.head_dim, cfg.max_seq);
+                    let stride = hh * dh;
+                    let mut ys = Vec::with_capacity(b);
+                    let mut kn = Vec::with_capacity(b);
+                    let mut vn = Vec::with_capacity(b);
+                    for bi in 0..b {
+                        let xb = row0(x, bi);
+                        let hn = rmsnorm(&xb, ln1);
+                        let q = hn.matmul(ins[2].host_f32()?).reshape(&[1, hh, dh]);
+                        let k = hn.matmul(ins[3].host_f32()?).reshape(&[1, hh, dh]);
+                        let v = hn.matmul(ins[4].host_f32()?).reshape(&[1, hh, dh]);
+                        let len = lens[bi];
+                        anyhow::ensure!(
+                            len >= 0 && (len as usize) < ms,
+                            "s_decode: kv len {len} out of range (max_seq {ms})"
+                        );
+                        let len = len as usize;
+                        let base = bi * ms * stride;
+                        let mut kall = Vec::with_capacity((len + 1) * stride);
+                        kall.extend_from_slice(&kc.data()[base..base + len * stride]);
+                        kall.extend_from_slice(k.data());
+                        let mut vall = Vec::with_capacity((len + 1) * stride);
+                        vall.extend_from_slice(&vc.data()[base..base + len * stride]);
+                        vall.extend_from_slice(v.data());
+                        let k_all = Tensor::new(vec![len + 1, hh, dh], kall);
+                        let v_all = Tensor::new(vec![len + 1, hh, dh], vall);
+                        let attn = softmax_attn_heads(&q, &k_all, &v_all, len as i32);
+                        ys.push(epilogue(
+                            &xb,
+                            &attn,
+                            ins[8].host_f32()?,
+                            ins[9].host_f32()?,
+                            ins[10].host_f32()?,
+                            ins[11].host_f32()?,
+                            ins[12].host_f32()?,
+                        ));
+                        kn.push(k);
+                        vn.push(v);
+                    }
+                    Ok(vec![
+                        Tensor::cat0(&ys),
+                        Tensor::cat0(&kn),
+                        Tensor::cat0(&vn),
+                    ])
+                }),
+            );
+            for &variant in Variant::linear_variants() {
+                let v = variant.name();
+                let rq = cfg.qk_dim(variant);
+                let fk = cfg.feat_dim(variant);
+                let mut ld_ins = vec![
+                    f32m("x", &[b, d]),
+                    f32m("ln1", &[d]),
+                    f32m("wq", &[d, hh * rq]),
+                    f32m("wk", &[d, hh * rq]),
+                    f32m("wv", &[d, hh * dh]),
+                ];
+                match variant {
+                    Variant::Gla => ld_ins.push(f32m("wg", &[d, hh * rq])),
+                    Variant::Rebased => {
+                        ld_ins.push(f32m("gamma", &[rq]));
+                        ld_ins.push(f32m("beta", &[rq]));
+                    }
+                    _ => {}
+                }
+                ld_ins.push(f32m("m", &[b, hh, fk, dh]));
+                epi_ins(&mut ld_ins);
+                reg.add(
+                    &format!("l_decode_{v}_B{b}"),
+                    ld_ins,
+                    vec![
+                        f32m("y", &[b, d]),
+                        f32m("m_new", &[b, hh, fk, dh]),
+                        f32m("a", &[b, hh, fk]),
+                    ],
+                    Arc::new(move |cfg: &ModelConfig, ins: &[Value]| {
+                        let x = ins[0].host_f32()?;
+                        let ln1 = ins[1].host_f32()?;
+                        let wq = ins[2].host_f32()?;
+                        let wk = ins[3].host_f32()?;
+                        let wv = ins[4].host_f32()?;
+                        let ex_n = match variant {
+                            Variant::Gla => 1,
+                            Variant::Rebased => 2,
+                            _ => 0,
+                        };
+                        let extra: Vec<&Tensor> = ins[5..5 + ex_n]
+                            .iter()
+                            .map(|e| e.host_f32())
+                            .collect::<Result<_>>()?;
+                        let m_in = ins[5 + ex_n].host_f32()?;
+                        let epi = &ins[6 + ex_n..11 + ex_n];
+                        let (hh, dh) = (cfg.n_heads, cfg.head_dim);
+                        let fk = cfg.feat_dim(variant);
+                        let mstride = hh * fk * dh;
+                        let mut ys = Vec::with_capacity(b);
+                        let mut ms_out = Vec::with_capacity(b);
+                        let mut as_out = Vec::with_capacity(b);
+                        for bi in 0..b {
+                            let xb = row0(x, bi);
+                            // c=1 chunk through the validated part1 path:
+                            // qt = q*g, kt = k/g, p.m = k^T v, p.a = g
+                            let p = linear_part1(cfg, variant, &xb, ln1, wq, wk, wv, &extra);
+                            let m_prev = Tensor::new(
+                                vec![hh, fk, dh],
+                                m_in.data()[bi * mstride..(bi + 1) * mstride].to_vec(),
+                            );
+                            let attn = intra_heads(&p.qt, &p.kt, &p.v)
+                                .add(&inter_heads(&p.qt, &m_prev));
+                            ys.push(epilogue(
+                                &xb,
+                                &attn,
+                                epi[0].host_f32()?,
+                                epi[1].host_f32()?,
+                                epi[2].host_f32()?,
+                                epi[3].host_f32()?,
+                                epi[4].host_f32()?,
+                            ));
+                            // M_new = diag(g) M_prev + k^T v (Eq. 4, one step)
+                            let st = state_combine(
+                                &ChunkState {
+                                    m: m_prev,
+                                    a: Tensor::ones(&[hh, fk]),
+                                },
+                                &ChunkState { m: p.m, a: p.a.clone() },
+                            );
+                            ms_out.push(st.m.reshape(&[1, hh, fk, dh]));
+                            as_out.push(p.a.reshape(&[1, hh, fk]));
+                        }
+                        Ok(vec![
+                            Tensor::cat0(&ys),
+                            Tensor::cat0(&ms_out),
+                            Tensor::cat0(&as_out),
+                        ])
+                    }),
+                );
+            }
+        }
+
         // ---- init + train steps: every linear variant at every hybrid
         // ratio (Table 2/4 coverage), plus the softmax baseline and the
         // unmasked (bidirectional, Table 3) basic tag ----
@@ -2119,6 +2422,24 @@ mod tests {
             assert!(man.artifacts.contains_key(name), "{name}");
             assert!(reg.kernel(name).is_ok(), "{name}");
         }
+        // serving decode surface: every linear variant at every registered
+        // batch size, the std KV-cache decode/prefill, and the decode-shaped
+        // embed/head
+        for &b in DECODE_BATCH_SIZES {
+            for v in Variant::linear_variants() {
+                let name = format!("l_decode_{}_B{b}", v.name());
+                assert!(man.artifacts.contains_key(&name), "{name}");
+            }
+            for name in [
+                format!("s_decode_B{b}"),
+                format!("embed_dec_B{b}"),
+                format!("head_dec_B{b}"),
+            ] {
+                assert!(man.artifacts.contains_key(&name), "{name}");
+                assert!(reg.kernel(&name).is_ok(), "{name}");
+            }
+        }
+        assert!(man.artifacts.contains_key("s_prefill"));
         // tiny (2 layers) truncates the 1/8 and 1/4 patterns to all-L:
         // those tags must NOT exist, or a pure-linear model would pose as
         // a hybrid row in the Table-2/4 benches.

@@ -1,0 +1,628 @@
+//! Serving layer: constant-memory autoregressive decode on the recurrent
+//! state (the paper's opening claim for linear attention, §1).
+//!
+//! * `Model` — load a preset + parameters ONCE; weights are staged through
+//!   `Engine::cache_buffer` on first use and shared by every session.
+//! * `Session` — per-request mutable state: one `ChunkState {M, a}` per
+//!   linear layer (H x fk x dh floats, **independent of position**), a KV
+//!   cache per std layer for hybrid patterns (grows with position — the
+//!   contrast the decode bench quantifies), and the position offset.
+//!   `prefill` runs the existing chunked LASP-2 path (l_part1 -> gated
+//!   prefix combine -> l_part2) to populate state a chunk at a time;
+//!   `decode` is an O(1)-memory single-token step through the
+//!   `l_decode_*`/`s_decode` artifacts.  `snapshot`/`restore` clone the
+//!   state for prefix reuse (system-prompt caching).
+//! * `Batch` — steps many sessions per kernel call by grouping them into
+//!   the batched decode artifacts (`*_B{2,4,8}`).
+//!
+//! Correctness is pinned by `tests/serve_decode.rs`: decoding token by
+//! token reproduces the `forward_mono_*` oracle logits at every position
+//! for all six linear variants, a hybrid pattern, and the std baseline.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelConfig, Pattern, Variant};
+use crate::coordinator::Params;
+use crate::runtime::{Engine, Value};
+use crate::tensor::{state_combine, ChunkState, Tensor};
+
+/// Greedy sampling: index of the max logit (ties -> lowest index).
+pub fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (j, v) in row.iter().enumerate() {
+        if *v > row[best] {
+            best = j;
+        }
+    }
+    best as i32
+}
+
+/// A loaded model: engine + parameters, shared (read-only) by sessions.
+pub struct Model {
+    engine: Arc<Engine>,
+    params: Params,
+}
+
+impl Model {
+    /// Load a preset and initialize parameters: via the `init_*` artifact
+    /// when one is registered for (variant, ratio) — the same init law the
+    /// training path uses — else deterministic `Params::randn`.
+    pub fn load(preset: &str, variant: Variant, ratio: &str, seed: i32) -> Result<Model> {
+        let engine = Engine::load_preset(preset)?;
+        Self::with_engine(engine, variant, ratio, seed)
+    }
+
+    /// Same as `load` for an engine the caller already holds.
+    pub fn with_engine(
+        engine: Arc<Engine>,
+        variant: Variant,
+        ratio: &str,
+        seed: i32,
+    ) -> Result<Model> {
+        let pattern = Pattern::from_ratio(engine.model.n_layers, ratio)?;
+        anyhow::ensure!(
+            variant != Variant::Softmax || pattern.n_linear() == 0,
+            "variant softmax requires ratio \"all\" (got pattern {})",
+            pattern.0
+        );
+        let init_name = format!("init_{}_{}", variant.name(), Pattern::tag(ratio));
+        let params = if engine.has_artifact(&init_name) {
+            Params::from_init_artifact(&engine, variant, &pattern, &init_name, seed)?
+        } else {
+            Params::randn(&engine.model, variant, &pattern, seed as u64)
+        };
+        Ok(Model { engine, params })
+    }
+
+    /// Wrap an engine + parameter set the caller built directly (tests,
+    /// checkpoints restored from a training run).
+    pub fn from_parts(engine: Arc<Engine>, params: Params) -> Model {
+        Model { engine, params }
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.engine.model
+    }
+
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.params.variant
+    }
+
+    pub fn pattern(&self) -> &Pattern {
+        &self.params.pattern
+    }
+
+    /// A fresh session: zero recurrent state, empty KV caches, position 0.
+    pub fn session(&self) -> Session<'_> {
+        let cfg = &self.engine.model;
+        let (hh, dh, ms) = (cfg.n_heads, cfg.head_dim, cfg.max_seq);
+        let fk = cfg.feat_dim(self.params.variant);
+        let states = self
+            .params
+            .pattern
+            .layers()
+            .map(|(_, is_linear)| {
+                if is_linear {
+                    LayerState::Linear(ChunkState {
+                        m: Tensor::zeros(&[hh, fk, dh]),
+                        a: Tensor::ones(&[hh, fk]),
+                    })
+                } else {
+                    LayerState::Std {
+                        k: Tensor::zeros(&[ms, hh, dh]),
+                        v: Tensor::zeros(&[ms, hh, dh]),
+                        len: 0,
+                    }
+                }
+            })
+            .collect();
+        Session { model: self, states, pos: 0 }
+    }
+
+    /// Pre-instantiate the serving artifacts (prefill + B=1 decode) so the
+    /// first request doesn't pay first-call jitter.
+    pub fn warmup_serving(&self) -> Result<()> {
+        let v = self.params.variant.name();
+        let names = [
+            "embed".to_string(),
+            "head".to_string(),
+            format!("l_part1_{v}"),
+            format!("l_part2_{v}"),
+            "s_prefill".to_string(),
+            "embed_dec_B1".to_string(),
+            "head_dec_B1".to_string(),
+            format!("l_decode_{v}_B1"),
+            "s_decode_B1".to_string(),
+        ];
+        let present: Vec<&str> = names
+            .iter()
+            .filter(|n| self.engine.has_artifact(n.as_str()))
+            .map(|n| n.as_str())
+            .collect();
+        self.engine.warmup(&present)
+    }
+}
+
+/// Per-layer request state: the LASP-2 recurrent memory for linear layers
+/// (size independent of position) or the softmax KV cache for std layers
+/// (grows one row per decoded token).
+///
+/// The linear state is kept as the WHOLE prefix-combine monoid element
+/// `(M, a)`: decode/prefill readouts consume only `M` (the incoming
+/// chunk's own decay is what the combine applies), but `a` — the total
+/// decay carry over everything consumed so far — is maintained so the
+/// state composes with any future `state_combine`-based consumer (e.g.
+/// migrating a session into a distributed prefill) exactly like the
+/// chunk states the SP AllGather moves.
+#[derive(Clone)]
+enum LayerState {
+    Linear(ChunkState),
+    Std { k: Tensor, v: Tensor, len: usize },
+}
+
+/// A point-in-time copy of a session's state (prefix reuse: snapshot after
+/// the system prompt, restore per request).  Only valid for sessions of
+/// the same `Model` it was taken from — `restore` checks the model's
+/// identity, not just the state shapes.
+#[derive(Clone)]
+pub struct Snapshot {
+    model_id: usize,
+    states: Vec<LayerState>,
+    pos: usize,
+}
+
+/// One in-flight request: mutable decode state over a shared `Model`.
+#[derive(Clone)]
+pub struct Session<'m> {
+    model: &'m Model,
+    states: Vec<LayerState>,
+    pos: usize,
+}
+
+impl<'m> Session<'m> {
+    /// Tokens consumed so far (the next token lands at this position).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes of per-request state a serving system must hold: the
+    /// recurrent `ChunkState` for linear layers (CONSTANT in position) and
+    /// the live rows of the std KV caches (LINEAR in position).  Std
+    /// caches are preallocated at `max_seq` here for simplicity; this
+    /// reports the logical size a paged cache would pin.
+    pub fn state_bytes(&self) -> usize {
+        let cfg = &self.model.engine.model;
+        let kv_row = cfg.n_heads * cfg.head_dim * 2 * 4;
+        self.states
+            .iter()
+            .map(|s| match s {
+                LayerState::Linear(cs) => cs.byte_size(),
+                LayerState::Std { len, .. } => len * kv_row,
+            })
+            .sum()
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            model_id: self.model as *const Model as usize,
+            states: self.states.clone(),
+            pos: self.pos,
+        }
+    }
+
+    pub fn restore(&mut self, snap: &Snapshot) {
+        assert_eq!(
+            snap.model_id,
+            self.model as *const Model as usize,
+            "snapshot from a different model"
+        );
+        self.states = snap.states.clone();
+        self.pos = snap.pos;
+    }
+
+    /// Feed `tokens` and return logits for every fed position `[n, vocab]`.
+    ///
+    /// Chunk-aligned full chunks run the chunked LASP-2 path (one
+    /// `l_part1` + gated prefix combine + `l_part2` per linear layer);
+    /// a ragged tail (or a start at an unaligned position) falls back to
+    /// single-token decode steps, which compute the same math (pinned by
+    /// the parity tests).
+    pub fn prefill(&mut self, tokens: &[i32]) -> Result<Tensor> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill: empty token list");
+        let c = self.model.engine.model.chunk_len;
+        let vocab = self.model.engine.model.vocab;
+        let mut parts = Vec::new();
+        let mut i = 0;
+        while i < tokens.len() {
+            if self.pos % c == 0 && tokens.len() - i >= c {
+                parts.push(self.prefill_chunk(&tokens[i..i + c])?);
+                i += c;
+            } else {
+                let row = self.decode(tokens[i])?;
+                parts.push(row.reshape(&[1, vocab]));
+                i += 1;
+            }
+        }
+        Ok(Tensor::cat0(&parts))
+    }
+
+    /// One full chunk through the chunked LASP-2 path.  `self.pos` must be
+    /// chunk-aligned (enforced by `prefill`).
+    fn prefill_chunk(&mut self, tokens: &[i32]) -> Result<Tensor> {
+        let model = self.model;
+        let engine = model.engine.as_ref();
+        let cfg = &engine.model;
+        let c = cfg.chunk_len;
+        anyhow::ensure!(tokens.len() == c, "prefill_chunk: not a full chunk");
+        anyhow::ensure!(
+            self.pos + c <= cfg.max_seq,
+            "context window exhausted (pos {} + chunk {} > max_seq {})",
+            self.pos,
+            c,
+            cfg.max_seq
+        );
+        let vname = model.params.variant.name();
+
+        let embed = engine.artifact("embed")?;
+        let mut x = embed.run1(&[
+            Value::I32(tokens.to_vec(), vec![c]),
+            Value::i32_scalar(self.pos as i32),
+            model.params.value(engine, "embed")?,
+            model.params.value(engine, "pos")?,
+        ])?;
+
+        for (li, is_linear) in model.params.pattern.layers() {
+            if is_linear {
+                let p1 = engine.artifact(&format!("l_part1_{vname}"))?;
+                let mut ins = vec![
+                    x.clone().into(),
+                    model.params.layer_value(engine, li, "ln1")?,
+                    model.params.layer_value(engine, li, "wq")?,
+                    model.params.layer_value(engine, li, "wk")?,
+                    model.params.layer_value(engine, li, "wv")?,
+                ];
+                ins.extend(model.params.part1_extra(engine, li)?);
+                let mut p1_out = p1.run(&ins)?; // qt, kt, v, m, a
+                let a_c = p1_out.pop().unwrap();
+                let m_c = p1_out.pop().unwrap();
+                let v_c = p1_out.pop().unwrap();
+                let kt = p1_out.pop().unwrap();
+                let qt = p1_out.pop().unwrap();
+                let state = match &mut self.states[li] {
+                    LayerState::Linear(cs) => cs,
+                    LayerState::Std { .. } => bail!("layer {li}: state kind mismatch"),
+                };
+                let p2 = engine.artifact(&format!("l_part2_{vname}"))?;
+                let mut ins2 = vec![
+                    x.into(),
+                    qt.into(),
+                    kt.into(),
+                    v_c.into(),
+                    state.m.clone().into(),
+                ];
+                ins2.extend(model.params.epilogue(engine, li)?);
+                x = p2.run1(&ins2)?;
+                *state = state_combine(state, &ChunkState { m: m_c, a: a_c });
+            } else {
+                let (k_cache, v_cache, len) = match &self.states[li] {
+                    LayerState::Std { k, v, len } => (k.clone(), v.clone(), *len),
+                    LayerState::Linear(_) => bail!("layer {li}: state kind mismatch"),
+                };
+                let exe = engine.artifact("s_prefill")?;
+                let mut ins = vec![
+                    x.into(),
+                    model.params.layer_value(engine, li, "ln1")?,
+                    model.params.layer_value(engine, li, "wq")?,
+                    model.params.layer_value(engine, li, "wk")?,
+                    model.params.layer_value(engine, li, "wv")?,
+                    k_cache.into(),
+                    v_cache.into(),
+                    Value::i32_scalar(len as i32),
+                ];
+                ins.extend(model.params.epilogue(engine, li)?);
+                let mut outs = exe.run(&ins)?; // y, k_new, v_new
+                let v_new = outs.pop().unwrap();
+                let k_new = outs.pop().unwrap();
+                x = outs.pop().unwrap();
+                if let LayerState::Std { k, v, len } = &mut self.states[li] {
+                    let stride = cfg.n_heads * cfg.head_dim;
+                    k.data_mut()[*len * stride..(*len + c) * stride]
+                        .copy_from_slice(k_new.data());
+                    v.data_mut()[*len * stride..(*len + c) * stride]
+                        .copy_from_slice(v_new.data());
+                    *len += c;
+                }
+            }
+        }
+
+        let head = engine.artifact("head")?;
+        let logits = head.run1(&[
+            x.into(),
+            model.params.value(engine, "final_ln")?,
+            model.params.value(engine, "embed")?,
+        ])?;
+        self.pos += c;
+        Ok(logits)
+    }
+
+    /// One autoregressive step: O(1) memory on linear layers (recurrent
+    /// state update), one KV-cache row on std layers.  Returns `[vocab]`
+    /// logits for the NEXT position.
+    pub fn decode(&mut self, token: i32) -> Result<Tensor> {
+        let mut out = decode_many(std::slice::from_mut(self), &[token])?;
+        Ok(out.pop().unwrap())
+    }
+
+    /// Greedy generation: prefill the prompt, then decode `n` tokens.
+    pub fn generate(&mut self, prompt: &[i32], n: usize) -> Result<Vec<i32>> {
+        let logits = self.prefill(prompt)?;
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let vb = *logits.shape().last().unwrap();
+        let rows = logits.shape()[0];
+        let mut next = argmax(&logits.data()[(rows - 1) * vb..]);
+        let mut out = Vec::with_capacity(n);
+        out.push(next);
+        while out.len() < n {
+            let row = self.decode(next)?;
+            next = argmax(row.data());
+            out.push(next);
+        }
+        Ok(out)
+    }
+}
+
+/// Many concurrent sessions of one model, stepped together: each decode
+/// call runs ONE batched kernel per layer for as many sessions as the
+/// registered `*_B{b}` artifacts cover (greedy grouping, B=1 remainder).
+pub struct Batch<'m> {
+    model: &'m Model,
+    sessions: Vec<Session<'m>>,
+}
+
+impl<'m> Batch<'m> {
+    pub fn new(model: &'m Model) -> Batch<'m> {
+        Batch { model, sessions: Vec::new() }
+    }
+
+    pub fn push(&mut self, session: Session<'m>) {
+        assert!(
+            std::ptr::eq(session.model, self.model),
+            "session belongs to a different model"
+        );
+        self.sessions.push(session);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn sessions(&self) -> &[Session<'m>] {
+        &self.sessions
+    }
+
+    pub fn sessions_mut(&mut self) -> &mut [Session<'m>] {
+        &mut self.sessions
+    }
+
+    pub fn into_sessions(self) -> Vec<Session<'m>> {
+        self.sessions
+    }
+
+    /// Step every session by one token (`tokens[i]` feeds session i).
+    /// Returns per-session `[vocab]` logits.
+    pub fn decode(&mut self, tokens: &[i32]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            tokens.len() == self.sessions.len(),
+            "batch decode: {} tokens for {} sessions",
+            tokens.len(),
+            self.sessions.len()
+        );
+        let mut out = Vec::with_capacity(tokens.len());
+        let mut start = 0;
+        while start < self.sessions.len() {
+            let b = self.group_size(self.sessions.len() - start);
+            out.extend(decode_many(
+                &mut self.sessions[start..start + b],
+                &tokens[start..start + b],
+            )?);
+            start += b;
+        }
+        Ok(out)
+    }
+
+    /// Largest registered decode batch size that fits `n` sessions.
+    fn group_size(&self, n: usize) -> usize {
+        let engine = self.model.engine.as_ref();
+        crate::runtime::native::DECODE_BATCH_SIZES
+            .iter()
+            .rev()
+            .copied()
+            .find(|b| *b <= n && engine.has_artifact(&format!("head_dec_B{b}")))
+            .unwrap_or(1)
+    }
+}
+
+/// The shared decode step over a group of sessions (batch size == group
+/// length; a matching `*_B{len}` artifact set must be registered).
+fn decode_many(sessions: &mut [Session<'_>], tokens: &[i32]) -> Result<Vec<Tensor>> {
+    let b = sessions.len();
+    anyhow::ensure!(b > 0 && tokens.len() == b, "decode group arity");
+    let model = sessions[0].model;
+    anyhow::ensure!(
+        sessions.iter().all(|s| std::ptr::eq(s.model, model)),
+        "decode group spans different models"
+    );
+    let engine = model.engine.as_ref();
+    let cfg = &engine.model;
+    let (hh, dh, ms) = (cfg.n_heads, cfg.head_dim, cfg.max_seq);
+    let fk = cfg.feat_dim(model.params.variant);
+    for s in sessions.iter() {
+        anyhow::ensure!(
+            s.pos < ms,
+            "context window exhausted (pos {} >= max_seq {ms})",
+            s.pos
+        );
+    }
+
+    let embed = engine
+        .artifact(&format!("embed_dec_B{b}"))
+        .with_context(|| format!("decode batch size {b} not registered"))?;
+    let offsets: Vec<i32> = sessions.iter().map(|s| s.pos as i32).collect();
+    let mut x = embed.run1(&[
+        Value::I32(tokens.to_vec(), vec![b]),
+        Value::I32(offsets, vec![b]),
+        model.params.value(engine, "embed")?,
+        model.params.value(engine, "pos")?,
+    ])?;
+
+    for (li, is_linear) in model.params.pattern.layers() {
+        if is_linear {
+            let exe = engine.artifact(&format!(
+                "l_decode_{}_B{b}",
+                model.params.variant.name()
+            ))?;
+            let mut m_rows = Vec::with_capacity(b);
+            for s in sessions.iter() {
+                match &s.states[li] {
+                    LayerState::Linear(cs) => {
+                        m_rows.push(cs.m.clone().reshape(&[1, hh, fk, dh]));
+                    }
+                    LayerState::Std { .. } => bail!("layer {li}: state kind mismatch"),
+                }
+            }
+            let mut ins = vec![
+                x.into(),
+                model.params.layer_value(engine, li, "ln1")?,
+                model.params.layer_value(engine, li, "wq")?,
+                model.params.layer_value(engine, li, "wk")?,
+                model.params.layer_value(engine, li, "wv")?,
+            ];
+            ins.extend(model.params.part1_extra(engine, li)?);
+            ins.push(Tensor::cat0(&m_rows).into());
+            ins.extend(model.params.epilogue(engine, li)?);
+            let mut outs = exe.run(&ins)?; // y, m_new, a
+            let a_new = outs.pop().unwrap();
+            let m_new = outs.pop().unwrap();
+            x = outs.pop().unwrap();
+            for ((s, mc), ac) in sessions
+                .iter_mut()
+                .zip(m_new.chunk0(b))
+                .zip(a_new.chunk0(b))
+            {
+                if let LayerState::Linear(cs) = &mut s.states[li] {
+                    cs.m = mc.reshape(&[hh, fk, dh]);
+                    cs.a = cs.a.mul(&ac.reshape(&[hh, fk]));
+                }
+            }
+        } else {
+            let exe = engine.artifact(&format!("s_decode_B{b}"))?;
+            // stack the caches with ONE copy each (no per-session clone +
+            // cat0 double copy); the per-step copy is still O(max_seq) —
+            // the fixed-shape artifact ABI requires the full buffer, and a
+            // production backend would page the cache in place instead
+            let mut kd = Vec::with_capacity(b * ms * hh * dh);
+            let mut vd = Vec::with_capacity(b * ms * hh * dh);
+            let mut lens = Vec::with_capacity(b);
+            for s in sessions.iter() {
+                match &s.states[li] {
+                    LayerState::Std { k, v, len } => {
+                        kd.extend_from_slice(k.data());
+                        vd.extend_from_slice(v.data());
+                        lens.push(*len as i32);
+                    }
+                    LayerState::Linear(_) => bail!("layer {li}: state kind mismatch"),
+                }
+            }
+            let mut ins = vec![
+                x.into(),
+                model.params.layer_value(engine, li, "ln1")?,
+                model.params.layer_value(engine, li, "wq")?,
+                model.params.layer_value(engine, li, "wk")?,
+                model.params.layer_value(engine, li, "wv")?,
+                Tensor::new(vec![b, ms, hh, dh], kd).into(),
+                Tensor::new(vec![b, ms, hh, dh], vd).into(),
+                Value::I32(lens, vec![b]),
+            ];
+            ins.extend(model.params.epilogue(engine, li)?);
+            let mut outs = exe.run(&ins)?; // y, k_new, v_new
+            let v_new = outs.pop().unwrap();
+            let k_new = outs.pop().unwrap();
+            x = outs.pop().unwrap();
+            let stride = hh * dh;
+            for ((s, kr), vr) in sessions
+                .iter_mut()
+                .zip(k_new.chunk0(b))
+                .zip(v_new.chunk0(b))
+            {
+                if let LayerState::Std { k, v, len } = &mut s.states[li] {
+                    k.data_mut()[*len * stride..(*len + 1) * stride]
+                        .copy_from_slice(kr.data());
+                    v.data_mut()[*len * stride..(*len + 1) * stride]
+                        .copy_from_slice(vr.data());
+                    *len += 1;
+                }
+            }
+        }
+    }
+
+    let head = engine.artifact(&format!("head_dec_B{b}"))?;
+    let logits = head.run1(&[
+        x.into(),
+        model.params.value(engine, "final_ln")?,
+        model.params.value(engine, "embed")?,
+    ])?; // [b, vocab]
+    for s in sessions.iter_mut() {
+        s.pos += 1;
+    }
+    let vb = cfg.vocab;
+    Ok(logits
+        .chunk0(b)
+        .into_iter()
+        .map(|r| r.reshape(&[vb]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max_and_breaks_ties_low() {
+        assert_eq!(argmax(&[0.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[3.0, 3.0, 1.0]), 0);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn session_starts_empty_and_snapshots_round_trip() {
+        let model = Model::load("tiny", Variant::Basic, "1/2", 0).unwrap();
+        let s = model.session();
+        assert_eq!(s.pos(), 0);
+        // hybrid LN on tiny: one linear recurrent state, one (empty) KV cache
+        let cfg = model.config();
+        let m_bytes =
+            (cfg.n_heads * cfg.head_dim * cfg.head_dim + cfg.n_heads * cfg.head_dim) * 4;
+        assert_eq!(s.state_bytes(), m_bytes);
+        let snap = s.snapshot();
+        let mut s2 = model.session();
+        s2.restore(&snap);
+        assert_eq!(s2.pos(), 0);
+        assert_eq!(s2.state_bytes(), m_bytes);
+    }
+}
