@@ -22,6 +22,7 @@ use crate::runtime::Engine;
 use crate::serve::{argmax, Model};
 use crate::sim::{simulate, CostModel};
 use crate::coordinator::plan::SimShape;
+use crate::tensor::Tensor;
 use crate::train::{train, TrainOpts};
 
 pub const FIG3_SCHEDULERS: [Scheduler; 4] = [
@@ -58,13 +59,20 @@ pub fn fig3_speed(cm: &CostModel) -> Table {
 
 /// Fig. 3 companion at small scale: REAL execution of all schedulers over
 /// worker threads + PJRT, verifying relative ordering end-to-end.
-pub fn fig3_realexec(engine: &Arc<Engine>, world_size: usize, iters: usize) -> Result<Table> {
+/// Returns the printable table plus (scheduler, tokens/s) rows for the
+/// machine-readable snapshot.
+pub fn fig3_realexec_rows(
+    engine: &Arc<Engine>,
+    world_size: usize,
+    iters: usize,
+) -> Result<(Table, Vec<(String, f64)>)> {
     let cfg = &engine.model;
     let pattern = Pattern("L".repeat(cfg.n_layers));
     let params = Params::randn(cfg, Variant::Basic, &pattern, 7);
     let n = world_size * cfg.chunk_len;
     let tokens: Vec<i32> = (0..n as i32).map(|i| i % cfg.vocab as i32).collect();
     let mut t = Table::new(&["scheduler", "tokens/s", "collectives", "p2p_ops", "MB moved"]);
+    let mut rows = Vec::new();
     for sched in [
         Scheduler::MegatronSp,
         Scheduler::RingAttention,
@@ -90,15 +98,22 @@ pub fn fig3_realexec(engine: &Arc<Engine>, world_size: usize, iters: usize) -> R
         }
         let dt = t0.elapsed().as_secs_f64();
         let snap = world.counters();
+        let tps = (iters * n) as f64 / dt;
         t.row(&[
             sched.name().to_string(),
-            format!("{:.0}", (iters * n) as f64 / dt),
+            format!("{tps:.0}"),
             format!("{}", snap.collective_ops / iters as u64),
             format!("{}", snap.p2p_ops / iters as u64),
             format!("{:.2}", snap.bytes as f64 / 1e6 / iters as f64),
         ]);
+        rows.push((sched.name().to_string(), tps));
     }
-    Ok(t)
+    Ok((t, rows))
+}
+
+/// `fig3_realexec_rows` without the machine-readable rows.
+pub fn fig3_realexec(engine: &Arc<Engine>, world_size: usize, iters: usize) -> Result<Table> {
+    Ok(fig3_realexec_rows(engine, world_size, iters)?.0)
 }
 
 /// Fig. 4 / Table 6: scalability sweep — throughput + memory per GPU with
@@ -149,6 +164,21 @@ pub fn table5_splits(cm: &CostModel) -> Table {
 /// softmax baseline's KV cache (and the KV half of a hybrid) grows
 /// linearly.
 pub fn decode_bench(engine: &Arc<Engine>, n_tokens: usize) -> Result<Table> {
+    Ok(decode_bench_rows(engine, n_tokens)?.0)
+}
+
+/// One decode-bench measurement (`tag` = `{variant}_{pattern-tag}`, the
+/// key the committed BENCH_floor.json floors are matched against).
+#[derive(Clone)]
+pub struct DecodeRow {
+    pub tag: String,
+    pub pattern: String,
+    pub tokens_per_sec: f64,
+    pub state_bytes: [usize; 3],
+}
+
+/// `decode_bench` plus the machine-readable per-model rows.
+pub fn decode_bench_rows(engine: &Arc<Engine>, n_tokens: usize) -> Result<(Table, Vec<DecodeRow>)> {
     anyhow::ensure!(
         (4..=engine.model.max_seq).contains(&n_tokens),
         "n_tokens {n_tokens} must be in 4..=max_seq ({})",
@@ -163,6 +193,7 @@ pub fn decode_bench(engine: &Arc<Engine>, n_tokens: usize) -> Result<Table> {
         "state_bytes@N",
         "state growth",
     ]);
+    let mut rows = Vec::new();
     let mut cases: Vec<(Variant, &str)> = Variant::linear_variants()
         .iter()
         .map(|v| (*v, "0"))
@@ -188,23 +219,30 @@ pub fn decode_bench(engine: &Arc<Engine>, n_tokens: usize) -> Result<Table> {
                 }
             }
         }
-        let dt = t0.elapsed().as_secs_f64();
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
         let growth = if bytes[2] > bytes[0] {
             "linear (KV cache)"
         } else {
             "constant (recurrent state)"
         };
+        let tps = n_tokens as f64 / dt;
         t.row(&[
             variant.name().to_string(),
             model.pattern().0.clone(),
-            format!("{:.0}", n_tokens as f64 / dt),
+            format!("{tps:.0}"),
             bytes[0].to_string(),
             bytes[1].to_string(),
             bytes[2].to_string(),
             growth.to_string(),
         ]);
+        rows.push(DecodeRow {
+            tag: format!("{}_{}", variant.name(), Pattern::tag(ratio)),
+            pattern: model.pattern().0.clone(),
+            tokens_per_sec: tps,
+            state_bytes: bytes,
+        });
     }
-    Ok(t)
+    Ok((t, rows))
 }
 
 /// Table 2: convergence (loss + throughput) for the attention-module zoo,
@@ -310,6 +348,164 @@ pub fn table4_hybrid_ratio(engine: &Arc<Engine>, steps: usize) -> Result<Table> 
         t.row(&cells);
     }
     Ok(t)
+}
+
+// ===================================================== kernel-level bench
+
+/// One measured GEMM data point (`lasp2 bench-kernels`).
+pub struct GemmRow {
+    pub op: &'static str,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub gflops: f64,
+}
+
+/// Op-level GEMM throughput at the shapes the repo actually runs: the
+/// tiny/small epilogue and projection `nn` products, the fused-transpose
+/// `nt` logits/score shapes (including the m=1 decode readout), and the
+/// `tn` weight-gradient shapes (k much larger than m/n).
+pub fn gemm_bench() -> (Table, Vec<GemmRow>) {
+    let shapes: &[(&'static str, usize, usize, usize)] = &[
+        ("nn", 32, 64, 128),   // tiny epilogue swiglu
+        ("nn", 128, 256, 512), // small swiglu
+        ("nn", 512, 256, 512), // small train forward
+        ("nt", 512, 256, 512), // small logits head (x · embᵀ)
+        ("nt", 128, 64, 128),  // attention scores q·kᵀ
+        ("nt", 1, 64, 256),    // tiny decode readout (m=1)
+        ("nt", 1, 256, 512),   // small decode readout (m=1)
+        ("tn", 256, 512, 256), // weight gradient xᵀ·dy
+        ("tn", 64, 2048, 32),  // k >> n backward shape
+    ];
+    let mut t = Table::new(&["op", "m", "k", "n", "GFLOP/s"]);
+    let mut rows = Vec::with_capacity(shapes.len());
+    for &(op, m, k, n) in shapes {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        // ~0.1s per shape
+        let iters = ((1.0e8 / flops) as usize).clamp(1, 2_000_000);
+        let (a, b) = match op {
+            "nn" => (Tensor::randn(&[m, k], 1), Tensor::randn(&[k, n], 2)),
+            "nt" => (Tensor::randn(&[m, k], 1), Tensor::randn(&[n, k], 2)),
+            _ => (Tensor::randn(&[k, m], 1), Tensor::randn(&[k, n], 2)),
+        };
+        // the `_into` entry points: kernel time only, no allocator noise
+        let mut out = Tensor::zeros(&[m, n]);
+        let step = |a: &Tensor, b: &Tensor, out: &mut Tensor| match op {
+            "nn" => a.matmul_into(b, out),
+            "nt" => a.matmul_nt_into(b, out),
+            _ => a.matmul_tn_into(b, out),
+        };
+        step(&a, &b, &mut out); // warm up (scratch pool, caches)
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            step(&a, &b, &mut out);
+            std::hint::black_box(&mut out);
+        }
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let gflops = flops * iters as f64 / dt / 1e9;
+        t.row(&[
+            op.to_string(),
+            m.to_string(),
+            k.to_string(),
+            n.to_string(),
+            format!("{gflops:.2}"),
+        ]);
+        rows.push(GemmRow { op, m, k, n, gflops });
+    }
+    (t, rows)
+}
+
+/// Time the real `train_step_basic_pure` artifact on this preset:
+/// returns (tag, ms per step, tokens/s).
+pub fn train_step_bench(engine: &Arc<Engine>, steps: usize) -> Result<(String, f64, f64)> {
+    let cfg = &engine.model;
+    let pattern = Pattern::from_ratio(cfg.n_layers, "0")?;
+    let tag = "basic_pure".to_string();
+    let rep = train(
+        engine,
+        Variant::Basic,
+        &pattern,
+        &tag,
+        &TrainOpts { steps, log_every: 0, ..Default::default() },
+    )?;
+    let toks_per_step = (cfg.train_batch * cfg.train_seq) as f64;
+    let step_ms = toks_per_step / rep.tokens_per_sec.max(1e-9) * 1e3;
+    Ok((tag, step_ms, rep.tokens_per_sec))
+}
+
+/// The machine-readable benchmark snapshot `lasp2 bench-all --json` /
+/// `bench-kernels --json` writes (committed as BENCH_kernels.json so the
+/// repo's perf trajectory is tracked PR over PR).  Hand-rolled writer —
+/// the repo is dependency-free by design.
+pub struct KernelsReport {
+    pub source: String,
+    pub threads: usize,
+    pub gemm: Vec<GemmRow>,
+    /// (preset, tag, step_ms, tokens_per_sec)
+    pub train: Option<(String, String, f64, f64)>,
+    /// (preset, n_tokens, rows)
+    pub decode: Option<(String, usize, Vec<DecodeRow>)>,
+    /// (preset, world, [(scheduler, tokens_per_sec)])
+    pub fig3: Option<(String, usize, Vec<(String, f64)>)>,
+}
+
+impl KernelsReport {
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": 1,\n");
+        s.push_str(&format!("  \"source\": \"{}\",\n", self.source));
+        s.push_str(&format!("  \"threads\": {},\n", self.threads));
+        s.push_str("  \"gemm\": [\n");
+        for (i, g) in self.gemm.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"op\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \"gflops\": {:.3}}}{}\n",
+                g.op,
+                g.m,
+                g.k,
+                g.n,
+                g.gflops,
+                if i + 1 < self.gemm.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]");
+        if let Some((preset, tag, step_ms, tps)) = &self.train {
+            s.push_str(&format!(
+                ",\n  \"train\": {{\"preset\": \"{preset}\", \"tag\": \"{tag}\", \
+                 \"step_ms\": {step_ms:.3}, \"tokens_per_sec\": {tps:.1}}}"
+            ));
+        }
+        if let Some((preset, n, rows)) = &self.decode {
+            s.push_str(&format!(
+                ",\n  \"decode\": {{\"preset\": \"{preset}\", \"tokens\": {n}, \"rows\": {{\n"
+            ));
+            for (i, r) in rows.iter().enumerate() {
+                s.push_str(&format!(
+                    "    \"{}\": {:.1}{}\n",
+                    r.tag,
+                    r.tokens_per_sec,
+                    if i + 1 < rows.len() { "," } else { "" }
+                ));
+            }
+            s.push_str("  }}");
+        }
+        if let Some((preset, world, rows)) = &self.fig3 {
+            s.push_str(&format!(
+                ",\n  \"fig3_realexec\": {{\"preset\": \"{preset}\", \"world\": {world}, \"rows\": {{\n"
+            ));
+            for (i, (name, tps)) in rows.iter().enumerate() {
+                s.push_str(&format!(
+                    "    \"{}\": {:.1}{}\n",
+                    name,
+                    tps,
+                    if i + 1 < rows.len() { "," } else { "" }
+                ));
+            }
+            s.push_str("  }}");
+        }
+        s.push_str("\n}\n");
+        s
+    }
 }
 
 /// Fig. 4 (left): memory-per-GPU frontier rows for quick printing.

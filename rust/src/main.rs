@@ -24,6 +24,7 @@ use lasp2::metrics::Table;
 use lasp2::runtime::Engine;
 use lasp2::serve::{argmax, Model};
 use lasp2::sim::CostModel;
+use lasp2::tensor::par;
 use lasp2::train::{train, TrainOpts};
 
 struct Args {
@@ -97,11 +98,19 @@ COMMANDS
   bench-table6  quantitative scalability table (sim)
   bench-decode  serving decode: tokens/s + state-bytes-vs-seqlen table
                   --preset tiny|small  --tokens N
-  bench-all     all of the above
+                  --json path.json  (machine-readable results)
+                  --floor BENCH_floor.json  (fail if tokens/s drops >30%
+                  below the committed floor — the CI perf smoke gate)
+  bench-kernels op-level GEMM GFLOP/s + train-step ms + decode tokens/s
+                  --preset tiny|small  --steps N  --tokens N
+                  --json BENCH_kernels.json
+  bench-all     all of the above; --json path.json writes the full
+                machine-readable kernel/train/decode/fig3 snapshot
 
 Flags accept both `--key value` and `--key=value`.  `run`, `train`, and
 `generate` also take `--profile` to print the per-artifact execution time
-table after the run.
+table after the run.  `LASP2_THREADS` controls compute-core threading
+(unset/0 = all cores, 1 = serial; outputs are bit-identical either way).
 ";
 
 fn main() -> Result<()> {
@@ -113,6 +122,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "generate" => cmd_generate(&args),
         "bench-decode" => cmd_decode_bench(&args),
+        "bench-kernels" => cmd_bench_kernels(&args),
         "bench-fig3" => cmd_fig3(&args),
         "bench-fig4" => {
             println!("# Fig. 4 — scalability frontier (sim)\n");
@@ -132,17 +142,7 @@ fn main() -> Result<()> {
             println!("{}", bench::table6_scalability(&CostModel::default()).to_markdown());
             Ok(())
         }
-        "bench-all" => {
-            cmd_fig3(&args)?;
-            println!("# Fig. 4\n\n{}", bench::fig4_scalability(&CostModel::default()).to_markdown());
-            cmd_table2(&args)?;
-            cmd_table3(&args)?;
-            cmd_table4(&args)?;
-            println!("# Table 5\n\n{}", bench::table5_splits(&CostModel::default()).to_markdown());
-            println!("# Table 6\n\n{}", bench::table6_scalability(&CostModel::default()).to_markdown());
-            cmd_decode_bench(&args)?;
-            Ok(())
-        }
+        "bench-all" => cmd_bench_all(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -237,7 +237,139 @@ fn cmd_decode_bench(args: &Args) -> Result<()> {
     let engine = Engine::load_preset(&preset)?;
     let n = args.usize("tokens", (engine.model.max_seq / 4).max(8))?;
     println!("# Serving decode — constant-memory inference ({preset}, {n} tokens)\n");
-    println!("{}", bench::decode_bench(&engine, n)?.to_markdown());
+    let (table, rows) = bench::decode_bench_rows(&engine, n)?;
+    println!("{}", table.to_markdown());
+    if let Some(path) = args.flags.get("json") {
+        let report = bench::KernelsReport {
+            source: "lasp2 bench-decode".into(),
+            threads: par::num_threads(),
+            gemm: Vec::new(),
+            train: None,
+            decode: Some((preset.clone(), n, rows.clone())),
+            fig3: None,
+        };
+        std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    if let Some(floor_path) = args.flags.get("floor") {
+        let text = std::fs::read_to_string(floor_path)
+            .with_context(|| format!("reading floor file {floor_path}"))?;
+        check_decode_floor(&rows, &text)?;
+        println!("decode floor check passed ({floor_path})");
+    }
+    Ok(())
+}
+
+/// Scan our own flat bench JSON for `"key": <number>` (the repo is
+/// dependency-free by design, so no JSON parser — this reads only the
+/// files the bench writer itself emits).
+fn json_lookup_f64(text: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\"");
+    let rest = &text[text.find(&pat)? + pat.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || ".-+eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// CI perf smoke: every measured decode row with a committed floor must
+/// stay above floor * 0.7 (i.e. fail on a >30% regression).
+fn check_decode_floor(rows: &[bench::DecodeRow], floor_text: &str) -> Result<()> {
+    let mut failures = Vec::new();
+    let mut checked = 0;
+    for r in rows {
+        if let Some(floor) = json_lookup_f64(floor_text, &r.tag) {
+            checked += 1;
+            if r.tokens_per_sec < floor * 0.7 {
+                failures.push(format!(
+                    "{}: {:.0} tok/s < 70% of committed floor {:.0}",
+                    r.tag, r.tokens_per_sec, floor
+                ));
+            }
+        }
+    }
+    anyhow::ensure!(checked > 0, "floor file matched no decode rows");
+    if !failures.is_empty() {
+        bail!("decode perf regression:\n  {}", failures.join("\n  "));
+    }
+    Ok(())
+}
+
+fn cmd_bench_kernels(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "tiny");
+    let engine = Engine::load_preset(&preset)?;
+    let (gt, gemm) = bench::gemm_bench();
+    println!(
+        "# Kernel-level GEMM throughput ({} threads)\n\n{}",
+        par::num_threads(),
+        gt.to_markdown()
+    );
+    let steps = args.usize("steps", 8)?;
+    let (tag, step_ms, tps) = bench::train_step_bench(&engine, steps)?;
+    println!("train_step_{tag} ({preset}): {step_ms:.1} ms/step ({tps:.0} tokens/s)\n");
+    let n = args.usize("tokens", (engine.model.max_seq / 4).max(8))?;
+    let (dt, rows) = bench::decode_bench_rows(&engine, n)?;
+    println!("# Serving decode ({preset}, {n} tokens)\n\n{}", dt.to_markdown());
+    if let Some(path) = args.flags.get("json") {
+        let report = bench::KernelsReport {
+            source: "lasp2 bench-kernels".into(),
+            threads: par::num_threads(),
+            gemm,
+            train: Some((preset.clone(), tag, step_ms, tps)),
+            decode: Some((preset.clone(), n, rows)),
+            fig3: None,
+        };
+        std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_bench_all(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "tiny");
+    let world = args.usize("world", 4)?;
+    let iters = args.usize("iters", 3)?;
+    let engine = Engine::load_preset(&preset)?;
+    println!("# Fig. 3 — speed comparison, tokens/s (sim, 64 GPUs, Linear-Llama3-1B)\n");
+    println!("{}", bench::fig3_speed(&CostModel::default()).to_markdown());
+    println!(
+        "# Fig. 3 companion — REAL execution ({preset}, W={world}, {} layers)\n",
+        engine.model.n_layers
+    );
+    let (t, rows) = bench::fig3_realexec_rows(&engine, world, iters)?;
+    println!("{}", t.to_markdown());
+    let fig3_rows = Some((preset.clone(), world, rows));
+    println!("# Fig. 4\n\n{}", bench::fig4_scalability(&CostModel::default()).to_markdown());
+    cmd_table2(args)?;
+    cmd_table3(args)?;
+    cmd_table4(args)?;
+    println!("# Table 5\n\n{}", bench::table5_splits(&CostModel::default()).to_markdown());
+    println!("# Table 6\n\n{}", bench::table6_scalability(&CostModel::default()).to_markdown());
+    let (gt, gemm) = bench::gemm_bench();
+    println!(
+        "# Kernel-level GEMM throughput ({} threads)\n\n{}",
+        par::num_threads(),
+        gt.to_markdown()
+    );
+    let (tag, step_ms, tps) = bench::train_step_bench(&engine, args.usize("train-steps", 8)?)?;
+    println!("train_step_{tag} ({preset}): {step_ms:.1} ms/step ({tps:.0} tokens/s)\n");
+    let n = args.usize("tokens", (engine.model.max_seq / 4).max(8))?;
+    println!("# Serving decode — constant-memory inference ({preset}, {n} tokens)\n");
+    let (dtable, drows) = bench::decode_bench_rows(&engine, n)?;
+    println!("{}", dtable.to_markdown());
+    if let Some(path) = args.flags.get("json") {
+        let report = bench::KernelsReport {
+            source: "lasp2 bench-all".into(),
+            threads: par::num_threads(),
+            gemm,
+            train: Some((preset.clone(), tag, step_ms, tps)),
+            decode: Some((preset, n, drows)),
+            fig3: fig3_rows,
+        };
+        std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -413,5 +545,25 @@ mod tests {
         let a = parse(&["--prompt=", "--tokens=4"]);
         assert_eq!(a.get("prompt", "x"), "");
         assert_eq!(a.usize("tokens", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn floor_lookup_and_regression_check() {
+        let text = r#"{"floors": {"basic_pure": 300.0, "softmax_std": 100}}"#;
+        assert_eq!(super::json_lookup_f64(text, "basic_pure"), Some(300.0));
+        assert_eq!(super::json_lookup_f64(text, "softmax_std"), Some(100.0));
+        assert_eq!(super::json_lookup_f64(text, "missing"), None);
+        let row = |tps: f64| lasp2::bench::DecodeRow {
+            tag: "basic_pure".into(),
+            pattern: "LL".into(),
+            tokens_per_sec: tps,
+            state_bytes: [0; 3],
+        };
+        // 250 >= 300 * 0.7 -> within the 30% regression budget
+        assert!(super::check_decode_floor(&[row(250.0)], text).is_ok());
+        // 100 < 210 -> regression
+        assert!(super::check_decode_floor(&[row(100.0)], text).is_err());
+        // a floor file matching no rows is a configuration error
+        assert!(super::check_decode_floor(&[row(250.0)], "{}").is_err());
     }
 }

@@ -32,6 +32,31 @@
 //! step), `s_prefill` (chunk-sized KV-cache attention for hybrid
 //! prefill), and the decode-shaped `embed_dec_B{b}` / `head_dec_B{b}`,
 //! each registered at every batch size in `DECODE_BATCH_SIZES`.
+//!
+//! ## Compute parallelism (`LASP2_THREADS`, bit-identical at any setting)
+//!
+//! All dense math routes through the strided `tensor::gemm` core (tiled,
+//! fused-transpose, row-band threaded for large shapes, per-head views
+//! addressed in place).  On top of that, the embarrassingly-parallel
+//! loops fan out deterministically via `tensor::par` — exactly the
+//! computation-parallelism the paper's single AllGather unlocks:
+//!
+//! * **chunk-parallel** — the whole-sequence oracle path
+//!   (`forward_mono_*` / `linear_layer_chunked`): after part1, every
+//!   chunk's intra-attention and epilogue are independent (Alg. 2's
+//!   per-device concurrency, realized across threads);
+//! * **head-parallel** — the std/ring/mega softmax-attention kernels
+//!   (`s_part2_T*`, `mega_attn_*`, the oracle `std_layer_full`);
+//! * **sequence-parallel** — `train_step_*` runs its batch's sequences
+//!   concurrently, reducing gradients in fixed batch order;
+//! * **session-parallel** — the batched decode artifacts
+//!   (`l_decode_*_B{b}`, `s_decode_B{b}`) step their per-session rows
+//!   concurrently.
+//!
+//! Thresholds depend only on problem shape, never on the thread count,
+//! and every worker writes a disjoint output region in a fixed order —
+//! so outputs are bit-identical across `LASP2_THREADS` settings
+//! (`tests/thread_determinism.rs`).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -41,7 +66,7 @@ use anyhow::{Context, Result};
 use super::{ArtifactMeta, DType, Manifest, TensorMeta, Value};
 use crate::config::{ModelConfig, Pattern, Variant};
 use crate::coordinator::params::{param_specs, Init};
-use crate::tensor::{prefix_states, state_combine, ChunkState, Tensor};
+use crate::tensor::{gemm, par, prefix_states, scratch, state_combine, ChunkState, Tensor};
 
 /// Batch sizes the serving decode artifacts are registered for.  The
 /// `serve::Batch` wrapper groups sessions greedily into the largest
@@ -121,18 +146,6 @@ fn swiglu(x: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor) -> Tensor {
     Tensor::new(u.shape().to_vec(), gated).matmul(w2)
 }
 
-/// Extract head `h` of a `[C, H, F]` tensor as `[C, F]`.
-fn head_of(t: &Tensor, h: usize) -> Tensor {
-    let s = t.shape();
-    let (c, heads, f) = (s[0], s[1], s[2]);
-    let mut out = Vec::with_capacity(c * f);
-    for i in 0..c {
-        let base = (i * heads + h) * f;
-        out.extend_from_slice(&t.data()[base..base + f]);
-    }
-    Tensor::new(vec![c, f], out)
-}
-
 /// Row `i` of a tensor along axis 0, keeping the leading axis (shape
 /// `[1, rest...]`) — batch-row extraction for the decode kernels.
 fn row0(t: &Tensor, i: usize) -> Tensor {
@@ -142,49 +155,55 @@ fn row0(t: &Tensor, i: usize) -> Tensor {
     Tensor::new(shape, t.data()[i * stride..(i + 1) * stride].to_vec())
 }
 
-/// Write `[C, F]` data back into head `h` of a `[C, H, F]` tensor.
-fn set_head(dst: &mut Tensor, h: usize, src: &Tensor) {
-    let heads = dst.shape()[1];
-    let (c, f) = (src.shape()[0], src.shape()[1]);
+/// Write a packed `[C, F]` buffer into head `h` of a `[C, H, F]` tensor
+/// (scatter step of the head-parallel kernels).
+fn scatter_head(dst: &mut Tensor, h: usize, src: &[f32]) {
+    let (heads, f) = (dst.shape()[1], dst.shape()[2]);
+    let c = dst.shape()[0];
     for i in 0..c {
         let base = (i * heads + h) * f;
-        dst.data_mut()[base..base + f].copy_from_slice(&src.data()[i * f..(i + 1) * f]);
+        dst.data_mut()[base..base + f].copy_from_slice(&src[i * f..(i + 1) * f]);
     }
 }
 
-/// Zero the strictly-upper triangle of a square score matrix (causal mask).
-fn tril_inplace(s: &mut Tensor) {
-    let c = s.shape()[0];
-    let d = s.data_mut();
+/// Zero the strictly-upper triangle of a square [c, c] score buffer.
+fn tril_raw(s: &mut [f32], c: usize) {
     for i in 0..c {
-        for j in i + 1..c {
-            d[i * c + j] = 0.0;
+        for v in &mut s[i * c + i + 1..(i + 1) * c] {
+            *v = 0.0;
         }
     }
 }
 
-/// Zero entries where global qpos < kpos (offset causal mask, zero-fill).
-fn offset_causal_zero(s: &mut Tensor, qoff: i32, koff: i32) {
-    let (cq, ck) = (s.shape()[0], s.shape()[1]);
-    let d = s.data_mut();
+/// Zero entries of a [cq, ck] score buffer where global qpos < kpos.
+fn offset_causal_zero_raw(s: &mut [f32], cq: usize, ck: usize, qoff: i32, koff: i32) {
     for i in 0..cq {
-        for j in 0..ck {
-            if qoff + i as i32 < koff + j as i32 {
-                d[i * ck + j] = 0.0;
-            }
+        // columns j with koff + j > qoff + i are masked
+        let cut = (qoff + i as i32 - koff + 1).clamp(0, ck as i32) as usize;
+        for v in &mut s[i * ck + cut..(i + 1) * ck] {
+            *v = 0.0;
         }
     }
 }
 
-/// Row-wise stable softmax with an offset causal mask (-inf fill).
-fn softmax_causal_inplace(s: &mut Tensor, qoff: i32, koff: i32) {
-    let (cq, ck) = (s.shape()[0], s.shape()[1]);
-    let d = s.data_mut();
+/// Row-wise stable softmax over a [cq, ck] score buffer: scores are
+/// scaled by `scale`, entries with global qpos < kpos get -inf, rows are
+/// max-subtracted, exponentiated, and normalized.
+fn softmax_causal_scaled_raw(
+    s: &mut [f32],
+    cq: usize,
+    ck: usize,
+    scale: f32,
+    qoff: i32,
+    koff: i32,
+) {
     for i in 0..cq {
-        let row = &mut d[i * ck..(i + 1) * ck];
+        let row = &mut s[i * ck..(i + 1) * ck];
         for (j, v) in row.iter_mut().enumerate() {
             if qoff + i as i32 < koff + j as i32 {
                 *v = NEG_INF;
+            } else {
+                *v *= scale;
             }
         }
         let m = row.iter().fold(NEG_INF, |a, &b| a.max(b));
@@ -371,18 +390,28 @@ fn fold_gates(q: &Tensor, k: &Tensor, v: &Tensor, g: Tensor) -> (Tensor, Tensor,
     let a = Tensor::new(vec![hh, fk], b.data()[(c - 1) * stride..c * stride].to_vec());
     let qt = q.mul(&b);
     let kt = k.div(&b);
+    // scale k~ by the carry once for the whole [C, H, fk] block, then form
+    // M_h = (k~ * a)_hᵀ · V_h with a strided tn — no per-head copies
+    let mut kts = scratch::take(c * stride);
+    let (ktd, ad) = (kt.data(), a.data());
+    for (i, vmut) in kts.iter_mut().enumerate() {
+        *vmut = ktd[i] * ad[i % stride];
+    }
     let mut m = Tensor::zeros(&[hh, fk, dh]);
     for h in 0..hh {
-        let mut khs = head_of(&kt, h); // [c, fk]
-        let ad = &a.data()[h * fk..(h + 1) * fk];
-        for i in 0..c {
-            for f in 0..fk {
-                khs.data_mut()[i * fk + f] *= ad[f];
-            }
-        }
-        let mh = khs.t().matmul(&head_of(&v, h)); // [fk, dh]
-        m.data_mut()[h * fk * dh..(h + 1) * fk * dh].copy_from_slice(mh.data());
+        gemm::tn(
+            fk,
+            c,
+            dh,
+            &kts[h * fk..],
+            stride,
+            &v.data()[h * dh..],
+            hh * dh,
+            &mut m.data_mut()[h * fk * dh..(h + 1) * fk * dh],
+            dh,
+        );
     }
+    scratch::recycle(kts);
     (qt, kt, m, a)
 }
 
@@ -426,47 +455,135 @@ fn linear_part1(
     Part1 { qt, kt, v, m, a }
 }
 
-/// O_intra = [(Q~ K~^T) . tril] V per head -> [C, H, dh].
+/// One head of O_intra = [(Q~ K~^T) . tril] V, written to `out` rows at
+/// stride `ldo` (identical bits whether `out` is a packed [C, dh] buffer
+/// or an in-place [C, H, dh] head view).
+fn intra_one_head(
+    qt: &Tensor,
+    kt: &Tensor,
+    v: &Tensor,
+    h: usize,
+    s: &mut [f32],
+    out: &mut [f32],
+    ldo: usize,
+) {
+    let (c, hh, fk) = (qt.shape()[0], qt.shape()[1], qt.shape()[2]);
+    let dh = v.shape()[2];
+    gemm::nt(c, fk, c, &qt.data()[h * fk..], hh * fk, &kt.data()[h * fk..], hh * fk, s, c);
+    tril_raw(s, c);
+    gemm::nn(c, c, dh, s, c, &v.data()[h * dh..], hh * dh, out, ldo);
+}
+
+/// O_intra = [(Q~ K~^T) . tril] V per head -> [C, H, dh].  Strided in
+/// place (no head copies); head-parallel when the work is large.
 fn intra_heads(qt: &Tensor, kt: &Tensor, v: &Tensor) -> Tensor {
-    let (c, hh) = (qt.shape()[0], qt.shape()[1]);
+    let (c, hh, fk) = (qt.shape()[0], qt.shape()[1], qt.shape()[2]);
     let dh = v.shape()[2];
     let mut out = Tensor::zeros(&[c, hh, dh]);
-    for h in 0..hh {
-        let qh = head_of(qt, h);
-        let kh = head_of(kt, h);
-        let mut s = qh.matmul(&kh.t());
-        tril_inplace(&mut s);
-        set_head(&mut out, h, &s.matmul(&head_of(v, h)));
+    let flops = 2 * c * c * (fk + dh) * hh;
+    if par::would_parallelize(hh, flops) {
+        let heads: Vec<Vec<f32>> = par::par_map(hh, flops, |h| {
+            let mut s = scratch::take(c * c);
+            let mut oh = scratch::take(c * dh);
+            intra_one_head(qt, kt, v, h, &mut s, &mut oh, dh);
+            scratch::recycle(s);
+            oh
+        });
+        // scatter, then recycle on THIS thread (worker pools die with the
+        // scoped threads, so the coordinator keeps the buffers alive)
+        for (h, oh) in heads.into_iter().enumerate() {
+            scatter_head(&mut out, h, &oh);
+            scratch::recycle(oh);
+        }
+    } else {
+        let mut s = scratch::take(c * c);
+        for h in 0..hh {
+            intra_one_head(qt, kt, v, h, &mut s, &mut out.data_mut()[h * dh..], hh * dh);
+        }
+        scratch::recycle(s);
     }
     out
 }
 
-/// O_inter = Q~ M per head -> [C, H, dh].  m: [H, fk, dh].
+/// O_inter = Q~ M per head -> [C, H, dh].  m: [H, fk, dh].  Strided nn
+/// per head, no copies.
 fn inter_heads(qt: &Tensor, m: &Tensor) -> Tensor {
     let (c, hh) = (qt.shape()[0], qt.shape()[1]);
     let (fk, dh) = (m.shape()[1], m.shape()[2]);
     let mut out = Tensor::zeros(&[c, hh, dh]);
     for h in 0..hh {
-        let mh = Tensor::new(
-            vec![fk, dh],
-            m.data()[h * fk * dh..(h + 1) * fk * dh].to_vec(),
+        gemm::nn(
+            c,
+            fk,
+            dh,
+            &qt.data()[h * fk..],
+            hh * fk,
+            &m.data()[h * fk * dh..(h + 1) * fk * dh],
+            dh,
+            &mut out.data_mut()[h * dh..],
+            hh * dh,
         );
-        set_head(&mut out, h, &head_of(qt, h).matmul(&mh));
     }
     out
 }
 
+/// One head of causal softmax attention against a gathered K/V sequence,
+/// written to `out` rows at stride `ldo`.
+fn softmax_one_head(
+    q: &Tensor,
+    k_all: &Tensor,
+    v_all: &Tensor,
+    qoff: i32,
+    h: usize,
+    s: &mut [f32],
+    out: &mut [f32],
+    ldo: usize,
+) {
+    let (c, hh, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let n_all = k_all.shape()[0];
+    let scale = 1.0 / (dh as f32).sqrt();
+    gemm::nt(
+        c,
+        dh,
+        n_all,
+        &q.data()[h * dh..],
+        hh * dh,
+        &k_all.data()[h * dh..],
+        hh * dh,
+        s,
+        n_all,
+    );
+    softmax_causal_scaled_raw(s, c, n_all, scale, qoff, 0);
+    gemm::nn(c, n_all, dh, s, n_all, &v_all.data()[h * dh..], hh * dh, out, ldo);
+}
+
 /// Standard softmax attention per head against a gathered K/V sequence.
-/// q: [C, H, dh] at global positions qoff+[0..C); k/v: [N, H, dh] at [0..N).
+/// q: [C, H, dh] at global positions qoff+[0..C); k/v: [N, H, dh] at
+/// [0..N).  Head-parallel when the work is large.
 fn softmax_attn_heads(q: &Tensor, k_all: &Tensor, v_all: &Tensor, qoff: i32) -> Tensor {
     let (c, hh, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
-    let scale = 1.0 / (dh as f32).sqrt();
+    let n_all = k_all.shape()[0];
     let mut out = Tensor::zeros(&[c, hh, dh]);
-    for h in 0..hh {
-        let qh = head_of(q, h).scale(scale);
-        let mut s = qh.matmul(&head_of(k_all, h).t());
-        softmax_causal_inplace(&mut s, qoff, 0);
-        set_head(&mut out, h, &s.matmul(&head_of(v_all, h)));
+    let flops = 4 * c * n_all * dh * hh;
+    if par::would_parallelize(hh, flops) {
+        let heads: Vec<Vec<f32>> = par::par_map(hh, flops, |h| {
+            let mut s = scratch::take(c * n_all);
+            let mut oh = scratch::take(c * dh);
+            softmax_one_head(q, k_all, v_all, qoff, h, &mut s, &mut oh, dh);
+            scratch::recycle(s);
+            oh
+        });
+        for (h, oh) in heads.into_iter().enumerate() {
+            scatter_head(&mut out, h, &oh);
+            scratch::recycle(oh);
+        }
+    } else {
+        let mut s = scratch::take(c * n_all);
+        for h in 0..hh {
+            let ldo = hh * dh;
+            softmax_one_head(q, k_all, v_all, qoff, h, &mut s, &mut out.data_mut()[h * dh..], ldo);
+        }
+        scratch::recycle(s);
     }
     out
 }
@@ -565,24 +682,34 @@ fn linear_layer_chunked(
         pv.layer(layer, "w2")?,
     );
     let chunks = x.chunk0(n / c);
-    let parts: Vec<Part1> = chunks
-        .iter()
-        .map(|xc| linear_part1(cfg, variant, xc, ln1, wq, wk, wv, &extra))
-        .collect();
+    // chunk-parallel part1: each chunk's projections/feature maps/state
+    // are independent (the compute side of the paper's single-AllGather
+    // claim), so they fan out across threads deterministically
+    let d = cfg.d_model;
+    let (hh, dh, fk) = (cfg.n_heads, cfg.head_dim, cfg.feat_dim(variant));
+    let chunk_flops =
+        2 * c * (d * (3 * hh * fk + hh * dh + 3 * cfg.ffn_dim) + c * hh * (fk + dh));
+    let total_flops = chunk_flops * chunks.len();
+    let parts: Vec<Part1> = par::par_map(chunks.len(), total_flops, |t| {
+        linear_part1(cfg, variant, &chunks[t], ln1, wq, wk, wv, &extra)
+    });
     let states: Vec<ChunkState> = parts
         .iter()
         .map(|p| ChunkState { m: p.m.clone(), a: p.a.clone() })
         .collect();
+    // the serial prefix combine is O(W) on seq-len-independent states ...
     let (prefixes, total) = prefix_states(&states);
-    let mut outs = Vec::with_capacity(chunks.len());
-    for (t, (xc, p)) in chunks.iter().zip(&parts).enumerate() {
+    // ... after which every chunk's intra-attention + epilogue is again
+    // embarrassingly parallel
+    let outs: Vec<Tensor> = par::par_map(chunks.len(), total_flops, |t| {
+        let p = &parts[t];
         let attn = if masked {
             intra_heads(&p.qt, &p.kt, &p.v).add(&inter_heads(&p.qt, &prefixes[t].m))
         } else {
             inter_heads(&p.qt, &total.m)
         };
-        outs.push(epilogue(xc, &attn, wo, ln2, w1, w3, w2));
-    }
+        epilogue(&chunks[t], &attn, wo, ln2, w1, w3, w2)
+    });
     Ok(Tensor::cat0(&outs))
 }
 
@@ -625,7 +752,7 @@ fn forward_tokens(
         };
     }
     let zn = rmsnorm(&x, pv.get("final_ln")?);
-    Ok(zn.matmul(&pv.get("embed")?.t()))
+    Ok(zn.matmul_nt(pv.get("embed")?))
 }
 
 // ===================================================== train step backward
@@ -728,23 +855,41 @@ fn seq_loss_grads(
             None => (&q, &k),
         };
         let mut attn = Tensor::zeros(&[n, hh, dh]);
+        let fkl = qt.shape()[2];
+        let mut sbuf = scratch::take(n * n);
         for h in 0..hh {
-            let qh = head_of(qt, h);
-            let kh = head_of(kt, h);
-            let vh = head_of(&v, h);
-            let oh = if is_linear {
-                let mut a = qh.matmul(&kh.t());
+            if is_linear {
+                gemm::nt(
+                    n,
+                    fkl,
+                    n,
+                    &qt.data()[h * fkl..],
+                    hh * fkl,
+                    &kt.data()[h * fkl..],
+                    hh * fkl,
+                    &mut sbuf,
+                    n,
+                );
                 if masked {
-                    tril_inplace(&mut a);
+                    tril_raw(&mut sbuf, n);
                 }
-                a.matmul(&vh)
+                gemm::nn(
+                    n,
+                    n,
+                    dh,
+                    &sbuf,
+                    n,
+                    &v.data()[h * dh..],
+                    hh * dh,
+                    &mut attn.data_mut()[h * dh..],
+                    hh * dh,
+                );
             } else {
-                let mut s = qh.scale(scale).matmul(&kh.t());
-                softmax_causal_inplace(&mut s, 0, 0);
-                s.matmul(&vh)
-            };
-            set_head(&mut attn, h, &oh);
+                let ldo = hh * dh;
+                softmax_one_head(qt, kt, &v, 0, h, &mut sbuf, &mut attn.data_mut()[h * dh..], ldo);
+            }
         }
+        scratch::recycle(sbuf);
         let y = x.add(
             &attn
                 .clone()
@@ -783,7 +928,7 @@ fn seq_loss_grads(
     }
     let xl = x;
     let zn = rmsnorm(&xl, pv.get("final_ln")?);
-    let logits = zn.matmul(&emb.t());
+    let logits = zn.matmul_nt(emb);
 
     // ---- loss + dlogits ----
     let mut loss = 0.0f32;
@@ -805,7 +950,7 @@ fn seq_loss_grads(
     }
 
     // ---- backward: head (tied embedding) ----
-    grads[gidx("embed")].add_assign(&dlogits.t().matmul(&zn));
+    grads[gidx("embed")].add_assign(&dlogits.matmul_tn(&zn));
     let dz = dlogits.matmul(emb);
     let (mut dx, dfl) = rmsnorm_bwd(&xl, pv.get("final_ln")?, &dz);
     grads[gidx("final_ln")].add_assign(&dfl);
@@ -816,7 +961,7 @@ fn seq_loss_grads(
         let dzl = dx;
         // MLP: z = y + (silu(u) * tg) w2
         let w2 = pv.layer(i, "w2")?;
-        let ds = dzl.matmul(&w2.t());
+        let ds = dzl.matmul_nt(w2);
         let gated: Vec<f32> = lc
             .u
             .data()
@@ -825,7 +970,7 @@ fn seq_loss_grads(
             .map(|(a, b)| silu(*a) * b)
             .collect();
         grads[gidx(&format!("layer{i}.w2"))]
-            .add_assign(&Tensor::new(lc.u.shape().to_vec(), gated).t().matmul(&dzl));
+            .add_assign(&Tensor::new(lc.u.shape().to_vec(), gated).matmul_tn(&dzl));
         let mut dtg = ds.clone();
         let mut du = ds;
         for (j, (dt, dd)) in dtg.data_mut().iter_mut().zip(du.data_mut()).enumerate() {
@@ -837,19 +982,19 @@ fn seq_loss_grads(
             *dd = dsj * t * (sg * (1.0 + uu * (1.0 - sg)));
         }
         let dyn_ = du
-            .matmul(&pv.layer(i, "w1")?.t())
-            .add(&dtg.matmul(&pv.layer(i, "w3")?.t()));
-        grads[gidx(&format!("layer{i}.w1"))].add_assign(&lc.yn.t().matmul(&du));
-        grads[gidx(&format!("layer{i}.w3"))].add_assign(&lc.yn.t().matmul(&dtg));
+            .matmul_nt(pv.layer(i, "w1")?)
+            .add(&dtg.matmul_nt(pv.layer(i, "w3")?));
+        grads[gidx(&format!("layer{i}.w1"))].add_assign(&lc.yn.matmul_tn(&du));
+        grads[gidx(&format!("layer{i}.w3"))].add_assign(&lc.yn.matmul_tn(&dtg));
         let (dy_norm, dln2) = rmsnorm_bwd(&lc.y, pv.layer(i, "ln2")?, &dyn_);
         grads[gidx(&format!("layer{i}.ln2"))].add_assign(&dln2);
         let dy = dzl.add(&dy_norm);
         // attention projection: y = x + attn_flat wo
         let dattn = dy
-            .matmul(&pv.layer(i, "wo")?.t())
+            .matmul_nt(pv.layer(i, "wo")?)
             .reshape(&[n, hh, dh]);
         grads[gidx(&format!("layer{i}.wo"))]
-            .add_assign(&lc.attn.clone().reshape(&[n, hh * dh]).t().matmul(&dy));
+            .add_assign(&lc.attn.clone().reshape(&[n, hh * dh]).matmul_tn(&dy));
         // attention core backward (through the cached folded q~/k~ on
         // decay-gated linear layers)
         let (qt, kt): (&Tensor, &Tensor) = match &lc.folded {
@@ -860,43 +1005,48 @@ fn seq_loss_grads(
         let mut dqt = Tensor::zeros(&[n, hh, fkl]);
         let mut dkt = Tensor::zeros(&[n, hh, fkl]);
         let mut dv = Tensor::zeros(&[n, hh, dh]);
+        let mut s1 = scratch::take(n * n);
+        let mut s2 = scratch::take(n * n);
         for h in 0..hh {
-            let do_h = head_of(&dattn, h);
-            let qh = head_of(qt, h);
-            let kh = head_of(kt, h);
-            let vh = head_of(&lc.v, h);
+            let qs = &qt.data()[h * fkl..];
+            let ks = &kt.data()[h * fkl..];
+            let vs = &lc.v.data()[h * dh..];
+            let dos = &dattn.data()[h * dh..];
             if lc.is_linear {
-                let mut a = qh.matmul(&kh.t());
+                // a = q·kᵀ (masked) -> s1; dv_h = aᵀ·do
+                gemm::nt(n, fkl, n, qs, hh * fkl, ks, hh * fkl, &mut s1, n);
                 if masked {
-                    tril_inplace(&mut a);
+                    tril_raw(&mut s1, n);
                 }
-                set_head(&mut dv, h, &a.t().matmul(&do_h));
-                let mut da = do_h.matmul(&vh.t());
+                gemm::tn(n, n, dh, &s1, n, dos, hh * dh, &mut dv.data_mut()[h * dh..], hh * dh);
+                // da = do·vᵀ (masked) -> s2; dq = da·k; dk = daᵀ·q
+                gemm::nt(n, dh, n, dos, hh * dh, vs, hh * dh, &mut s2, n);
                 if masked {
-                    tril_inplace(&mut da);
+                    tril_raw(&mut s2, n);
                 }
-                set_head(&mut dqt, h, &da.matmul(&kh));
-                set_head(&mut dkt, h, &da.t().matmul(&qh));
+                gemm::nn(n, n, fkl, &s2, n, ks, hh * fkl, &mut dqt.data_mut()[h * fkl..], hh * fkl);
+                gemm::tn(n, n, fkl, &s2, n, qs, hh * fkl, &mut dkt.data_mut()[h * fkl..], hh * fkl);
             } else {
-                let mut p = qh.scale(scale).matmul(&kh.t());
-                softmax_causal_inplace(&mut p, 0, 0);
-                set_head(&mut dv, h, &p.t().matmul(&do_h));
-                let dp = do_h.matmul(&vh.t());
-                // dS = P * (dP - rowsum(dP * P))
-                let mut dsm = Tensor::zeros(&[n, n]);
+                // p = softmax(scale q·kᵀ) -> s1; dv_h = pᵀ·do
+                gemm::nt(n, dh, n, qs, hh * dh, ks, hh * dh, &mut s1, n);
+                softmax_causal_scaled_raw(&mut s1, n, n, scale, 0, 0);
+                gemm::tn(n, n, dh, &s1, n, dos, hh * dh, &mut dv.data_mut()[h * dh..], hh * dh);
+                // dp = do·vᵀ -> s2; dS = P*(dP - rowsum(dP*P))*scale in s2
+                gemm::nt(n, dh, n, dos, hh * dh, vs, hh * dh, &mut s2, n);
                 for r in 0..n {
-                    let pr = &p.data()[r * n..(r + 1) * n];
-                    let dpr = &dp.data()[r * n..(r + 1) * n];
-                    let rs: f32 = pr.iter().zip(dpr).map(|(a, b)| a * b).sum();
-                    let out = &mut dsm.data_mut()[r * n..(r + 1) * n];
-                    for c2 in 0..n {
-                        out[c2] = pr[c2] * (dpr[c2] - rs);
+                    let pr = &s1[r * n..(r + 1) * n];
+                    let dpr = &mut s2[r * n..(r + 1) * n];
+                    let rs: f32 = pr.iter().zip(dpr.iter()).map(|(a, b)| a * b).sum();
+                    for (pe, de) in pr.iter().zip(dpr.iter_mut()) {
+                        *de = pe * (*de - rs) * scale;
                     }
                 }
-                set_head(&mut dqt, h, &dsm.matmul(&kh).scale(scale));
-                set_head(&mut dkt, h, &dsm.t().matmul(&qh).scale(scale));
+                gemm::nn(n, n, fkl, &s2, n, ks, hh * fkl, &mut dqt.data_mut()[h * fkl..], hh * fkl);
+                gemm::tn(n, n, fkl, &s2, n, qs, hh * fkl, &mut dkt.data_mut()[h * fkl..], hh * fkl);
             }
         }
+        scratch::recycle(s1);
+        scratch::recycle(s2);
         // decay gates: q~ = q*B, k~ = k/B with B = cumprod(g)
         let mut dhn_gate: Option<Tensor> = None;
         let (dq, dk) = if let (Some(g), Some(b)) = (&lc.g, &lc.b) {
@@ -927,8 +1077,8 @@ fn seq_loss_grads(
                     let u = (gv - GATE_FLOOR) / (1.0 - GATE_FLOOR);
                     *dr *= (1.0 - GATE_FLOOR) / GLA_TAU * u * (1.0 - u.powf(GLA_TAU));
                 }
-                grads[gidx(&format!("layer{i}.wg"))].add_assign(&lc.hn.t().matmul(&draw));
-                dhn_gate = Some(draw.matmul(&wg.t()));
+                grads[gidx(&format!("layer{i}.wg"))].add_assign(&lc.hn.matmul_tn(&draw));
+                dhn_gate = Some(draw.matmul_nt(wg));
             }
             // Retention's lambda is a fixed per-head constant: no gate params.
             (dq, dk)
@@ -957,15 +1107,15 @@ fn seq_loss_grads(
         let dkf = dkr.reshape(&[n, hh * rql]);
         let dvf = dv.reshape(&[n, hh * dh]);
         let mut dhn = dqf
-            .matmul(&pv.layer(i, "wq")?.t())
-            .add(&dkf.matmul(&pv.layer(i, "wk")?.t()))
-            .add(&dvf.matmul(&pv.layer(i, "wv")?.t()));
+            .matmul_nt(pv.layer(i, "wq")?)
+            .add(&dkf.matmul_nt(pv.layer(i, "wk")?))
+            .add(&dvf.matmul_nt(pv.layer(i, "wv")?));
         if let Some(e) = dhn_gate {
             dhn.add_assign(&e);
         }
-        grads[gidx(&format!("layer{i}.wq"))].add_assign(&lc.hn.t().matmul(&dqf));
-        grads[gidx(&format!("layer{i}.wk"))].add_assign(&lc.hn.t().matmul(&dkf));
-        grads[gidx(&format!("layer{i}.wv"))].add_assign(&lc.hn.t().matmul(&dvf));
+        grads[gidx(&format!("layer{i}.wq"))].add_assign(&lc.hn.matmul_tn(&dqf));
+        grads[gidx(&format!("layer{i}.wk"))].add_assign(&lc.hn.matmul_tn(&dkf));
+        grads[gidx(&format!("layer{i}.wv"))].add_assign(&lc.hn.matmul_tn(&dvf));
         let (dx_norm, dln1) = rmsnorm_bwd(&lc.x_in, pv.layer(i, "ln1")?, &dhn);
         grads[gidx(&format!("layer{i}.ln1"))].add_assign(&dln1);
         dx = dy.add(&dx_norm);
@@ -1013,22 +1163,37 @@ fn train_step_impl(
     let step = ins[3 * p + 4].host_f32()?.data()[0];
     let (bsz, seq) = (cfg.train_batch, cfg.train_seq);
 
-    let mut grads: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
     let denom = mask.data().iter().sum::<f32>().max(1.0);
+    // Sequence-parallel batch: every sequence's backward runs into its own
+    // gradient buffers (even when serial, so the reduction structure —
+    // and therefore every bit of the result — is independent of the
+    // thread count), then they are summed in fixed batch order.
+    let seq_flops = 8 * seq * cfg.d_model * (cfg.d_model + cfg.ffn_dim) * pattern.len();
+    let per_seq: Vec<Result<(f32, Vec<Tensor>)>> =
+        par::par_map(bsz, bsz * seq_flops, |b| {
+            let mut g: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
+            let l = seq_loss_grads(
+                cfg,
+                variant,
+                pattern,
+                &pv,
+                &mut g,
+                &tokens[b * seq..(b + 1) * seq],
+                &targets[b * seq..(b + 1) * seq],
+                &mask.data()[b * seq..(b + 1) * seq],
+                denom,
+                masked,
+            )?;
+            Ok((l, g))
+        });
+    let mut grads: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
     let mut loss = 0.0f32;
-    for b in 0..bsz {
-        loss += seq_loss_grads(
-            cfg,
-            variant,
-            pattern,
-            &pv,
-            &mut grads,
-            &tokens[b * seq..(b + 1) * seq],
-            &targets[b * seq..(b + 1) * seq],
-            &mask.data()[b * seq..(b + 1) * seq],
-            denom,
-            masked,
-        )?;
+    for r in per_seq {
+        let (l, g) = r?;
+        loss += l;
+        for (acc, gt) in grads.iter_mut().zip(&g) {
+            acc.add_assign(gt);
+        }
     }
 
     // AdamW (paper Sec. 4.1 hyperparameters; no decay on norm gains/biases)
@@ -1198,7 +1363,7 @@ impl Registry {
                 let x = ins[0].host_f32()?;
                 let ln = ins[1].host_f32()?;
                 let emb = ins[2].host_f32()?;
-                Ok(vec![rmsnorm(x, ln).matmul(&emb.t())])
+                Ok(vec![rmsnorm(x, ln).matmul_nt(emb)])
             }),
         );
 
@@ -1361,10 +1526,21 @@ impl Registry {
                 let qt = ins[0].host_f32()?;
                 let do_t = ins[1].host_f32()?;
                 let (hh, dh) = (cfg.n_heads, cfg.head_dim);
+                let c = qt.shape()[0];
                 let mut dm = Tensor::zeros(&[hh, dh, dh]);
                 for h in 0..hh {
-                    let g = head_of(qt, h).t().matmul(&head_of(do_t, h));
-                    dm.data_mut()[h * dh * dh..(h + 1) * dh * dh].copy_from_slice(g.data());
+                    // dM_h = Q_hᵀ · dO_h, strided in place
+                    gemm::tn(
+                        dh,
+                        c,
+                        dh,
+                        &qt.data()[h * dh..],
+                        hh * dh,
+                        &do_t.data()[h * dh..],
+                        hh * dh,
+                        &mut dm.data_mut()[h * dh * dh..(h + 1) * dh * dh],
+                        dh,
+                    );
                 }
                 Ok(vec![dm])
             }),
@@ -1392,30 +1568,35 @@ impl Registry {
                 let mp = ins[4].host_f32()?;
                 let suf = ins[5].host_f32()?;
                 let (cc, hh, dh) = (cfg.chunk_len, cfg.n_heads, cfg.head_dim);
+                let ld = hh * dh;
                 let mut dq = Tensor::zeros(&[cc, hh, dh]);
                 let mut dk = Tensor::zeros(&[cc, hh, dh]);
                 let mut dv = Tensor::zeros(&[cc, hh, dh]);
+                let mut dov = scratch::take(cc * cc);
+                let mut qk = scratch::take(cc * cc);
                 for h in 0..hh {
-                    let qh = head_of(qt, h);
-                    let kh = head_of(kt, h);
-                    let vh = head_of(v, h);
-                    let doh = head_of(do_t, h);
-                    let mph = Tensor::new(
-                        vec![dh, dh],
-                        mp.data()[h * dh * dh..(h + 1) * dh * dh].to_vec(),
-                    );
-                    let sufh = Tensor::new(
-                        vec![dh, dh],
-                        suf.data()[h * dh * dh..(h + 1) * dh * dh].to_vec(),
-                    );
-                    let mut dov = doh.matmul(&vh.t());
-                    tril_inplace(&mut dov);
-                    let mut qk = qh.matmul(&kh.t());
-                    tril_inplace(&mut qk);
-                    set_head(&mut dq, h, &dov.matmul(&kh).add(&doh.matmul(&mph.t())));
-                    set_head(&mut dk, h, &dov.t().matmul(&qh).add(&vh.matmul(&sufh.t())));
-                    set_head(&mut dv, h, &qk.t().matmul(&doh).add(&kh.matmul(&sufh)));
+                    let qs = &qt.data()[h * dh..];
+                    let ks = &kt.data()[h * dh..];
+                    let vs = &v.data()[h * dh..];
+                    let dos = &do_t.data()[h * dh..];
+                    let mph = &mp.data()[h * dh * dh..(h + 1) * dh * dh];
+                    let sufh = &suf.data()[h * dh * dh..(h + 1) * dh * dh];
+                    gemm::nt(cc, dh, cc, dos, ld, vs, ld, &mut dov, cc);
+                    tril_raw(&mut dov, cc);
+                    gemm::nt(cc, dh, cc, qs, ld, ks, ld, &mut qk, cc);
+                    tril_raw(&mut qk, cc);
+                    // dQ_h = dOV·K + dO·M_prefixᵀ
+                    gemm::nn(cc, cc, dh, &dov, cc, ks, ld, &mut dq.data_mut()[h * dh..], ld);
+                    gemm::nt_acc(cc, dh, dh, dos, ld, mph, dh, &mut dq.data_mut()[h * dh..], ld);
+                    // dK_h = dOVᵀ·Q + V·dM_suffixᵀ
+                    gemm::tn(cc, cc, dh, &dov, cc, qs, ld, &mut dk.data_mut()[h * dh..], ld);
+                    gemm::nt_acc(cc, dh, dh, vs, ld, sufh, dh, &mut dk.data_mut()[h * dh..], ld);
+                    // dV_h = QKᵀ·dO + K·dM_suffix
+                    gemm::tn(cc, cc, dh, &qk, cc, dos, ld, &mut dv.data_mut()[h * dh..], ld);
+                    gemm::nn_acc(cc, dh, dh, ks, ld, sufh, dh, &mut dv.data_mut()[h * dh..], ld);
                 }
+                scratch::recycle(dov);
+                scratch::recycle(qk);
                 Ok(vec![dq, dk, dv])
             }),
         );
@@ -1494,11 +1675,34 @@ impl Registry {
                     let v_all = ins[2].host_f32()?;
                     let off = ins[3].host_i32()?[0];
                     let (cc, hh, dh) = (cfg.chunk_len, cfg.n_heads, cfg.head_dim);
+                    let n_all = k_all.shape()[0];
+                    let ld = hh * dh;
                     let mut out = Tensor::zeros(&[cc, hh, dh]);
-                    for h in 0..hh {
-                        let mut s = head_of(qt, h).matmul(&head_of(k_all, h).t());
-                        offset_causal_zero(&mut s, off, 0);
-                        set_head(&mut out, h, &s.matmul(&head_of(v_all, h)));
+                    let one_head = |h: usize, s: &mut [f32], o: &mut [f32], ldo: usize| {
+                        let (qs, ks) = (&qt.data()[h * dh..], &k_all.data()[h * dh..]);
+                        gemm::nt(cc, dh, n_all, qs, ld, ks, ld, s, n_all);
+                        offset_causal_zero_raw(s, cc, n_all, off, 0);
+                        gemm::nn(cc, n_all, dh, s, n_all, &v_all.data()[h * dh..], ld, o, ldo);
+                    };
+                    let flops = 4 * cc * n_all * dh * hh;
+                    if par::would_parallelize(hh, flops) {
+                        let heads: Vec<Vec<f32>> = par::par_map(hh, flops, |h| {
+                            let mut s = scratch::take(cc * n_all);
+                            let mut oh = scratch::take(cc * dh);
+                            one_head(h, &mut s, &mut oh, dh);
+                            scratch::recycle(s);
+                            oh
+                        });
+                        for (h, oh) in heads.into_iter().enumerate() {
+                            scatter_head(&mut out, h, &oh);
+                            scratch::recycle(oh);
+                        }
+                    } else {
+                        let mut s = scratch::take(cc * n_all);
+                        for h in 0..hh {
+                            one_head(h, &mut s, &mut out.data_mut()[h * dh..], ld);
+                        }
+                        scratch::recycle(s);
                     }
                     Ok(vec![out])
                 }),
@@ -1540,14 +1744,19 @@ impl Registry {
                 let acc = ins[3].host_f32()?;
                 let qoff = ins[4].host_i32()?[0];
                 let koff = ins[5].host_i32()?[0];
-                let hh = cfg.n_heads;
+                let (hh, dh) = (cfg.n_heads, cfg.head_dim);
+                let cc = qt.shape()[0];
+                let ld = hh * dh;
                 let mut out = acc.clone();
+                let mut s = scratch::take(cc * cc);
                 for h in 0..hh {
-                    let mut s = head_of(qt, h).matmul(&head_of(kj, h).t());
-                    offset_causal_zero(&mut s, qoff, koff);
-                    let upd = head_of(&out, h).add(&s.matmul(&head_of(vj, h)));
-                    set_head(&mut out, h, &upd);
+                    let (qs, ks) = (&qt.data()[h * dh..], &kj.data()[h * dh..]);
+                    gemm::nt(cc, dh, cc, qs, ld, ks, ld, &mut s, cc);
+                    offset_causal_zero_raw(&mut s, cc, cc, qoff, koff);
+                    let o = &mut out.data_mut()[h * dh..];
+                    gemm::nn_acc(cc, cc, dh, &s, cc, &vj.data()[h * dh..], ld, o, ld);
                 }
+                scratch::recycle(s);
                 Ok(vec![out])
             }),
         );
@@ -1578,36 +1787,37 @@ impl Registry {
                 let qoff = ins[6].host_i32()?[0];
                 let koff = ins[7].host_i32()?[0];
                 let (cc, hh, dh) = (cfg.chunk_len, cfg.n_heads, cfg.head_dim);
+                let ld = hh * dh;
                 let scale = 1.0 / (dh as f32).sqrt();
                 let mut m_out = m_prev.clone();
                 let mut l_out = l_prev.clone();
                 let mut acc_out = acc_prev.clone();
+                let mut s = scratch::take(cc * cc);
+                let mut pv = scratch::take(dh);
+                let vd = v.data();
                 for h in 0..hh {
-                    let qh = head_of(q, h).scale(scale);
-                    let mut s = qh.matmul(&head_of(k, h).t());
-                    {
-                        let sd = s.data_mut();
-                        for i in 0..cc {
-                            for j in 0..cc {
-                                if qoff + i as i32 < koff + j as i32 {
-                                    sd[i * cc + j] = NEG_INF;
-                                }
+                    let (qs, ks) = (&q.data()[h * dh..], &k.data()[h * dh..]);
+                    gemm::nt(cc, dh, cc, qs, ld, ks, ld, &mut s, cc);
+                    for i in 0..cc {
+                        let row = &mut s[i * cc..(i + 1) * cc];
+                        for (j, sv) in row.iter_mut().enumerate() {
+                            if qoff + i as i32 < koff + j as i32 {
+                                *sv = NEG_INF;
+                            } else {
+                                *sv *= scale;
                             }
                         }
-                    }
-                    let vh = head_of(v, h);
-                    for i in 0..cc {
-                        let row = &s.data()[i * cc..(i + 1) * cc];
+                        let row = &s[i * cc..(i + 1) * cc];
                         let mp = m_prev.data()[i * hh + h];
                         let rowmax = row.iter().fold(NEG_INF, |a, &b| a.max(b));
                         let mn = mp.max(rowmax);
                         let alpha = (mp - mn).exp();
                         let mut psum = 0.0f32;
-                        let mut pv = vec![0.0f32; dh];
+                        pv.fill(0.0);
                         for (j, &sv) in row.iter().enumerate() {
                             let p = (sv - mn).exp();
                             psum += p;
-                            let vr = &vh.data()[j * dh..(j + 1) * dh];
+                            let vr = &vd[(j * hh + h) * dh..(j * hh + h + 1) * dh];
                             for (acc_j, &vv) in pv.iter_mut().zip(vr) {
                                 *acc_j += p * vv;
                             }
@@ -1620,6 +1830,8 @@ impl Registry {
                         }
                     }
                 }
+                scratch::recycle(s);
+                scratch::recycle(pv);
                 Ok(vec![m_out, l_out, acc_out])
             }),
         );
@@ -1723,21 +1935,32 @@ impl Registry {
                     len >= 0 && len as usize + cc <= ms,
                     "s_prefill: kv len {len} + chunk {cc} exceeds max_seq {ms}"
                 );
+                let qoff = len;
                 let len = len as usize;
                 let hn = rmsnorm(x, ln1);
                 let q = hn.matmul(ins[2].host_f32()?).reshape(&[cc, hh, dh]);
                 let k = hn.matmul(ins[3].host_f32()?).reshape(&[cc, hh, dh]);
                 let v = hn.matmul(ins[4].host_f32()?).reshape(&[cc, hh, dh]);
+                // attend directly over the live cache rows + the new chunk
+                // (no gathered K/V copy): scores [cc, len + cc] per head,
+                // cache columns then new columns
                 let stride = hh * dh;
-                let mut kall = Vec::with_capacity((len + cc) * stride);
-                kall.extend_from_slice(&kc.data()[..len * stride]);
-                kall.extend_from_slice(k.data());
-                let mut vall = Vec::with_capacity((len + cc) * stride);
-                vall.extend_from_slice(&vc.data()[..len * stride]);
-                vall.extend_from_slice(v.data());
-                let k_all = Tensor::new(vec![len + cc, hh, dh], kall);
-                let v_all = Tensor::new(vec![len + cc, hh, dh], vall);
-                let attn = softmax_attn_heads(&q, &k_all, &v_all, len as i32);
+                let scale = 1.0 / (dh as f32).sqrt();
+                let w = len + cc;
+                let mut attn = Tensor::zeros(&[cc, hh, dh]);
+                let mut s = scratch::take(cc * w);
+                for h in 0..hh {
+                    let qs = &q.data()[h * dh..];
+                    gemm::nt(cc, dh, len, qs, stride, &kc.data()[h * dh..], stride, &mut s, w);
+                    let new_cols = &mut s[len..];
+                    gemm::nt(cc, dh, cc, qs, stride, &k.data()[h * dh..], stride, new_cols, w);
+                    softmax_causal_scaled_raw(&mut s, cc, w, scale, qoff, 0);
+                    let out = &mut attn.data_mut()[h * dh..];
+                    gemm::nn(cc, len, dh, &s, w, &vc.data()[h * dh..], stride, out, stride);
+                    let vs = &v.data()[h * dh..];
+                    gemm::nn_acc(cc, cc, dh, &s[len..], w, vs, stride, out, stride);
+                }
+                scratch::recycle(s);
                 let y = epilogue(
                     x,
                     &attn,
@@ -1795,7 +2018,7 @@ impl Registry {
                     let x = ins[0].host_f32()?;
                     let ln = ins[1].host_f32()?;
                     let emb = ins[2].host_f32()?;
-                    Ok(vec![rmsnorm(x, ln).matmul(&emb.t())])
+                    Ok(vec![rmsnorm(x, ln).matmul_nt(emb)])
                 }),
             );
             reg.add(
@@ -1822,45 +2045,78 @@ impl Registry {
                 Arc::new(move |cfg: &ModelConfig, ins: &[Value]| {
                     let x = ins[0].host_f32()?;
                     let ln1 = ins[1].host_f32()?;
+                    let wq = ins[2].host_f32()?;
+                    let wk = ins[3].host_f32()?;
+                    let wv = ins[4].host_f32()?;
                     let kc = ins[5].host_f32()?;
                     let vc = ins[6].host_f32()?;
                     let lens = ins[7].host_i32()?;
+                    let epi: Vec<&Tensor> = ins[8..13]
+                        .iter()
+                        .map(|e| e.host_f32())
+                        .collect::<Result<_>>()?;
                     let (hh, dh, ms) = (cfg.n_heads, cfg.head_dim, cfg.max_seq);
                     let stride = hh * dh;
-                    let mut ys = Vec::with_capacity(b);
-                    let mut kn = Vec::with_capacity(b);
-                    let mut vn = Vec::with_capacity(b);
+                    let scale = 1.0 / (dh as f32).sqrt();
+                    let d = cfg.d_model;
+                    let mut flops = 0usize;
                     for bi in 0..b {
-                        let xb = row0(x, bi);
-                        let hn = rmsnorm(&xb, ln1);
-                        let q = hn.matmul(ins[2].host_f32()?).reshape(&[1, hh, dh]);
-                        let k = hn.matmul(ins[3].host_f32()?).reshape(&[1, hh, dh]);
-                        let v = hn.matmul(ins[4].host_f32()?).reshape(&[1, hh, dh]);
                         let len = lens[bi];
                         anyhow::ensure!(
                             len >= 0 && (len as usize) < ms,
                             "s_decode: kv len {len} out of range (max_seq {ms})"
                         );
-                        let len = len as usize;
-                        let base = bi * ms * stride;
-                        let mut kall = Vec::with_capacity((len + 1) * stride);
-                        kall.extend_from_slice(&kc.data()[base..base + len * stride]);
-                        kall.extend_from_slice(k.data());
-                        let mut vall = Vec::with_capacity((len + 1) * stride);
-                        vall.extend_from_slice(&vc.data()[base..base + len * stride]);
-                        vall.extend_from_slice(v.data());
-                        let k_all = Tensor::new(vec![len + 1, hh, dh], kall);
-                        let v_all = Tensor::new(vec![len + 1, hh, dh], vall);
-                        let attn = softmax_attn_heads(&q, &k_all, &v_all, len as i32);
-                        ys.push(epilogue(
-                            &xb,
-                            &attn,
-                            ins[8].host_f32()?,
-                            ins[9].host_f32()?,
-                            ins[10].host_f32()?,
-                            ins[11].host_f32()?,
-                            ins[12].host_f32()?,
-                        ));
+                        flops += 8 * d * stride + 6 * d * cfg.ffn_dim + 4 * len as usize * stride;
+                    }
+                    // session-parallel: each batch row attends over its own
+                    // LIVE cache rows (no per-step gathered K/V copy)
+                    let rows: Vec<Result<(Tensor, Tensor, Tensor)>> =
+                        par::par_map(b, flops, |bi| {
+                            let xb = row0(x, bi);
+                            let hn = rmsnorm(&xb, ln1);
+                            let q = hn.matmul(wq).reshape(&[1, hh, dh]);
+                            let k = hn.matmul(wk).reshape(&[1, hh, dh]);
+                            let v = hn.matmul(wv).reshape(&[1, hh, dh]);
+                            let len = lens[bi] as usize;
+                            let base = bi * ms * stride;
+                            let mut attn = Tensor::zeros(&[1, hh, dh]);
+                            let mut s = scratch::take(len + 1);
+                            for h in 0..hh {
+                                let qh = &q.data()[h * dh..(h + 1) * dh];
+                                gemm::nt(
+                                    1,
+                                    dh,
+                                    len,
+                                    qh,
+                                    dh,
+                                    &kc.data()[base + h * dh..],
+                                    stride,
+                                    &mut s,
+                                    len + 1,
+                                );
+                                let kh = &k.data()[h * dh..(h + 1) * dh];
+                                s[len] = qh.iter().zip(kh).map(|(a, b2)| a * b2).sum();
+                                // q sits at position len: every entry visible
+                                softmax_causal_scaled_raw(&mut s, 1, len + 1, scale, len as i32, 0);
+                                let out = &mut attn.data_mut()[h * dh..(h + 1) * dh];
+                                let vrows = &vc.data()[base + h * dh..];
+                                gemm::nn(1, len, dh, &s, len + 1, vrows, stride, out, dh);
+                                let pl = s[len];
+                                let vh = &v.data()[h * dh..(h + 1) * dh];
+                                for (o, &vv) in out.iter_mut().zip(vh) {
+                                    *o += pl * vv;
+                                }
+                            }
+                            scratch::recycle(s);
+                            let y = epilogue(&xb, &attn, epi[0], epi[1], epi[2], epi[3], epi[4]);
+                            Ok((y, k, v))
+                        });
+                    let mut ys = Vec::with_capacity(b);
+                    let mut kn = Vec::with_capacity(b);
+                    let mut vn = Vec::with_capacity(b);
+                    for r in rows {
+                        let (y, k, v) = r?;
+                        ys.push(y);
                         kn.push(k);
                         vn.push(v);
                     }
@@ -1916,14 +2172,18 @@ impl Registry {
                             .map(|e| e.host_f32())
                             .collect::<Result<_>>()?;
                         let m_in = ins[5 + ex_n].host_f32()?;
-                        let epi = &ins[6 + ex_n..11 + ex_n];
-                        let (hh, dh) = (cfg.n_heads, cfg.head_dim);
+                        let epi: Vec<&Tensor> = ins[6 + ex_n..11 + ex_n]
+                            .iter()
+                            .map(|e| e.host_f32())
+                            .collect::<Result<_>>()?;
+                        let (hh, dh, d) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
                         let fk = cfg.feat_dim(variant);
                         let mstride = hh * fk * dh;
-                        let mut ys = Vec::with_capacity(b);
-                        let mut ms_out = Vec::with_capacity(b);
-                        let mut as_out = Vec::with_capacity(b);
-                        for bi in 0..b {
+                        // session-parallel: every batch row's recurrent-state
+                        // step is independent
+                        let proj = 3 * hh * fk + hh * dh + 3 * cfg.ffn_dim;
+                        let flops = b * (2 * d * proj + 4 * hh * fk * dh);
+                        let rows: Vec<(Tensor, Tensor, Tensor)> = par::par_map(b, flops, |bi| {
                             let xb = row0(x, bi);
                             // c=1 chunk through the validated part1 path:
                             // qt = q*g, kt = k/g, p.m = k^T v, p.a = g
@@ -1934,15 +2194,7 @@ impl Registry {
                             );
                             let attn = intra_heads(&p.qt, &p.kt, &p.v)
                                 .add(&inter_heads(&p.qt, &m_prev));
-                            ys.push(epilogue(
-                                &xb,
-                                &attn,
-                                epi[0].host_f32()?,
-                                epi[1].host_f32()?,
-                                epi[2].host_f32()?,
-                                epi[3].host_f32()?,
-                                epi[4].host_f32()?,
-                            ));
+                            let y = epilogue(&xb, &attn, epi[0], epi[1], epi[2], epi[3], epi[4]);
                             // M_new = diag(g) M_prev + k^T v (Eq. 4, one step)
                             let st = state_combine(
                                 &ChunkState {
@@ -1951,8 +2203,19 @@ impl Registry {
                                 },
                                 &ChunkState { m: p.m, a: p.a.clone() },
                             );
-                            ms_out.push(st.m.reshape(&[1, hh, fk, dh]));
-                            as_out.push(p.a.reshape(&[1, hh, fk]));
+                            (
+                                y,
+                                st.m.reshape(&[1, hh, fk, dh]),
+                                p.a.reshape(&[1, hh, fk]),
+                            )
+                        });
+                        let mut ys = Vec::with_capacity(b);
+                        let mut ms_out = Vec::with_capacity(b);
+                        let mut as_out = Vec::with_capacity(b);
+                        for (y, m2, a2) in rows {
+                            ys.push(y);
+                            ms_out.push(m2);
+                            as_out.push(a2);
                         }
                         Ok(vec![
                             Tensor::cat0(&ys),
@@ -2047,6 +2310,19 @@ mod tests {
 
     fn tiny() -> ModelConfig {
         ModelConfig::preset("tiny").unwrap()
+    }
+
+    /// Extract head `h` of a `[C, H, F]` tensor as `[C, F]` (test-side
+    /// reference; the kernels themselves address heads in place).
+    fn head_of(t: &Tensor, h: usize) -> Tensor {
+        let s = t.shape();
+        let (c, heads, f) = (s[0], s[1], s[2]);
+        let mut out = Vec::with_capacity(c * f);
+        for i in 0..c {
+            let base = (i * heads + h) * f;
+            out.extend_from_slice(&t.data()[base..base + f]);
+        }
+        Tensor::new(vec![c, f], out)
     }
 
     /// Token-by-token gated recurrence oracle (ref.py::recurrent_linear_attn):

@@ -26,7 +26,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{ModelConfig, Pattern, Variant};
 use crate::coordinator::Params;
 use crate::runtime::{Engine, Value};
-use crate::tensor::{state_combine, ChunkState, Tensor};
+use crate::tensor::{scratch, state_combine, ChunkState, Tensor};
 
 /// Greedy sampling: index of the max logit (ties -> lowest index).
 pub fn argmax(row: &[f32]) -> i32 {
@@ -497,15 +497,6 @@ fn decode_many(sessions: &mut [Session<'_>], tokens: &[i32]) -> Result<Vec<Tenso
                 "l_decode_{}_B{b}",
                 model.params.variant.name()
             ))?;
-            let mut m_rows = Vec::with_capacity(b);
-            for s in sessions.iter() {
-                match &s.states[li] {
-                    LayerState::Linear(cs) => {
-                        m_rows.push(cs.m.clone().reshape(&[1, hh, fk, dh]));
-                    }
-                    LayerState::Std { .. } => bail!("layer {li}: state kind mismatch"),
-                }
-            }
             let mut ins = vec![
                 x.into(),
                 model.params.layer_value(engine, li, "ln1")?,
@@ -514,9 +505,49 @@ fn decode_many(sessions: &mut [Session<'_>], tokens: &[i32]) -> Result<Vec<Tenso
                 model.params.layer_value(engine, li, "wv")?,
             ];
             ins.extend(model.params.part1_extra(engine, li)?);
-            ins.push(Tensor::cat0(&m_rows).into());
-            ins.extend(model.params.epilogue(engine, li)?);
-            let mut outs = exe.run(&ins)?; // y, m_new, a
+            // fetch the epilogue weights BEFORE moving any session state:
+            // every fallible step must happen while the session is intact
+            let epi_vals = model.params.epilogue(engine, li)?;
+            let m_idx = ins.len();
+            let mstride = hh * fk * dh;
+            // stage the recurrent states: B=1 MOVES the session's state
+            // tensor into the Value (zero copy); B>1 packs all rows into
+            // one pooled scratch buffer (single copy, no allocation in
+            // steady state)
+            let m_val = if b == 1 {
+                match &mut sessions[0].states[li] {
+                    LayerState::Linear(cs) => std::mem::replace(&mut cs.m, Tensor::zeros(&[0]))
+                        .reshape(&[1, hh, fk, dh]),
+                    LayerState::Std { .. } => bail!("layer {li}: state kind mismatch"),
+                }
+            } else {
+                let mut buf = scratch::take(b * mstride);
+                for (bi, s) in sessions.iter().enumerate() {
+                    match &s.states[li] {
+                        LayerState::Linear(cs) => buf[bi * mstride..(bi + 1) * mstride]
+                            .copy_from_slice(cs.m.data()),
+                        LayerState::Std { .. } => bail!("layer {li}: state kind mismatch"),
+                    }
+                }
+                Tensor::new(vec![b, hh, fk, dh], buf)
+            };
+            ins.push(m_val.into());
+            ins.extend(epi_vals);
+            let run_res = exe.run(&ins); // y, m_new, a
+            let m_back = std::mem::replace(&mut ins[m_idx], Value::i32_scalar(0));
+            if b == 1 {
+                if run_res.is_err() {
+                    // put the moved state back so the session stays usable
+                    if let Value::F32(mt) = m_back {
+                        if let LayerState::Linear(cs) = &mut sessions[0].states[li] {
+                            cs.m = mt.reshape(&[hh, fk, dh]);
+                        }
+                    }
+                }
+            } else if let Value::F32(mt) = m_back {
+                scratch::recycle(mt.into_data());
+            }
+            let mut outs = run_res?;
             let a_new = outs.pop().unwrap();
             let m_new = outs.pop().unwrap();
             x = outs.pop().unwrap();
@@ -532,39 +563,83 @@ fn decode_many(sessions: &mut [Session<'_>], tokens: &[i32]) -> Result<Vec<Tenso
             }
         } else {
             let exe = engine.artifact(&format!("s_decode_B{b}"))?;
-            // stack the caches with ONE copy each (no per-session clone +
-            // cat0 double copy); the per-step copy is still O(max_seq) —
-            // the fixed-shape artifact ABI requires the full buffer, and a
-            // production backend would page the cache in place instead
-            let mut kd = Vec::with_capacity(b * ms * hh * dh);
-            let mut vd = Vec::with_capacity(b * ms * hh * dh);
-            let mut lens = Vec::with_capacity(b);
-            for s in sessions.iter() {
-                match &s.states[li] {
-                    LayerState::Std { k, v, len } => {
-                        kd.extend_from_slice(k.data());
-                        vd.extend_from_slice(v.data());
-                        lens.push(*len as i32);
-                    }
+            let stride = hh * dh;
+            // fetch every fallible weight Value BEFORE moving the caches
+            let ln1_v = model.params.layer_value(engine, li, "ln1")?;
+            let wq_v = model.params.layer_value(engine, li, "wq")?;
+            let wk_v = model.params.layer_value(engine, li, "wk")?;
+            let wv_v = model.params.layer_value(engine, li, "wv")?;
+            let epi_vals = model.params.epilogue(engine, li)?;
+            // stage the KV caches: B=1 MOVES both cache tensors into the
+            // Values (zero copy — the kernel attends over the live rows
+            // in place); B>1 packs into pooled scratch buffers
+            let (k_val, v_val, lens) = if b == 1 {
+                match &mut sessions[0].states[li] {
+                    LayerState::Std { k, v, len } => (
+                        std::mem::replace(k, Tensor::zeros(&[0])).reshape(&[1, ms, hh, dh]),
+                        std::mem::replace(v, Tensor::zeros(&[0])).reshape(&[1, ms, hh, dh]),
+                        vec![*len as i32],
+                    ),
                     LayerState::Linear(_) => bail!("layer {li}: state kind mismatch"),
                 }
-            }
+            } else {
+                let mut kd = scratch::take(b * ms * stride);
+                let mut vd = scratch::take(b * ms * stride);
+                let mut lens = Vec::with_capacity(b);
+                for (bi, s) in sessions.iter().enumerate() {
+                    match &s.states[li] {
+                        LayerState::Std { k, v, len } => {
+                            kd[bi * ms * stride..(bi + 1) * ms * stride]
+                                .copy_from_slice(k.data());
+                            vd[bi * ms * stride..(bi + 1) * ms * stride]
+                                .copy_from_slice(v.data());
+                            lens.push(*len as i32);
+                        }
+                        LayerState::Linear(_) => bail!("layer {li}: state kind mismatch"),
+                    }
+                }
+                (
+                    Tensor::new(vec![b, ms, hh, dh], kd),
+                    Tensor::new(vec![b, ms, hh, dh], vd),
+                    lens,
+                )
+            };
             let mut ins = vec![
                 x.into(),
-                model.params.layer_value(engine, li, "ln1")?,
-                model.params.layer_value(engine, li, "wq")?,
-                model.params.layer_value(engine, li, "wk")?,
-                model.params.layer_value(engine, li, "wv")?,
-                Tensor::new(vec![b, ms, hh, dh], kd).into(),
-                Tensor::new(vec![b, ms, hh, dh], vd).into(),
+                ln1_v,
+                wq_v,
+                wk_v,
+                wv_v,
+                k_val.into(),
+                v_val.into(),
                 Value::I32(lens, vec![b]),
             ];
-            ins.extend(model.params.epilogue(engine, li)?);
-            let mut outs = exe.run(&ins)?; // y, k_new, v_new
+            ins.extend(epi_vals);
+            let run_res = exe.run(&ins); // y, k_new, v_new
+            // recover the staged caches whether or not the run succeeded:
+            // B=1 returns them to the session (zero-copy round trip),
+            // B>1 recycles the scratch packing
+            let kc_back = std::mem::replace(&mut ins[5], Value::i32_scalar(0));
+            let vc_back = std::mem::replace(&mut ins[6], Value::i32_scalar(0));
+            if b == 1 {
+                if let (Value::F32(kt), Value::F32(vt)) = (kc_back, vc_back) {
+                    if let LayerState::Std { k, v, .. } = &mut sessions[0].states[li] {
+                        *k = kt.reshape(&[ms, hh, dh]);
+                        *v = vt.reshape(&[ms, hh, dh]);
+                    }
+                }
+            } else {
+                if let Value::F32(kt) = kc_back {
+                    scratch::recycle(kt.into_data());
+                }
+                if let Value::F32(vt) = vc_back {
+                    scratch::recycle(vt.into_data());
+                }
+            }
+            let mut outs = run_res?;
             let v_new = outs.pop().unwrap();
             let k_new = outs.pop().unwrap();
             x = outs.pop().unwrap();
-            let stride = hh * dh;
             for ((s, kr), vr) in sessions
                 .iter_mut()
                 .zip(k_new.chunk0(b))

@@ -1,0 +1,606 @@
+//! Cache-blocked, autovectorization-friendly f32 GEMM kernels on strided
+//! row-major buffers — the compute core every hot path routes through.
+//!
+//! Three layouts, each with an overwriting and an accumulating entry:
+//!
+//! * `nn` / `nn_acc` — `out[m,n] (+)= A[m,k] · B[k,n]`
+//! * `nt` / `nt_acc` — `out[m,n] (+)= A[m,k] · B[n,k]ᵀ` (fused transpose:
+//!   callers stop materializing `t()` copies)
+//! * `tn` / `tn_acc` — `out[m,n] (+)= A[k,m]ᵀ · B[k,n]`
+//!
+//! Every operand takes an explicit row stride (`lda`/`ldb`/`ldo`), so a
+//! per-head `[C, F]` view of a `[C, H, F]` tensor is addressed in place —
+//! no `head_of`/`set_head` copies.
+//!
+//! Kernel structure (measured on the shapes this repo actually runs —
+//! see DESIGN.md §Compute core):
+//! * `nn`/`tn`: MR=4 row panels — one pass over each B row updates four
+//!   output rows, with a contiguous branch-free inner j-loop that the
+//!   compiler vectorizes.  Per-element accumulation stays in ascending-p
+//!   order, so results match the naive triple loop bit for bit on dense
+//!   data (the old `a == 0.0` skip only ever elided exact `+0.0`
+//!   contributions, which is why removing it is also value-preserving).
+//! * `nt`, m == 1 (decode readout): four B rows per pass with 4-lane
+//!   unrolled dot accumulators (a transpose would cost more than the
+//!   whole product).
+//! * `nt`, m > 1: B is transposed once into a pooled scratch panel
+//!   (`tensor::scratch`, no allocation in steady state), then the tiled
+//!   `nn` kernel runs — the transpose amortizes over m rows.
+//!
+//! Large products are split into contiguous row bands across threads
+//! (`par::for_each_row_band`); banding never changes accumulation order,
+//! so outputs are bit-identical at any `LASP2_THREADS` setting.
+
+use super::{par, scratch};
+
+/// Elements spanned by `rows` rows at stride `ld` whose last row holds
+/// `last` elements.
+#[inline]
+fn span(rows: usize, ld: usize, last: usize) -> usize {
+    if rows == 0 {
+        0
+    } else {
+        (rows - 1) * ld + last
+    }
+}
+
+/// out = A·B.  A: m×k rows at `lda`; B: k×n rows at `ldb`; out: m×n rows
+/// at `ldo` (overwritten).
+pub fn nn(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    nn_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo);
+}
+
+/// out += A·B (same layout as `nn`).
+pub fn nn_acc(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    nn_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo);
+}
+
+/// out = A·Bᵀ.  A: m×k rows at `lda`; B: n×k rows at `ldb`; out: m×n
+/// rows at `ldo` (overwritten).
+pub fn nt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    nt_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo);
+}
+
+/// out += A·Bᵀ (same layout as `nt`).
+pub fn nt_acc(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    nt_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo);
+}
+
+/// out = Aᵀ·B.  A: k×m rows at `lda` (the UNtransposed layout); B: k×n
+/// rows at `ldb`; out: m×n rows at `ldo` (overwritten).
+pub fn tn(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    tn_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo);
+}
+
+/// out += Aᵀ·B (same layout as `tn`).
+pub fn tn_acc(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    tn_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo);
+}
+
+fn nn_dispatch<const ACC: bool>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(lda >= k && ldb >= n && ldo >= n, "gemm nn: bad strides");
+    assert!(a.len() >= span(m, lda, k), "gemm nn: a too short");
+    assert!(b.len() >= span(k, ldb, n), "gemm nn: b too short");
+    let out = &mut out[..span(m, ldo, n)];
+    par::for_each_row_band(out, m, ldo, 2 * m * k * n, |row0, nrows, band| {
+        nn_serial::<ACC>(nrows, k, n, &a[row0 * lda..], lda, b, ldb, band, ldo);
+    });
+}
+
+fn nn_serial<const ACC: bool>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    if !ACC {
+        for i in 0..m {
+            out[i * ldo..i * ldo + n].fill(0.0);
+        }
+    }
+    let mut i = 0;
+    while i + 4 <= m {
+        let (r0, rest) = out[i * ldo..].split_at_mut(ldo);
+        let (r1, rest) = rest.split_at_mut(ldo);
+        let (r2, rest) = rest.split_at_mut(ldo);
+        let (r0, r1, r2, r3) = (&mut r0[..n], &mut r1[..n], &mut r2[..n], &mut rest[..n]);
+        for p in 0..k {
+            let a0 = a[i * lda + p];
+            let a1 = a[(i + 1) * lda + p];
+            let a2 = a[(i + 2) * lda + p];
+            let a3 = a[(i + 3) * lda + p];
+            let br = &b[p * ldb..p * ldb + n];
+            for j in 0..n {
+                let bv = br[j];
+                r0[j] += a0 * bv;
+                r1[j] += a1 * bv;
+                r2[j] += a2 * bv;
+                r3[j] += a3 * bv;
+            }
+        }
+        i += 4;
+    }
+    while i < m {
+        let r = &mut out[i * ldo..i * ldo + n];
+        for p in 0..k {
+            let av = a[i * lda + p];
+            let br = &b[p * ldb..p * ldb + n];
+            for j in 0..n {
+                r[j] += av * br[j];
+            }
+        }
+        i += 1;
+    }
+}
+
+fn nt_dispatch<const ACC: bool>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(lda >= k && ldb >= k && ldo >= n, "gemm nt: bad strides");
+    assert!(a.len() >= span(m, lda, k), "gemm nt: a too short");
+    assert!(b.len() >= span(n, ldb, k), "gemm nt: b too short");
+    if m == 1 {
+        nt_row::<ACC>(k, n, &a[..k], b, ldb, &mut out[..n]);
+        return;
+    }
+    // panel-transpose B once into pooled scratch, then run the tiled nn
+    // kernel (amortizes over the m output rows; zero steady-state allocs)
+    let mut bt = scratch::take(k * n);
+    for j in 0..n {
+        let br = &b[j * ldb..j * ldb + k];
+        for (p, &v) in br.iter().enumerate() {
+            bt[p * n + j] = v;
+        }
+    }
+    let out = &mut out[..span(m, ldo, n)];
+    par::for_each_row_band(out, m, ldo, 2 * m * k * n, |row0, nrows, band| {
+        nn_serial::<ACC>(nrows, k, n, &a[row0 * lda..], lda, &bt, n, band, ldo);
+    });
+    scratch::recycle(bt);
+}
+
+/// Single-row A·Bᵀ: four B rows per pass, 4-lane unrolled dot
+/// accumulators (the m=1 decode-readout shape, e.g. logits = x · embᵀ).
+fn nt_row<const ACC: bool>(k: usize, n: usize, ar: &[f32], b: &[f32], ldb: usize, out: &mut [f32]) {
+    let c4 = k / 4;
+    let mut j = 0;
+    while j + 4 <= n {
+        let b0 = &b[j * ldb..j * ldb + k];
+        let b1 = &b[(j + 1) * ldb..(j + 1) * ldb + k];
+        let b2 = &b[(j + 2) * ldb..(j + 2) * ldb + k];
+        let b3 = &b[(j + 3) * ldb..(j + 3) * ldb + k];
+        let mut acc0 = [0.0f32; 4];
+        let mut acc1 = [0.0f32; 4];
+        let mut acc2 = [0.0f32; 4];
+        let mut acc3 = [0.0f32; 4];
+        for p in 0..c4 {
+            for l in 0..4 {
+                let av = ar[p * 4 + l];
+                acc0[l] += av * b0[p * 4 + l];
+                acc1[l] += av * b1[p * 4 + l];
+                acc2[l] += av * b2[p * 4 + l];
+                acc3[l] += av * b3[p * 4 + l];
+            }
+        }
+        let mut s0 = (acc0[0] + acc0[2]) + (acc0[1] + acc0[3]);
+        let mut s1 = (acc1[0] + acc1[2]) + (acc1[1] + acc1[3]);
+        let mut s2 = (acc2[0] + acc2[2]) + (acc2[1] + acc2[3]);
+        let mut s3 = (acc3[0] + acc3[2]) + (acc3[1] + acc3[3]);
+        for p in c4 * 4..k {
+            let av = ar[p];
+            s0 += av * b0[p];
+            s1 += av * b1[p];
+            s2 += av * b2[p];
+            s3 += av * b3[p];
+        }
+        if ACC {
+            out[j] += s0;
+            out[j + 1] += s1;
+            out[j + 2] += s2;
+            out[j + 3] += s3;
+        } else {
+            out[j] = s0;
+            out[j + 1] = s1;
+            out[j + 2] = s2;
+            out[j + 3] = s3;
+        }
+        j += 4;
+    }
+    while j < n {
+        let br = &b[j * ldb..j * ldb + k];
+        let mut s = 0.0f32;
+        for (av, bv) in ar.iter().zip(br) {
+            s += av * bv;
+        }
+        if ACC {
+            out[j] += s;
+        } else {
+            out[j] = s;
+        }
+        j += 1;
+    }
+}
+
+fn tn_dispatch<const ACC: bool>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(lda >= m && ldb >= n && ldo >= n, "gemm tn: bad strides");
+    assert!(a.len() >= span(k, lda, m), "gemm tn: a too short");
+    assert!(b.len() >= span(k, ldb, n), "gemm tn: b too short");
+    let out = &mut out[..span(m, ldo, n)];
+    par::for_each_row_band(out, m, ldo, 2 * m * k * n, |row0, nrows, band| {
+        tn_serial::<ACC>(nrows, k, n, &a[row0..], lda, b, ldb, band, ldo);
+    });
+}
+
+fn tn_serial<const ACC: bool>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    if !ACC {
+        for i in 0..m {
+            out[i * ldo..i * ldo + n].fill(0.0);
+        }
+    }
+    let mut i = 0;
+    while i + 4 <= m {
+        let (r0, rest) = out[i * ldo..].split_at_mut(ldo);
+        let (r1, rest) = rest.split_at_mut(ldo);
+        let (r2, rest) = rest.split_at_mut(ldo);
+        let (r0, r1, r2, r3) = (&mut r0[..n], &mut r1[..n], &mut r2[..n], &mut rest[..n]);
+        for p in 0..k {
+            let ap = &a[p * lda + i..p * lda + i + 4];
+            let (a0, a1, a2, a3) = (ap[0], ap[1], ap[2], ap[3]);
+            let br = &b[p * ldb..p * ldb + n];
+            for j in 0..n {
+                let bv = br[j];
+                r0[j] += a0 * bv;
+                r1[j] += a1 * bv;
+                r2[j] += a2 * bv;
+                r3[j] += a3 * bv;
+            }
+        }
+        i += 4;
+    }
+    while i < m {
+        let r = &mut out[i * ldo..i * ldo + n];
+        for p in 0..k {
+            let av = a[p * lda + i];
+            let br = &b[p * ldb..p * ldb + n];
+            for j in 0..n {
+                r[j] += av * br[j];
+            }
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::par;
+    use super::*;
+
+    fn naive_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for p in 0..k {
+                    s += a[i * k + p] * b[p * n + j];
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    fn rng(seed: u64, len: usize) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "[{i}] {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn nn_matches_naive_over_shapes() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (4, 8, 4), (9, 2, 13), (17, 33, 6)] {
+            let a = rng(1 + m as u64, m * k);
+            let b = rng(2 + n as u64, k * n);
+            let mut out = vec![0.0f32; m * n];
+            nn(m, k, n, &a, k, &b, n, &mut out, n);
+            close(&out, &naive_nn(m, k, n, &a, &b), 1e-5);
+        }
+    }
+
+    #[test]
+    fn nt_matches_naive_including_m1_and_wide_k() {
+        for &(m, k, n) in &[(1, 64, 37), (1, 7, 3), (5, 6, 9), (12, 130, 4), (4, 2048, 3)] {
+            let a = rng(3, m * k);
+            let bt = rng(4, n * k); // B stored [n, k]
+            // reference: transpose then naive nn
+            let mut b = vec![0.0f32; k * n];
+            for j in 0..n {
+                for p in 0..k {
+                    b[p * n + j] = bt[j * k + p];
+                }
+            }
+            let mut out = vec![0.0f32; m * n];
+            nt(m, k, n, &a, k, &bt, k, &mut out, n);
+            close(&out, &naive_nn(m, k, n, &a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn tn_matches_naive() {
+        for &(m, k, n) in &[(1, 3, 2), (6, 11, 5), (8, 400, 3), (5, 2, 31)] {
+            let at = rng(5, k * m); // A stored [k, m]
+            let mut a = vec![0.0f32; m * k];
+            for p in 0..k {
+                for i in 0..m {
+                    a[i * k + p] = at[p * m + i];
+                }
+            }
+            let b = rng(6, k * n);
+            let mut out = vec![0.0f32; m * n];
+            tn(m, k, n, &at, m, &b, n, &mut out, n);
+            close(&out, &naive_nn(m, k, n, &a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn strided_views_match_packed() {
+        // head-view addressing: A/B/out are [C, H, F] slices of head h
+        let (c, hh, f) = (6, 3, 4);
+        let a = rng(7, c * hh * f);
+        let b = rng(8, c * hh * f);
+        for h in 0..hh {
+            // packed copies of head h
+            let mut ah = vec![0.0f32; c * f];
+            let mut bh = vec![0.0f32; c * f];
+            for i in 0..c {
+                for x in 0..f {
+                    ah[i * f + x] = a[(i * hh + h) * f + x];
+                    bh[i * f + x] = b[(i * hh + h) * f + x];
+                }
+            }
+            // scores = Ah · Bhᵀ via strided nt directly on the [C,H,F] data
+            let mut got = vec![0.0f32; c * c];
+            nt(c, f, c, &a[h * f..], hh * f, &b[h * f..], hh * f, &mut got, c);
+            let mut bt = vec![0.0f32; f * c];
+            for j in 0..c {
+                for p in 0..f {
+                    bt[p * c + j] = bh[j * f + p];
+                }
+            }
+            close(&got, &naive_nn(c, f, c, &ah, &bt), 1e-5);
+            // strided OUTPUT: write head h of a [C, H, F] buffer via nn
+            let m_h = rng(9 + h as u64, f * f);
+            let mut out_full = vec![0.0f32; c * hh * f];
+            nn(c, f, f, &a[h * f..], hh * f, &m_h, f, &mut out_full[h * f..], hh * f);
+            let want = naive_nn(c, f, f, &ah, &m_h);
+            for i in 0..c {
+                for x in 0..f {
+                    let got = out_full[(i * hh + h) * f + x];
+                    let w = want[i * f + x];
+                    assert!((got - w).abs() <= 1e-5 * (1.0 + w.abs()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn acc_variants_add_on_top() {
+        let (m, k, n) = (5, 6, 7);
+        let a = rng(10, m * k);
+        let b = rng(11, k * n);
+        let base = rng(12, m * n);
+        let mut out = base.clone();
+        nn_acc(m, k, n, &a, k, &b, n, &mut out, n);
+        let prod = naive_nn(m, k, n, &a, &b);
+        for i in 0..m * n {
+            assert!((out[i] - (base[i] + prod[i])).abs() < 1e-5);
+        }
+        // nt_acc with B in [n,k]
+        let mut bt = vec![0.0f32; n * k];
+        for j in 0..n {
+            for p in 0..k {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let mut out2 = base.clone();
+        nt_acc(m, k, n, &a, k, &bt, k, &mut out2, n);
+        for i in 0..m * n {
+            assert!((out2[i] - (base[i] + prod[i])).abs() < 1e-4);
+        }
+        // tn_acc with A in [k,m]
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut out3 = base.clone();
+        tn_acc(m, k, n, &at, m, &b, n, &mut out3, n);
+        for i in 0..m * n {
+            assert!((out3[i] - (base[i] + prod[i])).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dense_results_identical_with_and_without_zero_rows() {
+        // the old kernel's `if a == 0.0 { continue }` pessimization is
+        // gone; zero rows/entries must still give BIT-identical results
+        // to a reference that does skip them (skipping only ever elides
+        // exact +0.0 contributions)
+        let (m, k, n) = (8, 16, 12);
+        let mut a = rng(20, m * k);
+        // zero out two full rows and a scattering of entries
+        for p in 0..k {
+            a[2 * k + p] = 0.0;
+            a[5 * k + p] = 0.0;
+        }
+        a[0] = 0.0;
+        a[7 * k + 3] = 0.0;
+        let b = rng(21, k * n);
+        let mut skip_ref = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    skip_ref[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        let mut out = vec![0.0f32; m * n];
+        nn(m, k, n, &a, k, &b, n, &mut out, n);
+        assert_eq!(
+            out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            skip_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "zero-skip removal changed results"
+        );
+    }
+
+    #[test]
+    fn large_gemm_bit_identical_across_thread_counts() {
+        // big enough that row-banding actually kicks in
+        let (m, k, n) = (128, 96, 128);
+        let a = rng(30, m * k);
+        let b = rng(31, k * n);
+        let mut want = vec![0.0f32; m * n];
+        par::set_threads(1);
+        nn(m, k, n, &a, k, &b, n, &mut want, n);
+        for t in [2usize, 8] {
+            par::set_threads(t);
+            let mut got = vec![0.0f32; m * n];
+            nn(m, k, n, &a, k, &b, n, &mut got, n);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={t}"
+            );
+        }
+        par::set_threads(0);
+    }
+}

@@ -1,10 +1,23 @@
-//! Minimal row-major f32 tensor used on the coordinator side.
+//! Minimal row-major f32 tensor used on the coordinator side, plus the
+//! compute core the native backend runs on.
 //!
-//! The heavy math lives in the AOT-compiled XLA artifacts; the coordinator
-//! only needs small dense ops for (a) the gated prefix-combine of memory
-//! states after the AllGather (Eq. 8/9 generalized), (b) verification
-//! against oracles in tests, and (c) building inputs.  Kept dependency-free
-//! and fully unit-tested.
+//! The tensor type itself stays a thin shape + `Vec<f32>` wrapper; the
+//! heavy math lives in three submodules (see DESIGN.md §Compute core):
+//!
+//! * [`gemm`] — cache-blocked, SIMD-friendly strided GEMM kernels with
+//!   fused-transpose (`nt`/`tn`) and accumulate variants; `matmul`,
+//!   `matmul_nt`, `matmul_tn` and the `*_into` methods below route
+//!   through it.
+//! * [`par`] — deterministic thread parallelism (`LASP2_THREADS`):
+//!   contiguous index blocks, bit-identical results at any thread count.
+//! * [`scratch`] — per-thread buffer pool so steady-state train/decode
+//!   iterations stop allocating.
+//!
+//! Kept dependency-free and fully unit-tested.
+
+pub mod gemm;
+pub mod par;
+pub mod scratch;
 
 use std::fmt;
 
@@ -109,7 +122,10 @@ impl Tensor {
         self
     }
 
-    /// 2-D matmul: [m, k] x [k, n] -> [m, n].
+    /// 2-D matmul: [m, k] x [k, n] -> [m, n].  Runs on the tiled `gemm`
+    /// core (branch-free inner loops — the old per-element zero-skip is
+    /// gone; row-band threaded for large shapes, bit-identical at any
+    /// `LASP2_THREADS`).
     pub fn matmul(&self, rhs: &Tensor) -> Tensor {
         assert_eq!(self.shape.len(), 2);
         assert_eq!(rhs.shape.len(), 2);
@@ -117,20 +133,63 @@ impl Tensor {
         let (k2, n) = (rhs.shape[0], rhs.shape[1]);
         assert_eq!(k, k2, "matmul dims {:?} x {:?}", self.shape, rhs.shape);
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for p in 0..k {
-                let a = self.data[i * k + p];
-                if a == 0.0 {
-                    continue;
-                }
-                let row = &rhs.data[p * n..(p + 1) * n];
-                let o = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    o[j] += a * row[j];
-                }
-            }
-        }
+        gemm::nn(m, k, n, &self.data, k, &rhs.data, n, &mut out, n);
         Tensor::new(vec![m, n], out)
+    }
+
+    /// Fused-transpose matmul: self [m, k] x rhs [n, k]ᵀ -> [m, n], i.e.
+    /// `self.matmul(&rhs.t())` without materializing the transpose.
+    pub fn matmul_nt(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, k2) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul_nt dims {:?} x {:?}ᵀ", self.shape, rhs.shape);
+        let mut out = vec![0.0f32; m * n];
+        gemm::nt(m, k, n, &self.data, k, &rhs.data, k, &mut out, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Fused-transpose matmul: self [k, m]ᵀ x rhs [k, n] -> [m, n], i.e.
+    /// `self.t().matmul(&rhs)` without materializing the transpose.
+    pub fn matmul_tn(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (k, m) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul_tn dims {:?}ᵀ x {:?}", self.shape, rhs.shape);
+        let mut out = vec![0.0f32; m * n];
+        gemm::tn(m, k, n, &self.data, m, &rhs.data, n, &mut out, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// `matmul` into a caller-owned output tensor (no allocation): the
+    /// scratch-buffer entry point for steady-state loops.  `out` must be
+    /// preshaped to [m, n]; its prior contents are overwritten.
+    pub fn matmul_into(&self, rhs: &Tensor, out: &mut Tensor) {
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let n = rhs.shape[1];
+        assert_eq!(k, rhs.shape[0], "matmul_into dims");
+        assert_eq!(out.shape, [m, n], "matmul_into out shape");
+        gemm::nn(m, k, n, &self.data, k, &rhs.data, n, &mut out.data, n);
+    }
+
+    /// `matmul_nt` into a caller-owned output tensor (no allocation).
+    pub fn matmul_nt_into(&self, rhs: &Tensor, out: &mut Tensor) {
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let n = rhs.shape[0];
+        assert_eq!(k, rhs.shape[1], "matmul_nt_into dims");
+        assert_eq!(out.shape, [m, n], "matmul_nt_into out shape");
+        gemm::nt(m, k, n, &self.data, k, &rhs.data, k, &mut out.data, n);
+    }
+
+    /// `matmul_tn` into a caller-owned output tensor (no allocation).
+    pub fn matmul_tn_into(&self, rhs: &Tensor, out: &mut Tensor) {
+        let (k, m) = (self.shape[0], self.shape[1]);
+        let n = rhs.shape[1];
+        assert_eq!(k, rhs.shape[0], "matmul_tn_into dims");
+        assert_eq!(out.shape, [m, n], "matmul_tn_into out shape");
+        gemm::tn(m, k, n, &self.data, m, &rhs.data, n, &mut out.data, n);
     }
 
     /// 2-D transpose.
@@ -348,6 +407,37 @@ mod tests {
                 assert!((c.data()[i * 9 + j] - s).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn matmul_nt_tn_match_explicit_transpose() {
+        let a = Tensor::randn(&[7, 5], 11);
+        let b = Tensor::randn(&[9, 5], 12);
+        assert!(a.matmul_nt(&b).allclose(&a.matmul(&b.t()), 1e-5));
+        let c = Tensor::randn(&[5, 7], 13);
+        let d = Tensor::randn(&[5, 9], 14);
+        assert!(c.matmul_tn(&d).allclose(&c.t().matmul(&d), 1e-5));
+        // decode-shaped m=1 (nt takes the dot-microkernel path)
+        let q = Tensor::randn(&[1, 8], 15);
+        let e = Tensor::randn(&[13, 8], 16);
+        assert!(q.matmul_nt(&e).allclose(&q.matmul(&e.t()), 1e-5));
+    }
+
+    #[test]
+    fn matmul_into_variants_match_allocating_forms() {
+        let a = Tensor::randn(&[4, 6], 17);
+        let b = Tensor::randn(&[6, 3], 18);
+        let mut out = Tensor::full(&[4, 3], 9.0); // stale contents overwritten
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+        let bt = Tensor::randn(&[3, 6], 19);
+        let mut out2 = Tensor::full(&[4, 3], 9.0);
+        a.matmul_nt_into(&bt, &mut out2);
+        assert_eq!(out2, a.matmul_nt(&bt));
+        let at = Tensor::randn(&[6, 4], 20);
+        let mut out3 = Tensor::full(&[4, 3], 9.0);
+        at.matmul_tn_into(&b, &mut out3);
+        assert_eq!(out3, at.matmul_tn(&b));
     }
 
     #[test]

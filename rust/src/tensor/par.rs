@@ -1,0 +1,205 @@
+//! Deterministic data-parallel helpers for the compute core.
+//!
+//! Everything here preserves BIT-IDENTICAL results at any thread count:
+//! work is split into contiguous index blocks, every item is computed by
+//! exactly the same code with exactly the same accumulation order no
+//! matter which thread runs it, and threads write disjoint output
+//! regions.  Changing `LASP2_THREADS` (or `set_threads`) therefore never
+//! changes a single output bit — it only changes wall-clock time.  This
+//! is checked end-to-end by `tests/thread_determinism.rs`.
+//!
+//! Thread count resolution order:
+//!   1. `set_threads(n)` with n >= 1 (tests, benches, embedders);
+//!   2. the `LASP2_THREADS` env var (`1` = fully serial, the pre-threading
+//!      behavior; `0`/unset/unparseable = auto);
+//!   3. `std::thread::available_parallelism()`.
+//!
+//! Nested parallel regions run serially: a worker spawned by one `par_*`
+//! call never spawns again (the distributed-world rank threads in
+//! `comm::World` are NOT workers, so per-rank kernels may still use the
+//! core — their results are identical either way).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Minimum floating-point work (in flops) before a loop is worth farming
+/// out to threads: below this the `thread::scope` spawn cost dominates.
+/// Thresholding is deterministic — it depends on the problem shape only,
+/// never on the thread count — so it cannot affect results.
+pub const PAR_MIN_FLOPS: usize = 1 << 21;
+
+/// Runtime override set via `set_threads` (0 = none, use env/auto).
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+fn env_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        match std::env::var("LASP2_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+        {
+            Some(n) if n >= 1 => n,
+            // 0, unset, or unparseable -> auto
+            _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    })
+}
+
+/// The configured worker count (>= 1).
+pub fn num_threads() -> usize {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => env_threads(),
+        n => n,
+    }
+}
+
+/// Override the thread count at runtime (wins over `LASP2_THREADS`);
+/// `0` restores env/auto resolution.  Results are bit-identical at any
+/// setting, so flipping this concurrently is benign.
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+thread_local! {
+    static IN_PAR: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread IS a `par_*` worker (nested calls run
+/// serially instead of oversubscribing).
+pub fn in_par() -> bool {
+    IN_PAR.with(|c| c.get())
+}
+
+/// How many workers a loop of `items` items totalling `flops` flops would
+/// actually use right now (1 = it will run inline).
+pub fn planned_threads(items: usize, flops: usize) -> usize {
+    if items < 2 || flops < PAR_MIN_FLOPS || in_par() {
+        return 1;
+    }
+    num_threads().min(items)
+}
+
+/// True when `par_map`/`for_each_row_band` over this shape would fan out.
+pub fn would_parallelize(items: usize, flops: usize) -> bool {
+    planned_threads(items, flops) > 1
+}
+
+/// Deterministic parallel map: returns exactly `(0..n).map(f).collect()`.
+/// `flops` is the TOTAL floating-point work of all items; small loops run
+/// inline (see `PAR_MIN_FLOPS`).
+pub fn par_map<T, F>(n: usize, flops: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = planned_threads(n, flops);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let block = n.div_ceil(threads);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|s| {
+        for (bi, chunk) in out.chunks_mut(block).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                IN_PAR.with(|c| c.set(true));
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(bi * block + off));
+                }
+            });
+        }
+    });
+    out.into_iter()
+        .map(|v| v.expect("par_map: worker left a slot empty"))
+        .collect()
+}
+
+/// Deterministic row-band parallelism over a row-major output buffer.
+///
+/// `out` must span exactly `rows` rows at stride `ld` (the last row may be
+/// shorter than `ld`).  `body(row0, nrows, band)` computes rows
+/// `row0..row0 + nrows` into `band`, whose first element is row `row0`'s
+/// first element.  Bands are contiguous and disjoint, so any `body` whose
+/// per-row result is independent of the banding produces identical bits
+/// at every thread count.
+pub fn for_each_row_band<F>(out: &mut [f32], rows: usize, ld: usize, flops: usize, body: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let threads = planned_threads(rows, flops);
+    if threads <= 1 {
+        body(0, rows, out);
+        return;
+    }
+    let band = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (bi, chunk) in out.chunks_mut(band * ld).enumerate() {
+            let body = &body;
+            s.spawn(move || {
+                IN_PAR.with(|c| c.set(true));
+                let row0 = bi * band;
+                body(row0, band.min(rows - row0), chunk);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial_map() {
+        // big enough flops to actually fan out (when threads are available)
+        let a: Vec<usize> = par_map(1000, PAR_MIN_FLOPS * 2, |i| i * i);
+        let b: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn par_map_small_runs_inline() {
+        assert_eq!(par_map(3, 10, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn row_bands_cover_every_row_once() {
+        let rows = 37;
+        let ld = 8;
+        let n = 5; // last-row short width
+        let mut out = vec![0.0f32; (rows - 1) * ld + n];
+        for_each_row_band(&mut out, rows, ld, PAR_MIN_FLOPS * 2, |row0, nrows, band| {
+            for r in 0..nrows {
+                for j in 0..n {
+                    band[r * ld + j] += (row0 + r) as f32;
+                }
+            }
+        });
+        for r in 0..rows {
+            for j in 0..n {
+                assert_eq!(out[r * ld + j], r as f32, "row {r} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn nested_parallelism_is_suppressed() {
+        let flat: Vec<usize> = par_map(4, PAR_MIN_FLOPS * 2, |i| {
+            // inner call sees in_par() on worker threads and runs inline
+            par_map(4, PAR_MIN_FLOPS * 2, move |j| i * 4 + j).len()
+        });
+        assert_eq!(flat, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn set_threads_override_round_trips() {
+        // no assertions about speed — only that results stay identical
+        let want: Vec<usize> = (0..64).map(|i| i * 3).collect();
+        for t in [1usize, 2, 8] {
+            set_threads(t);
+            assert_eq!(par_map(64, PAR_MIN_FLOPS * 2, |i| i * 3), want);
+        }
+        set_threads(0);
+    }
+}

@@ -1,0 +1,75 @@
+//! Thread-local scratch-buffer pool: allocation reuse for the hot-path
+//! temporaries of the compute core (attention score matrices, GEMM
+//! transpose panels, decode staging buffers).
+//!
+//! `take(len)` hands out a zero-filled `Vec<f32>` of exactly `len`
+//! elements, reusing a pooled allocation when one with enough capacity
+//! exists; `recycle(buf)` returns it.  Steady-state loops (train steps,
+//! autoregressive decode) that bracket their temporaries with
+//! `take`/`recycle` stop hitting the allocator after the first iteration.
+//!
+//! The pool is per-thread (no locks, no cross-thread traffic) and fully
+//! deterministic: a pooled buffer is indistinguishable from a fresh
+//! `vec![0.0; len]`.  Unreturned buffers are simply freed by `Vec`'s own
+//! drop, so forgetting to `recycle` is a performance leak, never a bug.
+
+use std::cell::RefCell;
+
+/// Buffers kept per thread; beyond this, `recycle` just drops.
+const MAX_POOLED: usize = 24;
+
+thread_local! {
+    static POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A zero-filled buffer of exactly `len` elements (pooled when possible).
+pub fn take(len: usize) -> Vec<f32> {
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        if let Some(pos) = pool.iter().position(|b| b.capacity() >= len) {
+            let mut b = pool.swap_remove(pos);
+            b.clear();
+            b.resize(len, 0.0);
+            return b;
+        }
+        drop(pool);
+        vec![0.0; len]
+    })
+}
+
+/// Return a buffer to the current thread's pool.
+pub fn recycle(buf: Vec<f32>) {
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        if pool.len() < MAX_POOLED {
+            pool.push(buf);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_even_after_recycle() {
+        let mut b = take(16);
+        b.iter_mut().for_each(|v| *v = 7.0);
+        recycle(b);
+        let b2 = take(8);
+        assert_eq!(b2.len(), 8);
+        assert!(b2.iter().all(|&v| v == 0.0));
+        recycle(b2);
+    }
+
+    #[test]
+    fn reuses_capacity() {
+        let b = take(1024);
+        let ptr = b.as_ptr();
+        recycle(b);
+        let b2 = take(512);
+        // same thread, enough capacity -> same allocation comes back
+        assert_eq!(b2.as_ptr(), ptr);
+        recycle(b2);
+    }
+}

@@ -1,0 +1,187 @@
+//! The compute core's determinism contract: `LASP2_THREADS` (or
+//! `par::set_threads`) changes wall-clock only — every end-to-end output
+//! is BIT-identical at any thread count.  Also pins the fused-transpose
+//! and `_into` GEMM entry points against a naive reference, and the
+//! zero-skip-removal regression (sparse inputs still produce identical
+//! results).
+
+use lasp2::config::{Pattern, Variant};
+use lasp2::coordinator::{forward_mono, Params};
+use lasp2::runtime::{Engine, Value};
+use lasp2::serve::{Batch, Model};
+use lasp2::tensor::{par, Tensor};
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Reference naive triple loop (f64-free, ascending-p accumulation).
+fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            for j in 0..n {
+                out[i * n + j] += av * b[p * n + j];
+            }
+        }
+    }
+    out
+}
+
+fn close(got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len());
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "elem {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn fused_transpose_and_into_match_naive_reference() {
+    // rectangular shapes including the m=1 decode readout and the
+    // k >> n backward shapes
+    for &(m, k, n) in &[
+        (7usize, 5usize, 9usize),
+        (1, 64, 256),  // decode head readout
+        (1, 8, 3),
+        (12, 384, 4),  // k >> n
+        (64, 2048, 32),
+        (33, 2, 17),
+    ] {
+        let a = Tensor::randn(&[m, k], 1000 + m as u64);
+        let b = Tensor::randn(&[k, n], 2000 + n as u64);
+        let want = naive(m, k, n, a.data(), b.data());
+        close(a.matmul(&b).data(), &want, 1e-4);
+        // nt: B stored transposed
+        let bt = b.t();
+        close(a.matmul_nt(&bt).data(), &want, 1e-4);
+        // tn: A stored transposed
+        let at = a.t();
+        close(at.matmul_tn(&b).data(), &want, 1e-4);
+        // _into variants overwrite stale contents and match exactly
+        let mut out = Tensor::full(&[m, n], 123.0);
+        a.matmul_into(&b, &mut out);
+        assert_eq!(bits(&out), bits(&a.matmul(&b)));
+        a.matmul_nt_into(&bt, &mut out);
+        assert_eq!(bits(&out), bits(&a.matmul_nt(&bt)));
+        at.matmul_tn_into(&b, &mut out);
+        assert_eq!(bits(&out), bits(&at.matmul_tn(&b)));
+    }
+}
+
+#[test]
+fn sparse_rows_bit_identical_to_zero_skip_reference() {
+    // the old matmul skipped a == 0.0 contributions inside the p-loop (a
+    // dense-input pessimization); the rewrite must keep sparse-ish inputs
+    // (zero rows/entries) BIT-identical to that skipping reference
+    let (m, k, n) = (9, 14, 11);
+    let mut a = Tensor::randn(&[m, k], 7);
+    for p in 0..k {
+        a.data_mut()[3 * k + p] = 0.0; // a full zero row
+        a.data_mut()[6 * k + p] = 0.0;
+    }
+    a.data_mut()[1] = 0.0; // scattered zero entries
+    a.data_mut()[8 * k + 2] = 0.0;
+    let b = Tensor::randn(&[k, n], 8);
+    let mut skip_ref = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.data()[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                skip_ref[i * n + j] += av * b.data()[p * n + j];
+            }
+        }
+    }
+    let got = a.matmul(&b);
+    assert_eq!(
+        bits(&got),
+        skip_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+    // zero rows in, zero rows out (exactly)
+    for j in 0..n {
+        assert_eq!(got.data()[3 * n + j].to_bits(), 0.0f32.to_bits());
+    }
+}
+
+/// Run `f` under thread counts 1, 2, and 8 and assert every returned
+/// tensor is bit-identical to the serial run.
+fn assert_thread_invariant<F: Fn() -> Vec<Tensor>>(what: &str, f: F) {
+    par::set_threads(1);
+    let want: Vec<Vec<u32>> = f().iter().map(bits).collect();
+    for t in [2usize, 8] {
+        par::set_threads(t);
+        let got: Vec<Vec<u32>> = f().iter().map(bits).collect();
+        assert_eq!(got, want, "{what}: outputs changed at {t} threads");
+    }
+    par::set_threads(0);
+}
+
+#[test]
+fn forward_train_and_batched_decode_bit_identical_across_thread_counts() {
+    // one test (not three) so the global set_threads override never races
+
+    // -- forward_mono on the small preset: big enough that chunk-level
+    // par_map AND gemm row-banding genuinely fan out
+    let small = Engine::load_preset("small").unwrap();
+    let n = 4 * small.model.chunk_len;
+    let pattern = Pattern("L".repeat(small.model.n_layers));
+    let params = Params::randn(&small.model, Variant::Basic, &pattern, 11);
+    let tokens: Vec<i32> = (0..n as i32).map(|i| (i * 5 + 1) % small.model.vocab as i32).collect();
+    let name = format!("forward_mono_basic_pure_N{n}");
+    assert_thread_invariant("forward_mono(small)", || {
+        vec![forward_mono(&small, &name, &params, &tokens).unwrap()]
+    });
+
+    // -- train_step on tiny (covers the sequence-parallel batch reduce +
+    // the whole backward)
+    let tiny = Engine::load_preset("tiny").unwrap();
+    let cfg = tiny.model.clone();
+    let init = tiny.artifact("init_basic_pure").unwrap();
+    let params0 = init.run(&[Value::I32(vec![3], vec![1])]).unwrap();
+    let p = params0.len();
+    let step = tiny.artifact("train_step_basic_pure").unwrap();
+    let (bs, sl) = (cfg.train_batch, cfg.train_seq);
+    let toks: Vec<i32> = (0..(bs * sl) as i32).map(|i| (i * 7 + 2) % cfg.vocab as i32).collect();
+    let tgts: Vec<i32> = (0..(bs * sl) as i32).map(|i| (i * 3 + 5) % cfg.vocab as i32).collect();
+    assert_thread_invariant("train_step(tiny)", || {
+        let mut ins: Vec<Value> = params0.iter().cloned().map(Value::F32).collect();
+        for t in &params0 {
+            ins.push(Value::F32(Tensor::zeros(t.shape())));
+        }
+        for t in &params0 {
+            ins.push(Value::F32(Tensor::zeros(t.shape())));
+        }
+        ins.push(Value::I32(toks.clone(), vec![bs, sl]));
+        ins.push(Value::I32(tgts.clone(), vec![bs, sl]));
+        ins.push(Value::F32(Tensor::ones(&[bs, sl])));
+        ins.push(Value::F32(Tensor::scalar1(1e-3)));
+        ins.push(Value::F32(Tensor::scalar1(1.0)));
+        let outs = step.run(&ins).unwrap();
+        assert_eq!(outs.len(), 3 * p + 1);
+        outs
+    });
+
+    // -- batched decode on a hybrid pattern (recurrent + KV-cache layers,
+    // session-parallel kernels, B=1 zero-copy staging via the prefill)
+    let model = Model::with_engine(tiny.clone(), Variant::Basic, "1/2", 1).unwrap();
+    assert_thread_invariant("batched_decode(tiny h2)", || {
+        let mut batch = Batch::new(&model);
+        for i in 0..4 {
+            let mut s = model.session();
+            // stagger positions so per-session KV lens differ
+            s.prefill(&(0..(i + 1) as i32).collect::<Vec<_>>()).unwrap();
+            batch.push(s);
+        }
+        let mut out = Vec::new();
+        for step in 0..3 {
+            out.extend(batch.decode(&[step, step + 1, step + 2, step + 3]).unwrap());
+        }
+        out
+    });
+}
