@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         variant: Variant::Basic,
         pattern: pattern.clone(),
         gather_splits: 1,
+        usp_cols: 2,
         seed: 0,
     };
     let params = Params::randn(&cfg, run.variant, &pattern, 33);

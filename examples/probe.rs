@@ -13,7 +13,7 @@ fn main() -> anyhow::Result<()> {
     let tokens: Vec<i32> = (0..n as i32).map(|i| i % m.vocab as i32).collect();
     for sched in [Scheduler::Lasp2, Scheduler::Lasp2Overlap, Scheduler::Lasp1] {
         let run = RunConfig { world: 4, scheduler: sched, variant: Variant::Basic,
-            pattern: pattern.clone(), gather_splits: 1, seed: 0 };
+            pattern: pattern.clone(), gather_splits: 1, usp_cols: 2, seed: 0 };
         let world = World::new(4);
         forward_distributed(&engine, &world, &run, &params, &tokens, true)?;
         let t0 = Instant::now();

@@ -10,6 +10,10 @@
 //!    run over W simulated devices, each linear layer doing Alg. 2:
 //!    part1 -> ONE AllGather over the (M_t, a_t) memory states -> local
 //!    prefix combine -> fused part2 — also verified against the oracle.
+//!
+//! LASP-2 is one of eight schedulers; swap `Scheduler::Lasp2` below for
+//! `Ulysses`, `Zeco`, `Usp2d`, ... — docs/SCHEDULERS.md (the scheduler
+//! atlas) explains what each one communicates and where it wins.
 
 use std::time::Instant;
 
@@ -60,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         variant: model.variant(),
         pattern: model.pattern().clone(),
         gather_splits: 1,
+        usp_cols: 2,
         seed: 0,
     };
     let world = World::new(world_size);

@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
             variant: Variant::Basic,
             pattern: pattern.clone(),
             gather_splits: 1,
+            usp_cols: 2,
             seed: 0,
         };
         let world = World::new(world_size);

@@ -73,23 +73,31 @@ pub fn fig3_realexec_rows(
     let tokens: Vec<i32> = (0..n as i32).map(|i| i % cfg.vocab as i32).collect();
     let mut t = Table::new(&["scheduler", "tokens/s", "collectives", "p2p_ops", "MB moved"]);
     let mut rows = Vec::new();
-    for sched in [
+    let mut scheds = vec![
         Scheduler::MegatronSp,
         Scheduler::RingAttention,
         Scheduler::Lasp1,
         Scheduler::Lasp2,
         Scheduler::Lasp2Overlap,
-    ] {
+        Scheduler::Ulysses,
+        Scheduler::Zeco,
+    ];
+    if world_size % 2 == 0 {
+        // usp2d runs on a rows x 2 mesh here; odd worlds can't form one
+        scheds.push(Scheduler::Usp2d);
+    }
+    for sched in scheds {
         let run = RunConfig {
             world: world_size,
             scheduler: sched,
             variant: Variant::Basic,
             pattern: pattern.clone(),
             gather_splits: 1,
+            usp_cols: 2,
             seed: 0,
         };
         // warmup (compile artifacts)
-        let world = World::new(world_size);
+        let world = World::for_run(&run);
         forward_distributed(engine, &world, &run, &params, &tokens, true)?;
         world.reset_counters();
         let t0 = Instant::now();
@@ -114,6 +122,82 @@ pub fn fig3_realexec_rows(
 /// `fig3_realexec_rows` without the machine-readable rows.
 pub fn fig3_realexec(engine: &Arc<Engine>, world_size: usize, iters: usize) -> Result<Table> {
     Ok(fig3_realexec_rows(engine, world_size, iters)?.0)
+}
+
+/// Schedulers compared in the crossover sweep (`lasp2 bench-all`), in the
+/// column order of the printed table and the JSON snapshot.
+pub const CROSSOVER_SCHEDULERS: [Scheduler; 7] = [
+    Scheduler::Lasp2Overlap,
+    Scheduler::Lasp1,
+    Scheduler::RingAttention,
+    Scheduler::MegatronSp,
+    Scheduler::Ulysses,
+    Scheduler::Zeco,
+    Scheduler::Usp2d,
+];
+
+/// One line of the scheduler crossover sweep: every scheduler's simulated
+/// tokens/s at one (world, seq_len, layer-pattern) point.
+pub struct CrossoverRow {
+    pub world: usize,
+    /// sequence length in units of 1024 tokens
+    pub seq_k: usize,
+    /// "pure" (all linear layers) or "hybrid" (1/4 standard attention)
+    pub pattern: String,
+    /// (scheduler name, tokens/s, hit the OOM frontier) per scheduler,
+    /// in `CROSSOVER_SCHEDULERS` order
+    pub toks: Vec<(String, f64, bool)>,
+    /// fastest non-OOM scheduler at this point
+    pub winner: String,
+}
+
+/// Scheduler crossover sweep (SIM): where does each sequence-parallel
+/// strategy win?  Sweeps W in {8, 64, 128} x N in {8K .. 2048K} for the
+/// pure-linear and 1/4-hybrid Linear-Llama3-1B, simulating every entry of
+/// `CROSSOVER_SCHEDULERS` on the same cost model.  The table is also
+/// persisted as the `crossover` section of BENCH_kernels.json and
+/// discussed scheduler-by-scheduler in docs/SCHEDULERS.md.
+pub fn crossover_table(cm: &CostModel) -> (Table, Vec<CrossoverRow>) {
+    let mut header: Vec<String> = vec!["world".into(), "seq_len".into(), "pattern".into()];
+    header.extend(CROSSOVER_SCHEDULERS.iter().map(|s| s.name().to_string()));
+    header.push("winner".into());
+    let cols: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&cols);
+    let mut rows = Vec::new();
+    for &w in &[8usize, 64, 128] {
+        for &k in &[8usize, 32, 128, 512, 2048] {
+            for hybrid in [false, true] {
+                let mut shape = SimShape::linear_llama3_1b(w, k * 1024, 1);
+                if hybrid {
+                    shape = shape.with_hybrid(0.25);
+                }
+                let pattern = if hybrid { "hybrid" } else { "pure" };
+                let mut toks = Vec::new();
+                let mut winner = ("-".to_string(), f64::NEG_INFINITY);
+                for sched in CROSSOVER_SCHEDULERS {
+                    let r = simulate(&shape, sched, 1, cm);
+                    toks.push((sched.name().to_string(), r.tokens_per_sec, r.oom));
+                    if !r.oom && r.tokens_per_sec > winner.1 {
+                        winner = (sched.name().to_string(), r.tokens_per_sec);
+                    }
+                }
+                let mut cells = vec![w.to_string(), fmt_seq(k * 1024), pattern.to_string()];
+                cells.extend(toks.iter().map(|(_, tps, oom)| {
+                    if *oom { "OOM".to_string() } else { format!("{tps:.0}") }
+                }));
+                cells.push(winner.0.clone());
+                t.row(&cells);
+                rows.push(CrossoverRow {
+                    world: w,
+                    seq_k: k,
+                    pattern: pattern.to_string(),
+                    toks,
+                    winner: winner.0,
+                });
+            }
+        }
+    }
+    (t, rows)
 }
 
 /// Fig. 4 / Table 6: scalability sweep — throughput + memory per GPU with
@@ -447,6 +531,8 @@ pub struct KernelsReport {
     pub decode: Option<(String, usize, Vec<DecodeRow>)>,
     /// (preset, world, [(scheduler, tokens_per_sec)])
     pub fig3: Option<(String, usize, Vec<(String, f64)>)>,
+    /// simulated scheduler crossover sweep (`crossover_table`)
+    pub crossover: Option<Vec<CrossoverRow>>,
 }
 
 impl KernelsReport {
@@ -502,6 +588,24 @@ impl KernelsReport {
                 ));
             }
             s.push_str("  }}");
+        }
+        if let Some(rows) = &self.crossover {
+            s.push_str(",\n  \"crossover\": [\n");
+            for (i, r) in rows.iter().enumerate() {
+                s.push_str(&format!(
+                    "    {{\"world\": {}, \"seq_k\": {}, \"pattern\": \"{}\", \"winner\": \"{}\"",
+                    r.world, r.seq_k, r.pattern, r.winner
+                ));
+                for (name, tps, oom) in &r.toks {
+                    if *oom {
+                        s.push_str(&format!(", \"{name}\": null"));
+                    } else {
+                        s.push_str(&format!(", \"{name}\": {tps:.1}"));
+                    }
+                }
+                s.push_str(&format!("}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
+            }
+            s.push_str("  ]");
         }
         s.push_str("\n}\n");
         s

@@ -6,20 +6,38 @@
 //! collective steps per iteration; LASP-1: 2(W-1) P2P steps) and the
 //! Table-5 split-gather ablation; wall-clock blocked time feeds the perf
 //! pass.
+//!
+//! Primitives (see `docs/SCHEDULERS.md` for which scheduler uses what):
+//!
+//! | primitive        | wire bytes per rank      | used by                  |
+//! |------------------|--------------------------|--------------------------|
+//! | `all_gather`     | (W-1) x payload          | LASP-2, Megatron-SP      |
+//! | `all_to_all`     | (W-1)/W x payload        | Ulysses, USP rows        |
+//! | `reduce_scatter` | (W-1)/W x payload        | (ZeRO-style partials)    |
+//! | `send`/`recv`    | payload per hop          | LASP-1, Ring, ZeCO       |
+//!
+//! A `World` can also be built as a 2D mesh (`World::new_mesh`) whose
+//! orthogonal row/column sub-communicators (`Communicator::row` /
+//! `Communicator::col`) share one byte/step counter set with the root —
+//! the USP-style hybrid runs LASP-2's AllGather over the full world for
+//! linear layers and Ulysses All-to-All within rows for standard layers.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
+use crate::config::RunConfig;
 use crate::tensor::Tensor;
 
-/// Message payload: a list of tensors (e.g. [M_t, a_t] for LASP-2 states).
+/// Message payload: a list of tensors (e.g. `[M_t, a_t]` for LASP-2 states).
 pub type Msg = Vec<Tensor>;
 
+/// Shared traffic counters, aggregated over every rank of a `World` (and,
+/// for mesh worlds, over all row/column sub-communicators too).
 #[derive(Debug, Default)]
 pub struct CommCounters {
-    /// collective operations launched (AllGather)
+    /// collective operations launched (AllGather/All-to-All/ReduceScatter)
     pub collective_ops: AtomicU64,
     /// P2P send operations
     pub p2p_ops: AtomicU64,
@@ -30,6 +48,7 @@ pub struct CommCounters {
 }
 
 impl CommCounters {
+    /// Copy the live atomics into a plain snapshot struct.
     pub fn snapshot(&self) -> CommSnapshot {
         CommSnapshot {
             collective_ops: self.collective_ops.load(Ordering::Relaxed),
@@ -39,6 +58,7 @@ impl CommCounters {
         }
     }
 
+    /// Zero all counters (between benchmark iterations).
     pub fn reset(&self) {
         self.collective_ops.store(0, Ordering::Relaxed);
         self.p2p_ops.store(0, Ordering::Relaxed);
@@ -47,31 +67,47 @@ impl CommCounters {
     }
 }
 
+/// Point-in-time copy of [`CommCounters`] (what tests assert against).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CommSnapshot {
+    /// collective operations launched (AllGather/All-to-All/ReduceScatter)
     pub collective_ops: u64,
+    /// P2P send operations
     pub p2p_ops: u64,
+    /// total bytes moved device-to-device (sum over devices)
     pub bytes: u64,
+    /// wall nanos threads spent blocked in communication (sum over devices)
     pub blocked_nanos: u64,
+}
+
+/// 2D process-mesh topology attached to a root `WorldInner`: orthogonal
+/// row/column sub-worlds that share the root's counters.
+struct Mesh {
+    rows: usize,
+    cols: usize,
+    /// one sub-world per row; row i holds consecutive ranks
+    /// `[i*cols, (i+1)*cols)` (a contiguous sequence segment)
+    row_groups: Vec<Arc<WorldInner>>,
+    /// one sub-world per column; column j holds ranks `{j, j+cols, ...}`
+    col_groups: Vec<Arc<WorldInner>>,
 }
 
 struct WorldInner {
     size: usize,
     slots: Mutex<Vec<Option<Msg>>>,
+    /// all_to_all mailbox: `mailbox[dst][src]`
+    mailbox: Mutex<Vec<Vec<Option<Msg>>>>,
     barrier: Barrier,
-    /// p2p channels: senders[dst][src], receivers[dst][src]
+    /// p2p channels: `senders[dst][src]`, `receivers[dst][src]`
     senders: Vec<Vec<Sender<Msg>>>,
     receivers: Vec<Vec<Mutex<Receiver<Msg>>>>,
-    counters: CommCounters,
+    /// shared with sub-worlds of a mesh so every hop is accounted once
+    counters: Arc<CommCounters>,
+    mesh: Option<Mesh>,
 }
 
-/// A communication world of `size` simulated devices.
-pub struct World {
-    inner: Arc<WorldInner>,
-}
-
-impl World {
-    pub fn new(size: usize) -> World {
+impl WorldInner {
+    fn new(size: usize, counters: Arc<CommCounters>) -> WorldInner {
         assert!(size >= 1);
         let mut senders: Vec<Vec<Sender<Msg>>> = (0..size).map(|_| Vec::new()).collect();
         let mut receivers: Vec<Vec<Mutex<Receiver<Msg>>>> =
@@ -83,31 +119,93 @@ impl World {
                 receivers[dst].push(Mutex::new(rx));
             }
         }
+        WorldInner {
+            size,
+            slots: Mutex::new(vec![None; size]),
+            mailbox: Mutex::new((0..size).map(|_| vec![None; size]).collect()),
+            barrier: Barrier::new(size),
+            senders,
+            receivers,
+            counters,
+            mesh: None,
+        }
+    }
+}
+
+/// A communication world of `size` simulated devices (one OS thread each
+/// under [`World::run`]); optionally a 2D mesh with row/column
+/// sub-communicators.
+pub struct World {
+    inner: Arc<WorldInner>,
+}
+
+impl World {
+    /// Flat world of `size` ranks (no mesh sub-communicators).
+    pub fn new(size: usize) -> World {
         World {
-            inner: Arc::new(WorldInner {
-                size,
-                slots: Mutex::new(vec![None; size]),
-                barrier: Barrier::new(size),
-                senders,
-                receivers,
-                counters: CommCounters::default(),
-            }),
+            inner: Arc::new(WorldInner::new(size, Arc::new(CommCounters::default()))),
         }
     }
 
+    /// 2D mesh world of `rows * cols` ranks.  Rank `r` sits at row
+    /// `r / cols`, column `r % cols`; rows hold CONSECUTIVE ranks, so a
+    /// row spans a contiguous sequence segment under the usual
+    /// chunk-per-rank layout.  Row/column sub-communicators
+    /// ([`Communicator::row`] / [`Communicator::col`]) share this world's
+    /// traffic counters.
+    pub fn new_mesh(rows: usize, cols: usize) -> World {
+        assert!(rows >= 1 && cols >= 1);
+        let counters = Arc::new(CommCounters::default());
+        let row_groups = (0..rows)
+            .map(|_| Arc::new(WorldInner::new(cols, counters.clone())))
+            .collect();
+        let col_groups = (0..cols)
+            .map(|_| Arc::new(WorldInner::new(rows, counters.clone())))
+            .collect();
+        let mut root = WorldInner::new(rows * cols, counters);
+        root.mesh = Some(Mesh { rows, cols, row_groups, col_groups });
+        World { inner: Arc::new(root) }
+    }
+
+    /// The world a `RunConfig` asks for: a `rows x usp_cols` mesh for the
+    /// USP-2D scheduler, a flat world otherwise.
+    pub fn for_run(run: &RunConfig) -> World {
+        if run.scheduler == crate::config::Scheduler::Usp2d {
+            let cols = run.usp_cols.clamp(1, run.world);
+            assert!(
+                run.world % cols == 0,
+                "usp_cols {} must divide world {}",
+                cols,
+                run.world
+            );
+            World::new_mesh(run.world / cols, cols)
+        } else {
+            World::new(run.world)
+        }
+    }
+
+    /// Number of ranks.
     pub fn size(&self) -> usize {
         self.inner.size
     }
 
+    /// `(rows, cols)` when this world was built with [`World::new_mesh`].
+    pub fn mesh_dims(&self) -> Option<(usize, usize)> {
+        self.inner.mesh.as_ref().map(|m| (m.rows, m.cols))
+    }
+
+    /// Per-rank handle (normally obtained inside [`World::run`]).
     pub fn communicator(&self, rank: usize) -> Communicator {
         assert!(rank < self.inner.size);
         Communicator { rank, inner: self.inner.clone() }
     }
 
+    /// Snapshot of the shared traffic counters.
     pub fn counters(&self) -> CommSnapshot {
         self.inner.counters.snapshot()
     }
 
+    /// Zero the shared traffic counters.
     pub fn reset_counters(&self) {
         self.inner.counters.reset();
     }
@@ -137,6 +235,20 @@ impl World {
     }
 }
 
+/// Contiguous slice `idx` of `parts` equal parts along axis 0.
+fn slice0(t: &Tensor, parts: usize, idx: usize) -> Tensor {
+    let n = t.shape()[0];
+    debug_assert_eq!(n % parts, 0);
+    let rows = n / parts;
+    let stride: usize = t.shape()[1..].iter().product();
+    let mut shape = t.shape().to_vec();
+    shape[0] = rows;
+    Tensor::new(
+        shape,
+        t.data()[idx * rows * stride..(idx + 1) * rows * stride].to_vec(),
+    )
+}
+
 /// Per-device handle used inside worker threads.
 #[derive(Clone)]
 pub struct Communicator {
@@ -145,14 +257,43 @@ pub struct Communicator {
 }
 
 impl Communicator {
+    /// This device's rank in `[0, size)`.
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// World size (number of ranks in THIS communicator — a row/column
+    /// sub-communicator reports its group size, not the root's).
     pub fn size(&self) -> usize {
         self.inner.size
     }
 
+    /// `(rows, cols)` when this communicator belongs to a mesh world.
+    pub fn mesh_dims(&self) -> Option<(usize, usize)> {
+        self.inner.mesh.as_ref().map(|m| (m.rows, m.cols))
+    }
+
+    /// Sub-communicator over this rank's mesh ROW (`cols` consecutive
+    /// ranks — the Ulysses/All-to-All dimension of USP).  `None` on flat
+    /// worlds and on sub-communicators themselves.
+    pub fn row(&self) -> Option<Communicator> {
+        self.inner.mesh.as_ref().map(|m| Communicator {
+            rank: self.rank % m.cols,
+            inner: m.row_groups[self.rank / m.cols].clone(),
+        })
+    }
+
+    /// Sub-communicator over this rank's mesh COLUMN (stride-`cols` ranks
+    /// — the cross-segment AllGather dimension of USP).  `None` on flat
+    /// worlds and on sub-communicators themselves.
+    pub fn col(&self) -> Option<Communicator> {
+        self.inner.mesh.as_ref().map(|m| Communicator {
+            rank: self.rank / m.cols,
+            inner: m.col_groups[self.rank % m.cols].clone(),
+        })
+    }
+
+    /// Block until every rank of this communicator arrives.
     pub fn barrier(&self) {
         self.inner.barrier.wait();
     }
@@ -171,7 +312,8 @@ impl Communicator {
 
     /// AllGather: every rank contributes `msg`, every rank receives the full
     /// rank-ordered list.  THE LASP-2 communication primitive (Alg. 1 line
-    /// 6 / Alg. 2 line 7 on [M_t], Alg. 3/4 on [dM_t], Alg. 7 on K/V).
+    /// 6 / Alg. 2 line 7 on the memory states `M_t`, Alg. 3/4 on `dM_t`,
+    /// Alg. 7 on K/V).
     pub fn all_gather(&self, msg: Msg) -> Vec<Msg> {
         let t0 = Instant::now();
         let sent: usize = msg.iter().map(|t| t.byte_size()).sum();
@@ -230,7 +372,89 @@ impl Communicator {
             .collect()
     }
 
-    /// P2P send (LASP-1's ring primitive).
+    /// All-to-All: rank r contributes `msgs[d]` for every destination d and
+    /// receives, in rank order, what every source addressed to r —
+    /// `out[s] == ` the `msgs[self.rank]` that rank s passed in.
+    ///
+    /// This is DeepSpeed-Ulysses' repartition primitive (arXiv:2309.14509):
+    /// with per-head slices as messages it converts a sequence-parallel
+    /// layout `[N/W, H, dh]` into a head-parallel layout `[N, H/W, dh]`
+    /// and back.  Deterministic (rank-ordered output, two-barrier
+    /// generation fencing like `all_gather`); wire accounting charges each
+    /// rank the (W-1)/W of its payload that leaves the device.
+    pub fn all_to_all(&self, msgs: Vec<Msg>) -> Vec<Msg> {
+        let t0 = Instant::now();
+        let w = self.size();
+        assert_eq!(msgs.len(), w, "all_to_all needs one message per destination");
+        let sent: usize = msgs
+            .iter()
+            .enumerate()
+            .filter(|(dst, _)| *dst != self.rank)
+            .map(|(_, m)| m.iter().map(|t| t.byte_size()).sum::<usize>())
+            .sum();
+        {
+            let mut mb = self.inner.mailbox.lock().unwrap();
+            for (dst, m) in msgs.into_iter().enumerate() {
+                debug_assert!(mb[dst][self.rank].is_none(), "mailbox generation overlap");
+                mb[dst][self.rank] = Some(m);
+            }
+        }
+        self.inner.barrier.wait();
+        let out: Vec<Msg> = {
+            let mut mb = self.inner.mailbox.lock().unwrap();
+            mb[self.rank].iter_mut().map(|s| s.take().unwrap()).collect()
+        };
+        // fence the generation: no rank may start writing the next
+        // all_to_all's slots until every rank has drained its row
+        self.inner.barrier.wait();
+        self.account(sent, t0, true);
+        out
+    }
+
+    /// ReduceScatter: element-wise SUM of every rank's `msg`, then each
+    /// rank keeps its own 1/W slice along axis 0 (axis 0 of every tensor
+    /// must be divisible by the world size).
+    ///
+    /// The reduction is performed in fixed rank order 0..W-1 on every
+    /// rank, so results are bit-identical regardless of thread timing.
+    /// Wire accounting matches a ring reduce-scatter: (W-1)/W of the
+    /// payload per rank.
+    pub fn reduce_scatter(&self, msg: Msg) -> Msg {
+        let t0 = Instant::now();
+        let w = self.size();
+        let total: usize = msg.iter().map(|t| t.byte_size()).sum();
+        for t in &msg {
+            assert!(
+                t.shape()[0] % w == 0,
+                "reduce_scatter: axis 0 ({}) not divisible by world size {}",
+                t.shape()[0],
+                w
+            );
+        }
+        {
+            let mut slots = self.inner.slots.lock().unwrap();
+            slots[self.rank] = Some(msg);
+        }
+        self.inner.barrier.wait();
+        let out: Msg = {
+            let slots = self.inner.slots.lock().unwrap();
+            let first = slots[0].as_ref().unwrap();
+            let mut acc: Vec<Tensor> =
+                first.iter().map(|t| slice0(t, w, self.rank)).collect();
+            for r in 1..w {
+                let m = slots[r].as_ref().unwrap();
+                for (a, t) in acc.iter_mut().zip(m.iter()) {
+                    a.add_assign(&slice0(t, w, self.rank));
+                }
+            }
+            acc
+        };
+        self.inner.barrier.wait();
+        self.account(total / w * (w - 1), t0, true);
+        out
+    }
+
+    /// P2P send (LASP-1's ring primitive; also ZeCO's pipelined state hop).
     pub fn send(&self, dst: usize, msg: Msg) {
         let t0 = Instant::now();
         let bytes: usize = msg.iter().map(|t| t.byte_size()).sum();
@@ -253,11 +477,12 @@ impl Communicator {
         msg
     }
 
-    /// Ring neighbors.
+    /// Right ring neighbor `(rank + 1) % W`.
     pub fn right(&self) -> usize {
         (self.rank + 1) % self.size()
     }
 
+    /// Left ring neighbor `(rank - 1) % W`.
     pub fn left(&self) -> usize {
         (self.rank + self.size() - 1) % self.size()
     }
@@ -354,5 +579,129 @@ mod tests {
             c.rank()
         });
         assert_eq!(r, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_to_all_transposes_rank_pairs_and_counts_bytes() {
+        // out[s] on rank r must be exactly what s addressed to r, at every
+        // world size the schedulers use, with deterministic byte counters.
+        for size in [2usize, 4, 8] {
+            let w = World::new(size);
+            let results = w.run(|c| {
+                let msgs: Vec<Msg> = (0..c.size())
+                    .map(|dst| vec![Tensor::full(&[4, 2], (c.rank() * 10 + dst) as f32)])
+                    .collect();
+                c.all_to_all(msgs)
+            });
+            for (r, out) in results.iter().enumerate() {
+                assert_eq!(out.len(), size);
+                for (s, m) in out.iter().enumerate() {
+                    assert_eq!(m[0].data()[0], (s * 10 + r) as f32, "W={size} r={r} s={s}");
+                }
+            }
+            let snap = w.counters();
+            assert_eq!(snap.collective_ops, size as u64, "one launch per rank");
+            assert_eq!(snap.p2p_ops, 0);
+            // each rank keeps its own slice: wire = (W-1) x 4*2*4 bytes/rank
+            assert_eq!(snap.bytes, (size * (size - 1) * 32) as u64, "W={size}");
+        }
+    }
+
+    #[test]
+    fn all_to_all_deterministic_across_generations() {
+        // repeated all_to_all under World::run must produce identical
+        // values every generation (the two-barrier fence prevents a fast
+        // rank from clobbering a slot the slow rank hasn't drained).
+        let w = World::new(4);
+        let results = w.run(|c| {
+            let mut sums = Vec::new();
+            for gen in 0..6 {
+                let msgs: Vec<Msg> = (0..c.size())
+                    .map(|dst| {
+                        vec![Tensor::full(&[2], (gen * 100 + c.rank() * 10 + dst) as f32)]
+                    })
+                    .collect();
+                let out = c.all_to_all(msgs);
+                sums.push(out.iter().map(|m| m[0].data()[0]).sum::<f32>());
+            }
+            sums
+        });
+        for (r, sums) in results.iter().enumerate() {
+            for (gen, s) in sums.iter().enumerate() {
+                let want: f32 =
+                    (0..4).map(|src| (gen * 100 + src * 10 + r) as f32).sum();
+                assert_eq!(*s, want, "rank {r} generation {gen}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_sums_and_slices() {
+        for size in [2usize, 4, 8] {
+            let w = World::new(size);
+            let results = w.run(|c| {
+                // every rank contributes [0, 1, ..., 2W-1] * (rank+1)
+                let n = 2 * c.size();
+                let data: Vec<f32> =
+                    (0..n).map(|i| (i * (c.rank() + 1)) as f32).collect();
+                c.reduce_scatter(vec![Tensor::new(vec![n], data)])
+            });
+            // sum over ranks of (rank+1) = W(W+1)/2
+            let mult = (size * (size + 1) / 2) as f32;
+            for (r, out) in results.iter().enumerate() {
+                assert_eq!(out[0].shape(), &[2]);
+                assert_eq!(out[0].data()[0], (2 * r) as f32 * mult);
+                assert_eq!(out[0].data()[1], (2 * r + 1) as f32 * mult);
+            }
+            let snap = w.counters();
+            assert_eq!(snap.collective_ops, size as u64);
+            // ring reduce-scatter wire: (W-1)/W of 2W*4 bytes per rank
+            assert_eq!(snap.bytes, (size * (size - 1) * 8) as u64);
+        }
+    }
+
+    #[test]
+    fn mesh_row_col_groups_are_orthogonal() {
+        // 2x2 mesh: rows {0,1},{2,3}; cols {0,2},{1,3}.
+        let w = World::new_mesh(2, 2);
+        assert_eq!(w.mesh_dims(), Some((2, 2)));
+        let results = w.run(|c| {
+            let row = c.row().expect("mesh row");
+            let col = c.col().expect("mesh col");
+            assert!(row.row().is_none(), "sub-communicators are flat");
+            let rg = row.all_gather(vec![Tensor::full(&[1], c.rank() as f32)]);
+            let cg = col.all_gather(vec![Tensor::full(&[1], c.rank() as f32)]);
+            let rv: Vec<f32> = rg.iter().map(|m| m[0].data()[0]).collect();
+            let cv: Vec<f32> = cg.iter().map(|m| m[0].data()[0]).collect();
+            (rv, cv)
+        });
+        assert_eq!(results[0], (vec![0.0, 1.0], vec![0.0, 2.0]));
+        assert_eq!(results[1], (vec![0.0, 1.0], vec![1.0, 3.0]));
+        assert_eq!(results[2], (vec![2.0, 3.0], vec![0.0, 2.0]));
+        assert_eq!(results[3], (vec![2.0, 3.0], vec![1.0, 3.0]));
+        // sub-world traffic lands in the ROOT counters: 8 collective
+        // launches (2 per rank), each moving (2-1)*4 bytes
+        let snap = w.counters();
+        assert_eq!(snap.collective_ops, 8);
+        assert_eq!(snap.bytes, 8 * 4);
+    }
+
+    #[test]
+    fn mesh_row_all_to_all_stays_inside_row() {
+        let w = World::new_mesh(2, 2);
+        let results = w.run(|c| {
+            let row = c.row().unwrap();
+            let msgs: Vec<Msg> = (0..row.size())
+                .map(|d| vec![Tensor::full(&[1], (c.rank() * 10 + d) as f32)])
+                .collect();
+            let out = row.all_to_all(msgs);
+            out.iter().map(|m| m[0].data()[0]).collect::<Vec<f32>>()
+        });
+        // rank 0's row peers are {0,1}: receives [0*10+0, 1*10+0]
+        assert_eq!(results[0], vec![0.0, 10.0]);
+        assert_eq!(results[1], vec![1.0, 11.0]);
+        // rank 2's row peers are {2,3}
+        assert_eq!(results[2], vec![20.0, 30.0]);
+        assert_eq!(results[3], vec![21.0, 31.0]);
     }
 }

@@ -83,6 +83,16 @@ pub enum Scheduler {
     RingAttention,
     /// Megatron-SP style: gather full K/V, compute locally (no trick)
     MegatronSp,
+    /// DeepSpeed-Ulysses (arXiv:2309.14509): All-to-All seq->head
+    /// repartition, full attention per owned head, All-to-All back
+    Ulysses,
+    /// ZeCO-style (arXiv:2507.01004): the sequential state exchange fully
+    /// hidden behind intra-chunk compute (pipelined P2P overlap)
+    Zeco,
+    /// USP-style 2D mesh (arXiv:2405.07719): LASP-2 AllGather across the
+    /// full world for linear layers, Ulysses All-to-All within mesh rows
+    /// plus a column AllGather for std layers
+    Usp2d,
 }
 
 impl Scheduler {
@@ -93,6 +103,9 @@ impl Scheduler {
             Scheduler::Lasp1 => "lasp1",
             Scheduler::RingAttention => "ring",
             Scheduler::MegatronSp => "megatron-sp",
+            Scheduler::Ulysses => "ulysses",
+            Scheduler::Zeco => "zeco",
+            Scheduler::Usp2d => "usp2d",
         }
     }
 
@@ -103,6 +116,9 @@ impl Scheduler {
             "lasp1" => Scheduler::Lasp1,
             "ring" | "ring-attention" => Scheduler::RingAttention,
             "megatron-sp" | "megatron" => Scheduler::MegatronSp,
+            "ulysses" | "deepspeed-ulysses" => Scheduler::Ulysses,
+            "zeco" => Scheduler::Zeco,
+            "usp2d" | "usp" => Scheduler::Usp2d,
             _ => bail!("unknown scheduler {s}"),
         })
     }
@@ -114,6 +130,9 @@ impl Scheduler {
             Scheduler::Lasp1,
             Scheduler::RingAttention,
             Scheduler::MegatronSp,
+            Scheduler::Ulysses,
+            Scheduler::Zeco,
+            Scheduler::Usp2d,
         ]
     }
 }
@@ -288,6 +307,9 @@ pub struct RunConfig {
     pub pattern: Pattern,
     /// AllGather split count (Table 5 ablation); 1 = one collective.
     pub gather_splits: usize,
+    /// Mesh column count for the `usp2d` scheduler (the Ulysses/All-to-All
+    /// dimension); must divide `world`.  Ignored by flat schedulers.
+    pub usp_cols: usize,
     pub seed: u64,
 }
 
@@ -299,6 +321,7 @@ impl Default for RunConfig {
             variant: Variant::Basic,
             pattern: Pattern("LL".into()),
             gather_splits: 1,
+            usp_cols: 2,
             seed: 0,
         }
     }

@@ -15,6 +15,7 @@ use crate::runtime::{CachedBuffer, Engine, Value};
 use crate::tensor::Tensor;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Weight-initialization family for one parameter spec.
 pub enum Init {
     Normal,
     Xavier,
@@ -165,28 +166,34 @@ impl Params {
         Ok(Value::Buf(c))
     }
 
+    /// `value()` for the per-layer parameter `layer{i}.{name}`.
     pub fn layer_value(&self, engine: &Engine, i: usize, name: &str) -> Result<Value> {
         self.value(engine, &format!("layer{i}.{name}"))
     }
 
+    /// Borrow a parameter tensor by name.
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.map.get(name).with_context(|| format!("param {name}"))
     }
 
+    /// Replace an existing parameter (invalidates its device cache).
     pub fn set(&mut self, name: &str, t: Tensor) {
         assert!(self.map.contains_key(name), "unknown param {name}");
         self.lit_cache.lock().unwrap().remove(name);
         self.map.insert(name.to_string(), t);
     }
 
+    /// Parameter names in spec order.
     pub fn names(&self) -> &[String] {
         &self.names
     }
 
+    /// Number of parameters.
     pub fn len(&self) -> usize {
         self.names.len()
     }
 
+    /// True when the model has no parameters (never for real presets).
     pub fn is_empty(&self) -> bool {
         self.names.is_empty()
     }
@@ -219,7 +226,7 @@ impl Params {
         self.get(&format!("layer{i}.{name}"))
     }
 
-    /// Extra part1 inputs for the variant ([] | [wg] | [gamma, beta]).
+    /// Extra part1 inputs for the variant (`[]` | `[wg]` | `[gamma, beta]`).
     pub fn part1_extra(&self, engine: &Engine, i: usize) -> Result<Vec<Value>> {
         Ok(match self.variant {
             Variant::Gla => vec![self.layer_value(engine, i, "wg")?],

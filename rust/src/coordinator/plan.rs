@@ -16,8 +16,17 @@ pub enum PlanOp {
     Compute { name: &'static str, flops: f64 },
     /// Synchronizing collective; every rank contributes `bytes_per_rank`.
     AllGather { bytes_per_rank: f64 },
+    /// All-to-All repartition (Ulysses/USP): every rank keeps its own 1/W
+    /// slice, so only (W-1)/W of `bytes_per_rank` crosses the wire.
+    AllToAll { bytes_per_rank: f64 },
+    /// ReduceScatter: sum + keep-own-slice, same (W-1)/W wire factor as
+    /// All-to-All (ring schedule).
+    ReduceScatter { bytes_per_rank: f64 },
     /// One pipelined ring hop (all ranks exchange concurrently).
     P2pHop { bytes: f64 },
+    /// Ops executed on a sub-communicator of `group` ranks (a 2D-mesh row
+    /// or column): collective sizes/latencies use `group`, not the world.
+    Grouped { group: usize, ops: Vec<PlanOp> },
     /// LASP-1-style serialized chain: `hops` sequential (P2P + compute)
     /// steps that ranks must wait through one after another.
     Sequential { hops: usize, per_hop_flops: f64, bytes: f64 },
@@ -53,6 +62,14 @@ fn account_ops(ops: &[PlanOp], acc: &mut CommAccount, world: usize) {
                 acc.collective_steps += 1;
                 acc.bytes += bytes_per_rank * (world as f64 - 1.0);
             }
+            PlanOp::AllToAll { bytes_per_rank }
+            | PlanOp::ReduceScatter { bytes_per_rank } => {
+                acc.collective_steps += 1;
+                acc.bytes += bytes_per_rank * (world as f64 - 1.0) / world as f64;
+            }
+            PlanOp::Grouped { group, ops } => {
+                account_ops(ops, acc, *group);
+            }
             PlanOp::P2pHop { bytes } => {
                 acc.p2p_steps += 1;
                 acc.bytes += bytes;
@@ -70,6 +87,8 @@ fn account_ops(ops: &[PlanOp], acc: &mut CommAccount, world: usize) {
 }
 
 impl Plan {
+    /// Extract the paper's §3.4 closed-form accounting (collective
+    /// launches, P2P steps, bytes on wire per rank) from this plan.
     pub fn account(&self, world: usize) -> CommAccount {
         let mut acc = CommAccount::default();
         account_ops(&self.ops, &mut acc, world);
@@ -93,6 +112,9 @@ pub struct SimShape {
     pub world: usize,
     /// chunk length per device; N = world * chunk
     pub chunk: f64,
+    /// USP-2D mesh column count (the row/All-to-All dimension); only the
+    /// `usp2d` scheduler reads it
+    pub usp_cols: usize,
 }
 
 impl SimShape {
@@ -109,9 +131,13 @@ impl SimShape {
             batch: batch as f64,
             world,
             chunk: seq_len as f64 / world as f64,
+            // keep mesh rows intra-node-sized by default (8 GPUs/node)
+            usp_cols: 8.min(world),
         }
     }
 
+    /// Convert `ratio_num` of the layers to standard attention (the
+    /// LASP-2H hybrid pattern, e.g. 0.25 for the paper's 1/4 ratio).
     pub fn with_hybrid(mut self, ratio_num: f64) -> SimShape {
         let total = self.n_linear_layers + self.n_std_layers;
         let std = (total * ratio_num).round();
@@ -120,6 +146,7 @@ impl SimShape {
         self
     }
 
+    /// Total sequence length N = W * C.
     pub fn seq_len(&self) -> f64 {
         self.chunk * self.world as f64
     }
@@ -133,6 +160,12 @@ impl SimShape {
     /// K/V bytes per rank (what Ring Attention / Megatron-SP move).
     pub fn kv_bytes(&self) -> f64 {
         self.batch * self.chunk * self.n_heads * (self.feat_dim + self.head_dim) * 4.0
+    }
+
+    /// Folded q~/k~/v bytes per rank (the Ulysses forward All-to-All
+    /// payload for a linear layer).
+    pub fn qkv_bytes(&self) -> f64 {
+        self.batch * self.chunk * self.n_heads * (2.0 * self.feat_dim + self.head_dim) * 4.0
     }
 
     /// Parameter count of the model (for the memory model).
@@ -229,7 +262,9 @@ pub fn build_plan(shape: &SimShape, sched: Scheduler, gather_splits: usize) -> P
         let part1 = PlanOp::Compute { name: "part1", flops: s.f_qkv() + s.f_state() };
         let epi = PlanOp::Compute { name: "epilogue", flops: s.f_epilogue() };
         match sched {
-            Scheduler::Lasp2 | Scheduler::Lasp2Overlap => {
+            // USP-2D runs plain full-world LASP-2 on linear layers (its 2D
+            // split only changes the std path)
+            Scheduler::Lasp2 | Scheduler::Lasp2Overlap | Scheduler::Usp2d => {
                 let intra = PlanOp::Compute {
                     name: "intra",
                     flops: s.f_intra() + s.f_inter(),
@@ -333,6 +368,68 @@ pub fn build_plan(shape: &SimShape, sched: Scheduler, gather_splits: usize) -> P
                     });
                 }
             }
+            Scheduler::Ulysses => {
+                // seq->head All-to-All, full-depth chunkwise scan over the
+                // owned heads, All-to-All back.  Parallelism is capped by
+                // the head count: past W = H some ranks idle while loaded
+                // ranks run W/H times the per-head work (the Ulysses
+                // degree-of-parallelism ceiling).
+                let imb = (w as f64 / s.n_heads).max(1.0);
+                let a2a_fwd = s.qkv_bytes() + state;
+                let a2a_back = s.batch * s.chunk * s.n_heads * s.head_dim * 4.0;
+                let scan = PlanOp::Compute {
+                    name: "ulysses-scan",
+                    flops: (s.f_intra() + s.f_inter()) * imb,
+                };
+                for _ in 0..lin as usize {
+                    ops.push(part1.clone());
+                    ops.push(PlanOp::AllToAll { bytes_per_rank: a2a_fwd });
+                    ops.push(scan.clone());
+                    ops.push(PlanOp::AllToAll { bytes_per_rank: a2a_back });
+                    ops.push(epi.clone());
+                    // backward repartitions gradients the same two ways
+                    ops.push(PlanOp::AllToAll { bytes_per_rank: a2a_back });
+                    ops.push(PlanOp::AllToAll { bytes_per_rank: a2a_fwd });
+                    ops.push(PlanOp::Compute {
+                        name: "bwd",
+                        flops: bwd
+                            * (s.f_qkv()
+                                + s.f_state()
+                                + (s.f_intra() + s.f_inter()) * imb
+                                + s.f_epilogue()),
+                    });
+                }
+            }
+            Scheduler::Zeco => {
+                // LASP-1's relay chain, but fully hidden behind O_intra:
+                // the (W-1)-hop state pipeline rides a helper stream while
+                // every rank computes its intra block (ZeCO's zero
+                // communication overhead — when intra is long enough).
+                let relay = PlanOp::Sequential {
+                    hops: w - 1,
+                    per_hop_flops: s.f_state() / s.chunk,
+                    bytes: state,
+                };
+                for _ in 0..lin as usize {
+                    ops.push(part1.clone());
+                    ops.push(PlanOp::Overlap {
+                        a: vec![relay.clone()],
+                        b: vec![PlanOp::Compute { name: "intra", flops: s.f_intra() }],
+                    });
+                    ops.push(PlanOp::Compute { name: "inter", flops: s.f_inter() });
+                    ops.push(epi.clone());
+                    // backward: reverse relay overlapped with the chunk grad
+                    ops.push(PlanOp::Overlap {
+                        a: vec![relay.clone()],
+                        b: vec![PlanOp::Compute {
+                            name: "bwd",
+                            flops: bwd
+                                * (s.f_qkv() + s.f_state() + s.f_intra()
+                                    + s.f_inter() + s.f_epilogue()),
+                        }],
+                    });
+                }
+            }
         }
     }
 
@@ -340,8 +437,21 @@ pub fn build_plan(shape: &SimShape, sched: Scheduler, gather_splits: usize) -> P
     let std_l = s.n_std_layers;
     if std_l > 0.0 {
         let kv = s.batch * s.chunk * s.n_heads * s.head_dim * 2.0 * 4.0;
+        // USP mesh factorization W = R rows x U cols (row = All-to-All dim)
+        let u = s.usp_cols.clamp(1, w);
+        let r = (w / u).max(1);
         for _ in 0..std_l as usize {
             ops.push(PlanOp::Compute { name: "s_part1", flops: s.f_qkv() });
+            // attention flops per scheduler (head imbalance caps Ulysses)
+            let attn_flops = match sched {
+                Scheduler::Ulysses => {
+                    s.f_std_attn_full() * (w as f64 / s.n_heads).max(1.0)
+                }
+                Scheduler::Usp2d => {
+                    s.f_std_attn_full() * (u as f64 / s.n_heads).max(1.0)
+                }
+                _ => s.f_std_attn_full(),
+            };
             match sched {
                 Scheduler::RingAttention => {
                     for _ in 0..w - 1 {
@@ -358,20 +468,61 @@ pub fn build_plan(shape: &SimShape, sched: Scheduler, gather_splits: usize) -> P
                         flops: s.f_std_attn_block(),
                     });
                 }
+                Scheduler::Ulysses => {
+                    // seq->head on q/k/v, full attention, head->seq on out
+                    ops.push(PlanOp::AllToAll { bytes_per_rank: 1.5 * kv });
+                    ops.push(PlanOp::Compute { name: "ulysses-attn", flops: attn_flops });
+                    ops.push(PlanOp::AllToAll { bytes_per_rank: 0.5 * kv });
+                }
+                Scheduler::Usp2d => {
+                    // row All-to-All (U ranks, intra-node at U <= 8), then a
+                    // column AllGather over only R = W/U ranks — the USP
+                    // saving vs a full-world (W-1)-factor gather
+                    ops.push(PlanOp::Grouped {
+                        group: u,
+                        ops: vec![PlanOp::AllToAll { bytes_per_rank: 1.5 * kv }],
+                    });
+                    ops.push(PlanOp::Grouped {
+                        group: r,
+                        ops: vec![PlanOp::AllGather { bytes_per_rank: kv }],
+                    });
+                    ops.push(PlanOp::Compute { name: "usp-attn", flops: attn_flops });
+                    ops.push(PlanOp::Grouped {
+                        group: u,
+                        ops: vec![PlanOp::AllToAll { bytes_per_rank: 0.5 * kv }],
+                    });
+                }
                 _ => {
                     ops.push(PlanOp::AllGather { bytes_per_rank: kv });
-                    ops.push(PlanOp::Compute {
-                        name: "flash",
-                        flops: s.f_std_attn_full(),
-                    });
+                    ops.push(PlanOp::Compute { name: "flash", flops: attn_flops });
                 }
             }
             ops.push(PlanOp::Compute { name: "epilogue", flops: s.f_epilogue() });
-            // backward
-            ops.push(PlanOp::AllGather { bytes_per_rank: kv });
+            // backward: comm mirrors the forward repartition
+            match sched {
+                Scheduler::Ulysses => {
+                    ops.push(PlanOp::AllToAll { bytes_per_rank: 0.5 * kv });
+                    ops.push(PlanOp::AllToAll { bytes_per_rank: 1.5 * kv });
+                }
+                Scheduler::Usp2d => {
+                    ops.push(PlanOp::Grouped {
+                        group: u,
+                        ops: vec![PlanOp::AllToAll { bytes_per_rank: 0.5 * kv }],
+                    });
+                    ops.push(PlanOp::Grouped {
+                        group: r,
+                        ops: vec![PlanOp::AllGather { bytes_per_rank: kv }],
+                    });
+                    ops.push(PlanOp::Grouped {
+                        group: u,
+                        ops: vec![PlanOp::AllToAll { bytes_per_rank: 1.5 * kv }],
+                    });
+                }
+                _ => ops.push(PlanOp::AllGather { bytes_per_rank: kv }),
+            }
             ops.push(PlanOp::Compute {
                 name: "bwd",
-                flops: bwd * (s.f_qkv() + s.f_std_attn_full() + s.f_epilogue()),
+                flops: bwd * (s.f_qkv() + attn_flops + s.f_epilogue()),
             });
         }
     }
@@ -383,7 +534,7 @@ pub fn build_plan(shape: &SimShape, sched: Scheduler, gather_splits: usize) -> P
     let layers = lin + std_l;
     let mut mem = s.mem_weights() + layers * s.mem_activations_per_layer();
     match sched {
-        Scheduler::Lasp2 | Scheduler::Lasp2Overlap | Scheduler::Lasp1 => {
+        Scheduler::Lasp2 | Scheduler::Lasp2Overlap | Scheduler::Lasp1 | Scheduler::Zeco => {
             // cached M_{1:t} per linear layer ("HBM cache" note, Sec. 3.1)
             mem += lin * s.state_bytes() * (w as f64).min(2.0);
         }
@@ -393,6 +544,24 @@ pub fn build_plan(shape: &SimShape, sched: Scheduler, gather_splits: usize) -> P
         }
         Scheduler::RingAttention => {
             mem += 3.0 * s.kv_bytes();
+        }
+        Scheduler::Ulysses => {
+            // state cache plus the repartitioned full-sequence activations
+            // for the owned heads (transient; grows as W/H past W = H)
+            let imb = (w as f64 / s.n_heads).max(1.0);
+            let kvb = s.batch * s.chunk * s.n_heads * s.head_dim * 2.0 * 4.0;
+            mem += lin * s.state_bytes() * (w as f64).min(2.0);
+            mem += lin.min(1.0) * s.qkv_bytes() * imb;
+            mem += std_l.min(1.0) * 1.5 * kvb * imb;
+        }
+        Scheduler::Usp2d => {
+            // linear path is LASP-2; std path holds the column-gathered
+            // full-sequence K/V for the owned heads (R x the row segment)
+            let u = s.usp_cols.clamp(1, w);
+            let r = (w / u).max(1);
+            let kvb = s.batch * s.chunk * s.n_heads * s.head_dim * 2.0 * 4.0;
+            mem += lin * s.state_bytes() * (w as f64).min(2.0);
+            mem += std_l.min(1.0) * kvb * r as f64;
         }
     }
     Plan { ops, mem_bytes: mem }
@@ -463,6 +632,7 @@ mod tests {
             batch: 16.0,
             world: 64,
             chunk: 1024.0,
+            usp_cols: 8,
         };
         let elems = s.state_bytes() / 4.0;
         assert!((elems - 1.07e9).abs() / 1.07e9 < 0.01, "{elems}");

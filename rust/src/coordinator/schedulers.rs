@@ -9,6 +9,13 @@
 //! | LASP-1         | ring P2P on M             | W-1 sequential hops      |
 //! | Ring Attention | ring P2P on (K_t, V_t)    | W-1 hops (pipelined)     |
 //! | Megatron-SP    | AllGather on (K, V)       | 1 collective, O(N) bytes |
+//! | Ulysses        | All-to-All seq<->head     | 2 collectives, O(C) each |
+//! | ZeCO-style     | ring P2P on M, hidden     | W-1 hops (overlapped)    |
+//! | USP-2D         | row A2A + column AllGather| 3 collectives (std path) |
+//!
+//! See `docs/SCHEDULERS.md` — the scheduler atlas — for per-scheduler
+//! bytes-on-wire formulas, the overlap story, hybrid-layer roles, and the
+//! SIM crossover table (who wins at which world size / sequence length).
 //!
 //! All functions return the layer output chunk y_t and (for the linear
 //! ones) leave behind the forward state cache needed by the backward pass
@@ -254,6 +261,263 @@ pub fn lasp1_linear_layer(
     Ok(LinearLayerOut { y, cache })
 }
 
+// ------------------------------------------------------------ head sharding
+/// Balanced contiguous split of `hh` heads over `parts` ranks: rank j gets
+/// `(start, count)` with counts differing by at most one (the first
+/// `hh % parts` ranks get the extra head; trailing ranks may get zero).
+/// Zero-head ranks still join every collective with zero-width tensors so
+/// the SPMD communication schedule stays uniform.
+pub fn head_partition(hh: usize, parts: usize) -> Vec<(usize, usize)> {
+    let base = hh / parts;
+    let rem = hh % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for j in 0..parts {
+        let n = base + usize::from(j < rem);
+        out.push((start, n));
+        start += n;
+    }
+    out
+}
+
+/// Slice heads `[start, start+count)` out of a `[C, H, K]` tensor (axis 1).
+fn slice_heads_mid(t: &Tensor, start: usize, count: usize) -> Tensor {
+    let (c, hh, k) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+    debug_assert!(start + count <= hh);
+    let mut out = Tensor::zeros(&[c, count, k]);
+    for i in 0..c {
+        out.data_mut()[i * count * k..(i + 1) * count * k]
+            .copy_from_slice(&t.data()[(i * hh + start) * k..(i * hh + start + count) * k]);
+    }
+    out
+}
+
+/// Slice heads `[start, start+count)` out of a `[H, ...]` tensor (axis 0).
+fn slice_heads0(t: &Tensor, start: usize, count: usize) -> Tensor {
+    let stride: usize = t.shape()[1..].iter().product();
+    let mut shape = t.shape().to_vec();
+    shape[0] = count;
+    Tensor::new(shape, t.data()[start * stride..(start + count) * stride].to_vec())
+}
+
+/// Concatenate `[C, h_j, K]` head slices back into `[C, sum h_j, K]`
+/// (inverse of `slice_heads_mid`, rank order).
+fn concat_heads_mid(parts: &[Tensor]) -> Tensor {
+    let c = parts[0].shape()[0];
+    let k = parts[0].shape()[2];
+    let hh: usize = parts.iter().map(|p| p.shape()[1]).sum();
+    let mut out = Tensor::zeros(&[c, hh, k]);
+    let mut off = 0;
+    for p in parts {
+        let ph = p.shape()[1];
+        for i in 0..c {
+            out.data_mut()[(i * hh + off) * k..(i * hh + off + ph) * k]
+                .copy_from_slice(&p.data()[i * ph * k..(i + 1) * ph * k]);
+        }
+        off += ph;
+    }
+    out
+}
+
+/// DeepSpeed-Ulysses (arXiv:2309.14509) applied to a LINEAR layer: an
+/// All-to-All repartitions the folded q~/k~/v and chunk states from
+/// sequence-parallel `[C, H, fk]` to head-parallel `[W*C, hl, fk]`, each
+/// rank runs the full-depth chunkwise scan (Alg. 2's intra + gated-prefix
+/// inter, `l_chunk_hs_*`) over its owned heads, and a second All-to-All
+/// returns the outputs to sequence layout.  Per-head math is bit-identical
+/// to `lasp2_linear_layer`; wire bytes scale with C (not N) like LASP-2,
+/// but two collectives instead of one and head-count-limited parallelism.
+pub fn ulysses_linear_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+    masked: bool,
+) -> Result<LinearLayerOut> {
+    let variant = run.variant;
+    if !masked {
+        bail!("ulysses linear path is defined for the masked (causal) case");
+    }
+    let (qt, kt, v, m, a) = part1(engine, variant, layer, params, &x)?;
+    let w = comm.size();
+    let rank = comm.rank();
+    let (c, dh) = (engine.model.chunk_len, engine.model.head_dim);
+    let parts = head_partition(engine.model.n_heads, w);
+
+    // seq -> head repartition: destination j gets our chunk's slice of its
+    // owned heads (q~, k~, v per token; M_t, a_t per chunk)
+    let msgs: Vec<Vec<Tensor>> = parts
+        .iter()
+        .map(|&(s, n)| {
+            vec![
+                slice_heads_mid(&qt, s, n),
+                slice_heads_mid(&kt, s, n),
+                slice_heads_mid(&v, s, n),
+                slice_heads0(&m, s, n),
+                slice_heads0(&a, s, n),
+            ]
+        })
+        .collect();
+    let recv = comm.all_to_all(msgs);
+
+    let my_heads = parts[rank].1;
+    let o_full = if my_heads == 0 {
+        // no heads landed here; contribute zero-width chunks to the return
+        Tensor::zeros(&[w * c, 0, dh])
+    } else {
+        let col = |i: usize| Tensor::cat0(&recv.iter().map(|g| g[i].clone()).collect::<Vec<_>>());
+        let exe = engine.artifact(&format!(
+            "l_chunk_hs_{}_T{w}_H{my_heads}",
+            variant.name()
+        ))?;
+        exe.run1(&[
+            col(0).into(),
+            col(1).into(),
+            col(2).into(),
+            col(3).into(),
+            col(4).into(),
+        ])?
+    };
+
+    // head -> seq repartition: chunk t of the output goes back to rank t
+    let back = comm.all_to_all(o_full.chunk0(w).into_iter().map(|t| vec![t]).collect());
+    let attn = concat_heads_mid(&back.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
+    let post = engine.artifact("post_attn")?;
+    let mut ins: Vec<Value> = vec![x.into(), attn.into()];
+    ins.extend(params.epilogue(engine, layer)?);
+    Ok(LinearLayerOut { y: post.run1(&ins)?, cache: None })
+}
+
+/// DeepSpeed-Ulysses on a STANDARD softmax layer: All-to-All to
+/// head-parallel layout, full causal attention over the whole sequence for
+/// the owned heads (`s_attn_hs_*`), All-to-All back before the head-mixing
+/// output projection in `post_attn`.
+pub fn ulysses_std_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+) -> Result<Tensor> {
+    let m = &engine.model;
+    let (c, dh) = (m.chunk_len, m.head_dim);
+    let w = comm.size();
+    let rank = comm.rank();
+    let p1 = engine.artifact("s_part1")?;
+    let mut o = p1.run(&[
+        Value::F32(x.clone()),
+        params.layer_value(engine, layer, "ln1")?,
+        params.layer_value(engine, layer, "wq")?,
+        params.layer_value(engine, layer, "wk")?,
+        params.layer_value(engine, layer, "wv")?,
+    ])?;
+    let v = o.pop().unwrap();
+    let k = o.pop().unwrap();
+    let q = o.pop().unwrap();
+
+    let parts = head_partition(m.n_heads, w);
+    let msgs: Vec<Vec<Tensor>> = parts
+        .iter()
+        .map(|&(s, n)| {
+            vec![
+                slice_heads_mid(&q, s, n),
+                slice_heads_mid(&k, s, n),
+                slice_heads_mid(&v, s, n),
+            ]
+        })
+        .collect();
+    let recv = comm.all_to_all(msgs);
+
+    let my_heads = parts[rank].1;
+    let o_full = if my_heads == 0 {
+        Tensor::zeros(&[w * c, 0, dh])
+    } else {
+        let col = |i: usize| Tensor::cat0(&recv.iter().map(|g| g[i].clone()).collect::<Vec<_>>());
+        let n = w * c;
+        let exe = engine.artifact(&format!("s_attn_hs_Q{n}_N{n}_H{my_heads}"))?;
+        exe.run1(&[
+            col(0).into(),
+            col(1).into(),
+            col(2).into(),
+            Value::i32_scalar(0),
+        ])?
+    };
+
+    let back = comm.all_to_all(o_full.chunk0(w).into_iter().map(|t| vec![t]).collect());
+    let attn = concat_heads_mid(&back.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
+    let post = engine.artifact("post_attn")?;
+    let mut ins: Vec<Value> = vec![x.into(), attn.into()];
+    ins.extend(params.epilogue(engine, layer)?);
+    post.run1(&ins)
+}
+
+/// ZeCO-style schedule (arXiv:2507.01004): LASP-1's sequential state relay,
+/// but the P2P chain runs on a helper thread CONCURRENTLY with this rank's
+/// O_intra — zero communication overhead whenever the intra-chunk compute
+/// is longer than one (recv, combine, send) hop.  The relayed math is
+/// identical to `lasp1_linear_layer`, so outputs match bit-for-bit.
+pub fn zeco_linear_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    run: &RunConfig,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+    keep_cache: bool,
+) -> Result<LinearLayerOut> {
+    let variant = run.variant;
+    let (qt, kt, v, m, a) = part1(engine, variant, layer, params, &x)?;
+    let rank = comm.rank();
+    let w = comm.size();
+    let comm2 = comm.clone();
+    let (m_prefix, o_intra) = std::thread::scope(|s| -> Result<(Tensor, Tensor)> {
+        // communication branch: the pipelined state relay (Alg. 6 lines
+        // 9-15), off the critical path
+        let scan = s.spawn(move || {
+            let m_prefix = if rank == 0 {
+                Tensor::zeros(m.shape())
+            } else {
+                comm2.recv(rank - 1).pop().unwrap()
+            };
+            if rank + 1 < w {
+                // M_{1:t} = a_t (x) M_{1:t-1} + M_t  (Eq. 9, gated)
+                let prev = ChunkState { m: m_prefix.clone(), a: Tensor::ones(a.shape()) };
+                let own = ChunkState { m, a };
+                let updated = crate::tensor::state_combine(&prev, &own);
+                comm2.send(rank + 1, vec![updated.m]);
+            }
+            m_prefix
+        });
+        // computation branch: O_intra overlaps the whole relay
+        let exe = engine.artifact(&format!("l_intra_{}", variant.name()))?;
+        let o_intra = exe.run1(&[
+            qt.clone().into(),
+            kt.clone().into(),
+            v.clone().into(),
+        ])?;
+        Ok((scan.join().expect("zeco relay thread"), o_intra))
+    })?;
+
+    let exe = engine.artifact(&format!("l_part2b_{}", variant.name()))?;
+    let cache = keep_cache.then(|| LinearFwdCache {
+        qt: qt.clone(),
+        kt,
+        v,
+        m_prefix: m_prefix.clone(),
+    });
+    let mut ins: Vec<Value> = vec![
+        x.into(),
+        qt.into(),
+        o_intra.into(),
+        m_prefix.into(),
+    ];
+    ins.extend(params.epilogue(engine, layer)?);
+    let y = exe.run1(&ins)?;
+    Ok(LinearLayerOut { y, cache })
+}
+
 /// Scale a [C, H, fk] tensor by a per-(head, feature) factor vector
 /// (len H*fk), broadcast over the chunk axis — folds an inter-chunk decay
 /// product into a locally-folded K~ chunk.
@@ -428,6 +692,15 @@ pub fn linear_layer(
         }
         Scheduler::RingAttention => ring_linear_layer(engine, comm, run, params, layer, x),
         Scheduler::MegatronSp => megatron_linear_layer(engine, comm, run, params, layer, x),
+        Scheduler::Ulysses => {
+            ulysses_linear_layer(engine, comm, run, params, layer, x, masked)
+        }
+        Scheduler::Zeco => zeco_linear_layer(engine, comm, run, params, layer, x, keep_cache),
+        // USP's 2D split only pays off on std layers; linear layers run the
+        // plain full-world LASP-2 AllGather (the LASP-2H hybrid recipe)
+        Scheduler::Usp2d => {
+            lasp2_linear_layer(engine, comm, run, params, layer, x, masked, keep_cache)
+        }
     }
 }
 
@@ -532,7 +805,95 @@ pub fn std_layer_ring(
     post.run1(&ins)
 }
 
-/// Dispatch one standard layer by scheduler (LASP-2H unifies on AllGather).
+/// USP-style 2D-mesh standard layer (arXiv:2405.07719): the world is an
+/// R x U mesh (`World::new_mesh`); a row All-to-All repartitions the row's
+/// contiguous U-chunk segment to head-parallel layout, a column AllGather
+/// assembles the full-sequence K/V for the owned heads (R-1 instead of W-1
+/// gather factors — the USP saving), full causal attention at the row's
+/// sequence offset, then the row All-to-All back.  Linear layers of the
+/// same run use plain full-world LASP-2.
+pub fn usp2d_std_layer(
+    engine: &Engine,
+    comm: &Communicator,
+    params: &super::Params,
+    layer: usize,
+    x: Tensor,
+) -> Result<Tensor> {
+    let row = match comm.row() {
+        Some(r) => r,
+        None => bail!("usp2d scheduler needs a mesh world (World::new_mesh / World::for_run)"),
+    };
+    let col = comm.col().expect("mesh world has columns");
+    let m = &engine.model;
+    let (c, dh) = (m.chunk_len, m.head_dim);
+    let u = row.size();
+    let w = u * col.size();
+    let row_idx = comm.rank() / u;
+    let p1 = engine.artifact("s_part1")?;
+    let mut o = p1.run(&[
+        Value::F32(x.clone()),
+        params.layer_value(engine, layer, "ln1")?,
+        params.layer_value(engine, layer, "wq")?,
+        params.layer_value(engine, layer, "wk")?,
+        params.layer_value(engine, layer, "wv")?,
+    ])?;
+    let v = o.pop().unwrap();
+    let k = o.pop().unwrap();
+    let q = o.pop().unwrap();
+
+    // Ulysses dimension: repartition heads within the row's segment
+    let parts = head_partition(m.n_heads, u);
+    let msgs: Vec<Vec<Tensor>> = parts
+        .iter()
+        .map(|&(s, n)| {
+            vec![
+                slice_heads_mid(&q, s, n),
+                slice_heads_mid(&k, s, n),
+                slice_heads_mid(&v, s, n),
+            ]
+        })
+        .collect();
+    let recv = row.all_to_all(msgs);
+
+    // every member of a column shares row.rank(), hence the same head
+    // count — zero-head columns skip the gather together (no deadlock)
+    let my_heads = parts[row.rank()].1;
+    let o_seg = if my_heads == 0 {
+        Tensor::zeros(&[u * c, 0, dh])
+    } else {
+        let col_of = |i: usize| {
+            Tensor::cat0(&recv.iter().map(|g| g[i].clone()).collect::<Vec<_>>())
+        };
+        let q_seg = col_of(0);
+        // ring dimension: gather K/V across rows (full sequence, hl heads)
+        let gathered = col.all_gather(vec![col_of(1), col_of(2)]);
+        let k_all =
+            Tensor::cat0(&gathered.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
+        let v_all =
+            Tensor::cat0(&gathered.iter().map(|g| g[1].clone()).collect::<Vec<_>>());
+        let exe = engine.artifact(&format!(
+            "s_attn_hs_Q{}_N{}_H{my_heads}",
+            u * c,
+            w * c
+        ))?;
+        exe.run1(&[
+            q_seg.into(),
+            k_all.into(),
+            v_all.into(),
+            Value::i32_scalar((row_idx * u * c) as i32),
+        ])?
+    };
+
+    let back = row.all_to_all(o_seg.chunk0(u).into_iter().map(|t| vec![t]).collect());
+    let attn = concat_heads_mid(&back.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
+    let post = engine.artifact("post_attn")?;
+    let mut ins: Vec<Value> = vec![x.into(), attn.into()];
+    ins.extend(params.epilogue(engine, layer)?);
+    post.run1(&ins)
+}
+
+/// Dispatch one standard layer by scheduler (LASP-2H unifies on AllGather;
+/// Ulysses/USP repartition to head parallelism instead — see the atlas).
 pub fn std_layer(
     engine: &Engine,
     comm: &Communicator,
@@ -543,6 +904,8 @@ pub fn std_layer(
 ) -> Result<Tensor> {
     match run.scheduler {
         Scheduler::RingAttention => std_layer_ring(engine, comm, params, layer, x),
+        Scheduler::Ulysses => ulysses_std_layer(engine, comm, params, layer, x),
+        Scheduler::Usp2d => usp2d_std_layer(engine, comm, params, layer, x),
         _ => std_layer_allgather(engine, comm, params, layer, x),
     }
 }

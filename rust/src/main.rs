@@ -79,8 +79,11 @@ USAGE: lasp2 <command> [--flags]
 
 COMMANDS
   run           distributed forward, verified against the monolithic oracle
-                  --preset tiny|small  --world N  --scheduler lasp2|lasp1|...
+                  --preset tiny|small  --world N
+                  --scheduler lasp2|lasp2-overlap|lasp1|ring|megatron-sp|
+                              ulysses|zeco|usp2d   (see docs/SCHEDULERS.md)
                   --variant basic|gla|...  --splits K
+                  --usp-cols C  (mesh columns for usp2d; must divide --world)
                   --strict  (error out if the verification oracle is missing)
   train         real training via the AOT train_step artifact
                   --preset tiny|small|medium  --variant basic --ratio 0|1/4
@@ -104,13 +107,17 @@ COMMANDS
   bench-kernels op-level GEMM GFLOP/s + train-step ms + decode tokens/s
                   --preset tiny|small  --steps N  --tokens N
                   --json BENCH_kernels.json
-  bench-all     all of the above; --json path.json writes the full
-                machine-readable kernel/train/decode/fig3 snapshot
+  bench-all     all of the above, plus the scheduler crossover table
+                (sim, W in {8,64,128}, N up to 2048K); --json path.json
+                writes the full machine-readable
+                kernel/train/decode/fig3/crossover snapshot
 
 Flags accept both `--key value` and `--key=value`.  `run`, `train`, and
 `generate` also take `--profile` to print the per-artifact execution time
 table after the run.  `LASP2_THREADS` controls compute-core threading
 (unset/0 = all cores, 1 = serial; outputs are bit-identical either way).
+The scheduler atlas in docs/SCHEDULERS.md explains which --scheduler to
+pick for a given world size, sequence length, and hybrid pattern.
 ";
 
 fn main() -> Result<()> {
@@ -247,6 +254,7 @@ fn cmd_decode_bench(args: &Args) -> Result<()> {
             train: None,
             decode: Some((preset.clone(), n, rows.clone())),
             fig3: None,
+            crossover: None,
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
@@ -319,6 +327,7 @@ fn cmd_bench_kernels(args: &Args) -> Result<()> {
             train: Some((preset.clone(), tag, step_ms, tps)),
             decode: Some((preset.clone(), n, rows)),
             fig3: None,
+            crossover: None,
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
@@ -346,6 +355,9 @@ fn cmd_bench_all(args: &Args) -> Result<()> {
     cmd_table4(args)?;
     println!("# Table 5\n\n{}", bench::table5_splits(&CostModel::default()).to_markdown());
     println!("# Table 6\n\n{}", bench::table6_scalability(&CostModel::default()).to_markdown());
+    println!("# Scheduler crossover sweep (sim; see docs/SCHEDULERS.md)\n");
+    let (xtable, xrows) = bench::crossover_table(&CostModel::default());
+    println!("{}", xtable.to_markdown());
     let (gt, gemm) = bench::gemm_bench();
     println!(
         "# Kernel-level GEMM throughput ({} threads)\n\n{}",
@@ -366,6 +378,7 @@ fn cmd_bench_all(args: &Args) -> Result<()> {
             train: Some((preset.clone(), tag, step_ms, tps)),
             decode: Some((preset, n, drows)),
             fig3: fig3_rows,
+            crossover: Some(xrows),
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
@@ -379,6 +392,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let scheduler = Scheduler::parse(&args.get("scheduler", "lasp2"))?;
     let variant = Variant::parse(&args.get("variant", "basic"))?;
     let splits = args.usize("splits", 1)?;
+    let cols = args.usize("usp-cols", 2)?;
     let strict = args.get("strict", "false") == "true";
     let engine = Engine::load_preset(&preset)?;
     let cfg = engine.model.clone();
@@ -389,6 +403,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         variant,
         pattern: pattern.clone(),
         gather_splits: splits,
+        usp_cols: cols,
         seed: 0,
     };
     let params = Params::randn(&cfg, variant, &pattern, 42);
@@ -397,7 +412,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!(
         "preset={preset} world={world_size} scheduler={scheduler} variant={variant} N={n}"
     );
-    let world = World::new(world_size);
+    // usp2d needs a 2D mesh world; every flat scheduler gets a plain one
+    let world = World::for_run(&run);
     let t0 = std::time::Instant::now();
     let logits = forward_distributed(&engine, &world, &run, &params, &tokens, true)?;
     let dt = t0.elapsed().as_secs_f64();

@@ -66,6 +66,7 @@ use anyhow::{Context, Result};
 use super::{ArtifactMeta, DType, Manifest, TensorMeta, Value};
 use crate::config::{ModelConfig, Pattern, Variant};
 use crate::coordinator::params::{param_specs, Init};
+use crate::coordinator::schedulers::head_partition;
 use crate::tensor::{gemm, par, prefix_states, scratch, state_combine, ChunkState, Tensor};
 
 /// Batch sizes the serving decode artifacts are registered for.  The
@@ -627,7 +628,7 @@ impl<'a> ParamView<'a> {
     }
 }
 
-/// x = emb[tokens] + pos[offset..offset+n] (embed at a global position).
+/// x = `emb[tokens]` + `pos[offset..offset+n]` (embed at a global position).
 fn embed_tokens(
     cfg: &ModelConfig,
     emb: &Tensor,
@@ -1726,6 +1727,115 @@ impl Registry {
                 )])
             }),
         );
+        // ---- Ulysses / USP head-sharded phases ----
+        // After an All-to-All repartition a rank owns `hl` heads of a
+        // longer span: the full sequence (Ulysses, row size = W) or a mesh
+        // row's segment (USP, row size u | W).  Register one kernel per
+        // (query len, gathered len, owned heads) combination reachable
+        // from `sp_world_sizes` and its divisors.
+        for &w in cfg.sp_world_sizes() {
+            let n_all = w * c;
+            for u in 1..=w {
+                if w % u != 0 {
+                    continue;
+                }
+                let qlen = u * c;
+                let mut hls: Vec<usize> = head_partition(hh, u)
+                    .into_iter()
+                    .map(|(_, n)| n)
+                    .filter(|&n| n > 0)
+                    .collect();
+                hls.sort_unstable();
+                hls.dedup();
+                for hl in hls {
+                    let name = format!("s_attn_hs_Q{qlen}_N{n_all}_H{hl}");
+                    if reg.metas.contains_key(&name) {
+                        continue;
+                    }
+                    reg.add(
+                        &name,
+                        vec![
+                            f32m("q", &[qlen, hl, dh]),
+                            f32m("k_all", &[n_all, hl, dh]),
+                            f32m("v_all", &[n_all, hl, dh]),
+                            i32m("offset", &[1]),
+                        ],
+                        vec![f32m("attn", &[qlen, hl, dh])],
+                        Arc::new(|_cfg: &ModelConfig, ins: &[Value]| {
+                            Ok(vec![softmax_attn_heads(
+                                ins[0].host_f32()?,
+                                ins[1].host_f32()?,
+                                ins[2].host_f32()?,
+                                ins[3].host_i32()?[0],
+                            )])
+                        }),
+                    );
+                }
+            }
+        }
+        // Ulysses linear path: the full-sequence chunkwise scan over the
+        // rank's owned heads — the same Alg. 2 recurrence LASP-2 evaluates
+        // after its AllGather (intra + inter with the exclusive gated
+        // prefix), run T = W chunks deep on one device, so it is
+        // bit-identical to `l_part2` per head.
+        for &variant in Variant::linear_variants() {
+            let v = variant.name();
+            let fk = cfg.feat_dim(variant);
+            for &w in cfg.sp_world_sizes() {
+                let mut hls: Vec<usize> = head_partition(hh, w)
+                    .into_iter()
+                    .map(|(_, n)| n)
+                    .filter(|&n| n > 0)
+                    .collect();
+                hls.sort_unstable();
+                hls.dedup();
+                for hl in hls {
+                    let name = format!("l_chunk_hs_{v}_T{w}_H{hl}");
+                    if reg.metas.contains_key(&name) {
+                        continue;
+                    }
+                    reg.add(
+                        &name,
+                        vec![
+                            f32m("qt", &[w * c, hl, fk]),
+                            f32m("kt", &[w * c, hl, fk]),
+                            f32m("v", &[w * c, hl, dh]),
+                            f32m("m", &[w * hl, fk, dh]),
+                            f32m("a", &[w * hl, fk]),
+                        ],
+                        vec![f32m("o", &[w * c, hl, dh])],
+                        Arc::new(|cfg: &ModelConfig, ins: &[Value]| {
+                            let qt = ins[0].host_f32()?;
+                            let kt = ins[1].host_f32()?;
+                            let v = ins[2].host_f32()?;
+                            let m = ins[3].host_f32()?;
+                            let a = ins[4].host_f32()?;
+                            let t_chunks = qt.shape()[0] / cfg.chunk_len;
+                            let qts = qt.chunk0(t_chunks);
+                            let kts = kt.chunk0(t_chunks);
+                            let vs = v.chunk0(t_chunks);
+                            let ms = m.chunk0(t_chunks);
+                            let as_ = a.chunk0(t_chunks);
+                            let mut prefix = ChunkState {
+                                m: Tensor::zeros(ms[0].shape()),
+                                a: Tensor::ones(as_[0].shape()),
+                            };
+                            let mut outs = Vec::with_capacity(t_chunks);
+                            for t in 0..t_chunks {
+                                let o = intra_heads(&qts[t], &kts[t], &vs[t])
+                                    .add(&inter_heads(&qts[t], &prefix.m));
+                                outs.push(o);
+                                prefix = state_combine(
+                                    &prefix,
+                                    &ChunkState { m: ms[t].clone(), a: as_[t].clone() },
+                                );
+                            }
+                            Ok(vec![Tensor::cat0(&outs)])
+                        }),
+                    );
+                }
+            }
+        }
         reg.add(
             "ring_linear_step",
             vec![
@@ -2671,6 +2781,12 @@ mod tests {
             "s_part2_T2",
             "s_part2_T4",
             "mega_attn_basic_T4",
+            // head-sharded surface for Ulysses (u = W) and USP rows (u | W)
+            "s_attn_hs_Q32_N128_H2",
+            "s_attn_hs_Q64_N128_H1",
+            "s_attn_hs_Q128_N128_H1",
+            "l_chunk_hs_basic_T4_H1",
+            "l_chunk_hs_gla_T2_H1",
             "post_attn",
             "ring_step",
             "ring_finalize",

@@ -83,6 +83,16 @@ impl CostModel {
     fn p2p_time(&self, bytes: f64, world: usize) -> f64 {
         self.alpha_p2p + bytes / self.beta(world)
     }
+
+    /// All-to-All / ReduceScatter: single launch; each rank keeps its own
+    /// 1/W slice, so only (W-1)/W of the payload crosses the wire.
+    fn a2a_time(&self, bytes_per_rank: f64, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        self.alpha_collective
+            + bytes_per_rank * (world as f64 - 1.0) / world as f64 / self.beta(world)
+    }
 }
 
 /// Result of simulating one configuration.
@@ -109,6 +119,17 @@ fn eval_ops(ops: &[PlanOp], cm: &CostModel, world: usize, comm: &mut f64, comp: 
                 let dt = cm.allgather_time(*bytes_per_rank, world);
                 *comm += dt;
                 t += dt;
+            }
+            PlanOp::AllToAll { bytes_per_rank }
+            | PlanOp::ReduceScatter { bytes_per_rank } => {
+                let dt = cm.a2a_time(*bytes_per_rank, world);
+                *comm += dt;
+                t += dt;
+            }
+            PlanOp::Grouped { group, ops } => {
+                // collectives inside a mesh sub-group see the GROUP's size
+                // and bandwidth tier (a row of <= 8 stays on NVSwitch)
+                t += eval_ops(ops, cm, *group, comm, comp);
             }
             PlanOp::P2pHop { bytes } => {
                 let dt = cm.p2p_time(*bytes, world);

@@ -54,6 +54,7 @@ fn cost_analysis_state_size_example() {
         batch: 16.0,
         world: 64,
         chunk: 1024.0,
+        usp_cols: 8,
     };
     let elems = s.state_bytes() / 4.0;
     let fp16_gb = elems * 2.0 / 1e9;

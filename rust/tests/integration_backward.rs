@@ -108,6 +108,7 @@ fn lasp2_distributed_backward_matches_serial() {
         variant: Variant::Basic,
         pattern: Pattern("L".into()),
         gather_splits: 1,
+        usp_cols: 2,
         seed: 0,
     };
     let world = World::new(w);
@@ -166,6 +167,7 @@ fn backward_split_gather_is_exact() {
         variant: Variant::Basic,
         pattern: Pattern("L".into()),
         gather_splits: 8,
+        usp_cols: 2,
         seed: 0,
     };
     let world = World::new(w);

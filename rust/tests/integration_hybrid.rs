@@ -34,6 +34,7 @@ fn lasp2h_hybrid_matches_mono() {
         variant: Variant::Basic,
         pattern: pattern.clone(),
         gather_splits: 1,
+        usp_cols: 2,
         seed: 0,
     };
     let params = Params::randn(&cfg, Variant::Basic, &pattern, 21);
@@ -62,6 +63,7 @@ fn lasp2h_hybrid_overlap_matches_mono() {
         variant: Variant::Basic,
         pattern: pattern.clone(),
         gather_splits: 1,
+        usp_cols: 2,
         seed: 0,
     };
     let params = Params::randn(&cfg, Variant::Basic, &pattern, 22);
@@ -86,6 +88,7 @@ fn std_only_model_allgather_cp_matches_mono() {
         variant: Variant::Basic,
         pattern: pattern.clone(),
         gather_splits: 1,
+        usp_cols: 2,
         seed: 0,
     };
     let params = Params::randn(&cfg, Variant::Basic, &pattern, 23);
@@ -112,6 +115,7 @@ fn std_only_model_ring_matches_mono() {
         variant: Variant::Basic,
         pattern: pattern.clone(),
         gather_splits: 1,
+        usp_cols: 2,
         seed: 0,
     };
     let params = Params::randn(&cfg, Variant::Basic, &pattern, 23);
@@ -144,6 +148,7 @@ fn hybrid_kv_gather_moves_more_bytes_than_state_gather() {
             variant: Variant::Basic,
             pattern: pattern.clone(),
             gather_splits: 1,
+            usp_cols: 2,
             seed: 0,
         };
         let params = Params::randn(&cfg, Variant::Basic, &pattern, 2);

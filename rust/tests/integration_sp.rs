@@ -29,6 +29,7 @@ fn run_config(sched: Scheduler, variant: Variant, layers: usize) -> RunConfig {
         variant,
         pattern: Pattern("L".repeat(layers)),
         gather_splits: 1,
+        usp_cols: 2,
         seed: 0,
     }
 }
@@ -123,10 +124,11 @@ fn scheduler_equivalence_at_world_two() {
 #[test]
 fn all_schedulers_agree_pairwise_and_with_oracle_w4() {
     // Native-backend parity gate: LASP-2 / LASP-2(overlap) / LASP-1 /
-    // Ring Attention / Megatron-SP must produce identical logits on the
-    // tiny shape at W=4, and all must match the single-device oracle —
-    // for the basic variant AND a decay-gated one (gla), whose per-chunk
-    // carry `a` exercises the gated prefix-combine on every scheduler.
+    // Ring Attention / Megatron-SP / Ulysses / ZeCO / USP-2D must produce
+    // identical logits on the tiny shape at W=4, and all must match the
+    // single-device oracle — for the basic variant AND a decay-gated one
+    // (gla), whose per-chunk carry `a` exercises the gated prefix-combine
+    // on every scheduler.
     let e = engine();
     let cfg = e.model.clone();
     for variant in [Variant::Basic, Variant::Gla] {
@@ -142,11 +144,15 @@ fn all_schedulers_agree_pairwise_and_with_oracle_w4() {
             Scheduler::Lasp1,
             Scheduler::RingAttention,
             Scheduler::MegatronSp,
+            Scheduler::Ulysses,
+            Scheduler::Zeco,
+            Scheduler::Usp2d,
         ];
         let mut results = Vec::new();
         for sched in schedulers {
             run.scheduler = sched;
-            let world = World::new(run.world);
+            // usp2d gets a 2x2 mesh from for_run; everyone else flat W=4
+            let world = World::for_run(&run);
             let got = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
             let err = got.max_rel_err(&want);
             assert!(err < TOL, "{sched} {variant} vs oracle: {err}");
@@ -155,6 +161,36 @@ fn all_schedulers_agree_pairwise_and_with_oracle_w4() {
         for (sched, got) in schedulers.iter().zip(&results).skip(1) {
             assert!(got.allclose(&results[0], 1e-4), "{sched} {variant} vs lasp2");
         }
+    }
+}
+
+#[test]
+fn new_schedulers_match_mono_on_hybrid_pattern_w4() {
+    // The 2D mesh only pays off on hybrid models (its linear path IS
+    // LASP-2); Ulysses repartitions both layer kinds.  Gate all three new
+    // schedulers on the tiny "LN" hybrid against the monolithic oracle.
+    let e = engine();
+    let cfg = e.model.clone();
+    let pattern = Pattern::from_ratio(cfg.n_layers, "1/2").unwrap();
+    assert_eq!(pattern.0, "LN");
+    let mut run = run_config(Scheduler::Lasp2, Variant::Basic, cfg.n_layers);
+    run.pattern = pattern.clone();
+    let params = Params::randn(&cfg, Variant::Basic, &pattern, 23);
+    let n = run.world * cfg.chunk_len;
+    let toks = tokens(n, cfg.vocab);
+    let want = forward_mono(&e, &format!("forward_mono_basic_h2_N{n}"), &params, &toks)
+        .unwrap();
+    for sched in [
+        Scheduler::Lasp2,
+        Scheduler::Ulysses,
+        Scheduler::Zeco,
+        Scheduler::Usp2d,
+    ] {
+        run.scheduler = sched;
+        let world = World::for_run(&run);
+        let got = forward_distributed(&e, &world, &run, &params, &toks, true).unwrap();
+        let err = got.max_rel_err(&want);
+        assert!(err < TOL, "{sched} hybrid LN vs oracle: {err}");
     }
 }
 
@@ -210,6 +246,7 @@ fn lasp2_gather_bytes_are_state_sized() {
         variant: Variant::Basic,
         pattern: pattern.clone(),
         gather_splits: 1,
+        usp_cols: 2,
         seed: 0,
     };
     let params = Params::randn(&cfg, Variant::Basic, &pattern, 2);
