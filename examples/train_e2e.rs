@@ -1,7 +1,7 @@
 //! End-to-end training driver (the repo's required full-system proof):
-//! trains a Linear-Llama3 model through the `train_step` artifact (full
-//! forward + backward + Adam) on the synthetic corpus, and logs the loss
-//! curve to CSV.
+//! trains a Linear-Llama3 model through the distributed driver (grad_step
+//! artifact + sharded AdamW; W=1 replicated here) on the synthetic corpus,
+//! and logs the loss curve to CSV.
 //!
 //!     cargo run --release --example train_e2e -- [preset] [steps] [variant]
 //!
@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         mlm: false,
         log_every: 10,
         csv: Some(csv.clone()),
+        ..Default::default()
     };
     let rep = train(&engine, variant, &pattern, &tag, &opts)?;
     println!("\n=== end-to-end training report ===");

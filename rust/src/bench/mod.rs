@@ -20,7 +20,7 @@ use crate::coordinator::{forward_distributed, Params};
 use crate::metrics::{fmt_seq, Table};
 use crate::runtime::Engine;
 use crate::serve::{argmax, Model};
-use crate::sim::{simulate, CostModel};
+use crate::sim::{simulate, zero_shard, CostModel};
 use crate::coordinator::plan::SimShape;
 use crate::tensor::Tensor;
 use crate::train::{train, TrainOpts};
@@ -517,6 +517,50 @@ pub fn train_step_bench(engine: &Arc<Engine>, steps: usize) -> Result<(String, f
     Ok((tag, step_ms, rep.tokens_per_sec))
 }
 
+/// One row of the ZeRO sharding table (machine-readable mirror of
+/// `zero_sharding_table`).
+pub struct ZeroRow {
+    pub world: usize,
+    pub params: f64,
+    pub opt_replicated: f64,
+    pub opt_sharded: f64,
+    pub wire_bytes: f64,
+    pub comm_ms: f64,
+}
+
+/// Replicated-vs-ZeRO optimizer memory and wire bytes per rank at the
+/// paper's Fig.-3 anchor shape (Llama3-1B-linear, 2048K tokens), costed on
+/// the α–β model at W ∈ {1, 4, 64}.  W=4 is the size the bit-parity tests
+/// run for real; W=64 is the paper-scale extrapolation.
+pub fn zero_sharding_table(cm: &CostModel) -> (Table, Vec<ZeroRow>) {
+    let p = SimShape::linear_llama3_1b(64, 2048 * 1024, 1).param_count();
+    let gb = 1e9;
+    let mut t = Table::new(&[
+        "world", "opt GB/rank (replicated)", "opt GB/rank (ZeRO)",
+        "wire GB/rank/step", "comm ms/step",
+    ]);
+    let mut rows = Vec::new();
+    for w in [1usize, 4, 64] {
+        let z = zero_shard(p, w, cm);
+        t.row(&[
+            w.to_string(),
+            format!("{:.2}", z.opt_bytes_replicated / gb),
+            format!("{:.3}", z.opt_bytes_sharded / gb),
+            format!("{:.2}", z.wire_bytes_per_rank / gb),
+            format!("{:.1}", z.comm_time * 1e3),
+        ]);
+        rows.push(ZeroRow {
+            world: w,
+            params: p,
+            opt_replicated: z.opt_bytes_replicated,
+            opt_sharded: z.opt_bytes_sharded,
+            wire_bytes: z.wire_bytes_per_rank,
+            comm_ms: z.comm_time * 1e3,
+        });
+    }
+    (t, rows)
+}
+
 /// The machine-readable benchmark snapshot `lasp2 bench-all --json` /
 /// `bench-kernels --json` writes (committed as BENCH_kernels.json so the
 /// repo's perf trajectory is tracked PR over PR).  Hand-rolled writer —
@@ -533,6 +577,8 @@ pub struct KernelsReport {
     pub fig3: Option<(String, usize, Vec<(String, f64)>)>,
     /// simulated scheduler crossover sweep (`crossover_table`)
     pub crossover: Option<Vec<CrossoverRow>>,
+    /// ZeRO replicated-vs-sharded memory/wire rows (`zero_sharding_table`)
+    pub zero: Option<Vec<ZeroRow>>,
 }
 
 impl KernelsReport {
@@ -604,6 +650,24 @@ impl KernelsReport {
                     }
                 }
                 s.push_str(&format!("}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
+            }
+            s.push_str("  ]");
+        }
+        if let Some(rows) = &self.zero {
+            s.push_str(",\n  \"zero\": [\n");
+            for (i, r) in rows.iter().enumerate() {
+                s.push_str(&format!(
+                    "    {{\"world\": {}, \"params\": {:.0}, \
+                     \"opt_bytes_replicated\": {:.0}, \"opt_bytes_sharded\": {:.0}, \
+                     \"wire_bytes_per_rank\": {:.0}, \"comm_ms\": {:.3}}}{}\n",
+                    r.world,
+                    r.params,
+                    r.opt_replicated,
+                    r.opt_sharded,
+                    r.wire_bytes,
+                    r.comm_ms,
+                    if i + 1 < rows.len() { "," } else { "" }
+                ));
             }
             s.push_str("  ]");
         }

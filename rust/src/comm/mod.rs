@@ -661,6 +661,33 @@ mod tests {
     }
 
     #[test]
+    fn reduce_scatter_matches_allgather_then_slice() {
+        // semantic contract the ZeRO optimizer leans on: reduce_scatter ==
+        // all_gather everything, sum in RANK ORDER (0..W-1, starting from
+        // rank 0's tensor), then keep your own axis-0 slice — bit-exact,
+        // on random tensors, at both world sizes the driver tests use.
+        for size in [2usize, 4] {
+            let w = World::new(size);
+            let got = w.run(|c| {
+                let x = Tensor::randn(&[2 * c.size(), 3], 77 + c.rank() as u64);
+                let rs = c.reduce_scatter(vec![x.clone()]);
+                let all = c.all_gather(vec![x]);
+                let mut sum = all[0][0].clone();
+                for m in &all[1..] {
+                    sum.add_assign(&m[0]);
+                }
+                (rs, slice0(&sum, c.size(), c.rank()))
+            });
+            for (r, (rs, want)) in got.iter().enumerate() {
+                assert_eq!(rs[0].shape(), want.shape(), "W={size} rank {r}");
+                for (a, b) in rs[0].data().iter().zip(want.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "W={size} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn mesh_row_col_groups_are_orthogonal() {
         // 2x2 mesh: rows {0,1},{2,3}; cols {0,2},{1,3}.
         let w = World::new_mesh(2, 2);

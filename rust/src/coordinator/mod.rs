@@ -12,7 +12,7 @@ pub mod pipeline;
 pub mod plan;
 pub mod schedulers;
 
-pub use params::{param_specs, Params};
+pub use params::{param_specs, FlatLayout, Params};
 pub use pipeline::{forward_distributed, forward_mono, forward_rank};
 pub use schedulers::{
     lasp1_attention_backward, lasp2_attention_backward, LinearFwdCache,

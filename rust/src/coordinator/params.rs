@@ -62,6 +62,94 @@ pub fn param_specs(
     specs
 }
 
+/// Flat f32 address space over a `param_specs` list: every parameter
+/// tensor occupies a contiguous [offset, offset+len) range, in spec order.
+/// This is the space the ZeRO-sharded optimizer shards — rank r owns rows
+/// [r*S, (r+1)*S) of the zero-padded length `padded(world)`, so shard
+/// boundaries may fall inside a tensor (exactly like real ZeRO-1 on a
+/// flattened grad bucket).
+pub struct FlatLayout {
+    shapes: Vec<Vec<usize>>,
+    offsets: Vec<usize>,
+    total: usize,
+    /// per-spec weight-decay flag (AdamW skips norm gains/biases, i.e.
+    /// every Ones/Zeros-initialized spec)
+    decay: Vec<bool>,
+}
+
+impl FlatLayout {
+    pub fn new(specs: &[(String, Vec<usize>, Init)]) -> FlatLayout {
+        let mut offsets = Vec::with_capacity(specs.len());
+        let mut shapes = Vec::with_capacity(specs.len());
+        let mut decay = Vec::with_capacity(specs.len());
+        let mut off = 0usize;
+        for (_, shape, init) in specs {
+            offsets.push(off);
+            off += shape.iter().product::<usize>();
+            shapes.push(shape.clone());
+            decay.push(!matches!(init, Init::Ones | Init::Zeros));
+        }
+        FlatLayout { shapes, offsets, total: off, decay }
+    }
+
+    /// Total number of parameter elements.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Length padded up to a multiple of `world` (shards must be equal).
+    pub fn padded(&self, world: usize) -> usize {
+        self.total.div_ceil(world.max(1)) * world.max(1)
+    }
+
+    /// Pack spec-ordered tensors into one flat vector of length `pad`
+    /// (>= `total()`; the tail is zero — padding never carries signal).
+    pub fn flatten(&self, tensors: &[Tensor], pad: usize) -> Vec<f32> {
+        assert_eq!(tensors.len(), self.shapes.len());
+        assert!(pad >= self.total);
+        let mut out = vec![0.0f32; pad];
+        for (i, t) in tensors.iter().enumerate() {
+            debug_assert_eq!(t.shape(), self.shapes[i].as_slice());
+            let off = self.offsets[i];
+            out[off..off + t.len()].copy_from_slice(t.data());
+        }
+        out
+    }
+
+    /// Split a flat vector (length >= `total()`) back into spec-ordered
+    /// tensors; padding beyond `total()` is ignored.
+    pub fn unflatten(&self, flat: &[f32]) -> Vec<Tensor> {
+        assert!(flat.len() >= self.total);
+        self.shapes
+            .iter()
+            .zip(&self.offsets)
+            .map(|(shape, &off)| {
+                let len: usize = shape.iter().product();
+                Tensor::new(shape.clone(), flat[off..off + len].to_vec())
+            })
+            .collect()
+    }
+
+    /// Per-element AdamW decay coefficient over `[lo, hi)` of the padded
+    /// flat space: `wd` on decayed specs, 0.0 on norm gains/biases and on
+    /// padding — matching `train_step_*`'s per-spec decay selection.
+    pub fn decay_coeff(&self, wd: f32, lo: usize, hi: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; hi - lo];
+        for (i, &off) in self.offsets.iter().enumerate() {
+            if !self.decay[i] {
+                continue;
+            }
+            let len: usize = self.shapes[i].iter().product();
+            let a = off.max(lo);
+            let b = (off + len).min(hi);
+            for c in out.iter_mut().take(b.saturating_sub(lo)).skip(a.saturating_sub(lo)) {
+                *c = wd;
+            }
+        }
+        out
+    }
+}
+
 /// A named parameter set for one (variant, pattern) model.
 ///
 /// Parameters are constant on the forward hot path, so their XLA literals
@@ -291,6 +379,61 @@ mod tests {
         let find = |n: &str| specs.iter().find(|s| s.0 == n).unwrap().1.clone();
         assert_eq!(find("layer0.wq"), vec![64, 2 * 8]); // linear: reduced
         assert_eq!(find("layer1.wq"), vec![64, 2 * 32]); // std: full
+    }
+
+    #[test]
+    fn flat_layout_roundtrip_and_padding() {
+        let c = cfg();
+        let pat = Pattern("LL".into());
+        let specs = param_specs(&c, Variant::Basic, &pat);
+        let layout = FlatLayout::new(&specs);
+        let n_elems: usize = specs.iter().map(|s| s.1.iter().product::<usize>()).sum();
+        assert_eq!(layout.total(), n_elems);
+        // padding rounds UP to a multiple of world and never shrinks
+        assert_eq!(layout.padded(1), n_elems);
+        let p4 = layout.padded(4);
+        assert!(p4 >= n_elems && p4 % 4 == 0 && p4 - n_elems < 4);
+
+        let p = Params::randn(&c, Variant::Basic, &pat, 11);
+        let tensors: Vec<Tensor> =
+            specs.iter().map(|(n, _, _)| p.get(n).unwrap().clone()).collect();
+        let flat = layout.flatten(&tensors, p4);
+        assert!(flat[n_elems..].iter().all(|&x| x == 0.0), "padding must be zero");
+        let back = layout.unflatten(&flat);
+        for (a, b) in tensors.iter().zip(&back) {
+            assert_eq!(a.shape(), b.shape());
+            assert_eq!(a.data(), b.data());
+        }
+    }
+
+    #[test]
+    fn flat_decay_coeff_skips_norm_params() {
+        let c = cfg();
+        let pat = Pattern("LL".into());
+        let specs = param_specs(&c, Variant::Rebased, &pat);
+        let layout = FlatLayout::new(&specs);
+        let pad = layout.padded(4);
+        let full = layout.decay_coeff(0.1, 0, pad);
+        // spec-by-spec: Ones/Zeros specs (ln*, gamma, beta) must be 0.0,
+        // everything else 0.1 — exactly train_step_impl's selection
+        let mut off = 0usize;
+        for (name, shape, init) in &specs {
+            let len: usize = shape.iter().product();
+            let want = match init {
+                Init::Ones | Init::Zeros => 0.0,
+                _ => 0.1,
+            };
+            assert!(
+                full[off..off + len].iter().all(|&x| x == want),
+                "{name}: expected {want}"
+            );
+            off += len;
+        }
+        // padding gets no decay
+        assert!(full[layout.total()..].iter().all(|&x| x == 0.0));
+        // a shard slice agrees with the corresponding full-range slice
+        let (lo, hi) = (pad / 4, pad / 2);
+        assert_eq!(layout.decay_coeff(0.1, lo, hi), full[lo..hi].to_vec());
     }
 
     #[test]

@@ -85,9 +85,16 @@ COMMANDS
                   --variant basic|gla|...  --splits K
                   --usp-cols C  (mesh columns for usp2d; must divide --world)
                   --strict  (error out if the verification oracle is missing)
-  train         real training via the AOT train_step artifact
+  train         real training: ZeRO-sharded, checkpointed, resumable driver
+                (grad_step artifact + reduce-scatter + sharded Adam; see
+                DESIGN.md \"Distributed training\")
                   --preset tiny|small|medium  --variant basic --ratio 0|1/4
-                  --steps N  --lr 3e-3  --mlm  --csv path.csv
+                  --steps N  (TOTAL schedule steps, also after --resume)
+                  --lr 3e-3  --mlm  --csv path.csv  (appends on resume)
+                  --world W  (ZeRO data-parallel ranks; W=4 bit-matches W=1)
+                  --save path.ckpt  --save-every K  (0 = only at the end)
+                  --resume path.ckpt  (continue a killed run bit-exactly)
+                  --halt-after K  (stop after K steps; simulated kill)
   generate      serving demo: prefill a prompt, then autoregressive decode
                 on the recurrent state (constant memory for linear layers)
                   --preset tiny|small  --variant basic|gla|...  --ratio 0|1/2
@@ -107,10 +114,12 @@ COMMANDS
   bench-kernels op-level GEMM GFLOP/s + train-step ms + decode tokens/s
                   --preset tiny|small  --steps N  --tokens N
                   --json BENCH_kernels.json
+                  --floor BENCH_floor.json  (train + decode perf gate)
   bench-all     all of the above, plus the scheduler crossover table
-                (sim, W in {8,64,128}, N up to 2048K); --json path.json
+                (sim, W in {8,64,128}, N up to 2048K) and the ZeRO
+                replicated-vs-sharded memory/wire table; --json path.json
                 writes the full machine-readable
-                kernel/train/decode/fig3/crossover snapshot
+                kernel/train/decode/fig3/crossover/zero snapshot
 
 Flags accept both `--key value` and `--key=value`.  `run`, `train`, and
 `generate` also take `--profile` to print the per-artifact execution time
@@ -255,6 +264,7 @@ fn cmd_decode_bench(args: &Args) -> Result<()> {
             decode: Some((preset.clone(), n, rows.clone())),
             fig3: None,
             crossover: None,
+            zero: None,
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
@@ -304,6 +314,20 @@ fn check_decode_floor(rows: &[bench::DecodeRow], floor_text: &str) -> Result<()>
     Ok(())
 }
 
+/// CI perf smoke for the train-step row: tokens/s must stay above
+/// floor * 0.7, mirroring the decode gate.
+fn check_train_floor(tag: &str, tps: f64, floor_text: &str) -> Result<()> {
+    let key = format!("train_step_{tag}");
+    let Some(floor) = json_lookup_f64(floor_text, &key) else {
+        bail!("floor file has no {key} entry");
+    };
+    anyhow::ensure!(
+        tps >= floor * 0.7,
+        "train perf regression: {key} {tps:.0} tok/s < 70% of committed floor {floor:.0}"
+    );
+    Ok(())
+}
+
 fn cmd_bench_kernels(args: &Args) -> Result<()> {
     let preset = args.get("preset", "tiny");
     let engine = Engine::load_preset(&preset)?;
@@ -324,13 +348,21 @@ fn cmd_bench_kernels(args: &Args) -> Result<()> {
             source: "lasp2 bench-kernels".into(),
             threads: par::num_threads(),
             gemm,
-            train: Some((preset.clone(), tag, step_ms, tps)),
-            decode: Some((preset.clone(), n, rows)),
+            train: Some((preset.clone(), tag.clone(), step_ms, tps)),
+            decode: Some((preset.clone(), n, rows.clone())),
             fig3: None,
             crossover: None,
+            zero: None,
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
+    }
+    if let Some(floor_path) = args.flags.get("floor") {
+        let text = std::fs::read_to_string(floor_path)
+            .with_context(|| format!("reading floor file {floor_path}"))?;
+        check_train_floor(&tag, tps, &text)?;
+        check_decode_floor(&rows, &text)?;
+        println!("train + decode floor check passed ({floor_path})");
     }
     Ok(())
 }
@@ -358,6 +390,9 @@ fn cmd_bench_all(args: &Args) -> Result<()> {
     println!("# Scheduler crossover sweep (sim; see docs/SCHEDULERS.md)\n");
     let (xtable, xrows) = bench::crossover_table(&CostModel::default());
     println!("{}", xtable.to_markdown());
+    println!("# ZeRO optimizer sharding — replicated vs sharded per rank (sim, Linear-Llama3-1B @2048K)\n");
+    let (ztable, zrows) = bench::zero_sharding_table(&CostModel::default());
+    println!("{}", ztable.to_markdown());
     let (gt, gemm) = bench::gemm_bench();
     println!(
         "# Kernel-level GEMM throughput ({} threads)\n\n{}",
@@ -379,6 +414,7 @@ fn cmd_bench_all(args: &Args) -> Result<()> {
             decode: Some((preset, n, drows)),
             fig3: fig3_rows,
             crossover: Some(xrows),
+            zero: Some(zrows),
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
@@ -466,13 +502,35 @@ fn cmd_train(args: &Args) -> Result<()> {
         mlm,
         csv: args.flags.get("csv").cloned(),
         seed: args.usize("seed", 0)? as u64,
+        world: args.usize("world", 1)?,
+        resume: args.flags.get("resume").cloned(),
+        save: args.flags.get("save").cloned(),
+        save_every: args.usize("save-every", 0)?,
+        halt_after: args.usize("halt-after", 0)?,
         ..Default::default()
     };
     let rep = train(&engine, variant, &pattern, &tag, &opts)?;
     println!(
-        "trained {tag}: {} params, {} steps, final loss {:.4}, tail loss {:.4}, {:.0} tokens/s",
-        rep.params, rep.steps, rep.final_loss, rep.tail_loss, rep.tokens_per_sec
+        "trained {tag}: {} params, steps {}..{} of {}, final loss {:.4}, tail loss {:.4}, {:.0} tokens/s",
+        rep.params,
+        rep.start_step,
+        rep.start_step + rep.losses.len(),
+        rep.steps,
+        rep.final_loss,
+        rep.tail_loss,
+        rep.tokens_per_sec
     );
+    if rep.world > 1 {
+        println!(
+            "zero-sharding (W={}): opt state {} B/rank vs {} B replicated, \
+             {} wire bytes over {} collectives",
+            rep.world,
+            rep.opt_bytes_per_rank,
+            rep.opt_bytes_replicated,
+            rep.wire_bytes,
+            rep.collective_ops
+        );
+    }
     if args.is_set("profile") {
         print_profile(&engine);
     }
@@ -581,5 +639,15 @@ mod tests {
         assert!(super::check_decode_floor(&[row(100.0)], text).is_err());
         // a floor file matching no rows is a configuration error
         assert!(super::check_decode_floor(&[row(250.0)], "{}").is_err());
+    }
+
+    #[test]
+    fn train_floor_check() {
+        let text = r#"{"floors": {"train_step_basic_pure": 200.0, "basic_pure": 300.0}}"#;
+        // the train key is the full artifact name, so it never collides
+        // with the decode row of the same tag
+        assert!(super::check_train_floor("basic_pure", 150.0, text).is_ok());
+        assert!(super::check_train_floor("basic_pure", 120.0, text).is_err());
+        assert!(super::check_train_floor("basic_pure", 1e6, "{}").is_err());
     }
 }

@@ -18,7 +18,12 @@
 //! lightning, retention, gla, based, rebased) at every hybrid ratio the
 //! preset genuinely realizes (a ratio whose truncated pattern has no
 //! std layer is left out, so the bench reports it as explicitly
-//! SKIPPED), plus the softmax and unmasked-basic tags.  Gated-variant
+//! SKIPPED), plus the softmax and unmasked-basic tags.  Every train tag
+//! also registers a `grad_step_*` artifact — forward + backward only over
+//! a contiguous `seq_range` slice of the batch, no optimizer — which is
+//! what the ZeRO-sharded distributed driver consumes (`train::optimizer`
+//! owns the Adam update there; the monolithic `train_step_*` keeps the
+//! fused in-artifact Adam for the W=1 legacy path).  Gated-variant
 //! training is
 //! native: the backward differentiates through the decay prefactor
 //! folding (q~ = q*B, k~ = k/B, B = cumprod(g)) including the
@@ -1137,6 +1142,61 @@ fn seq_loss_grads(
     Ok(loss)
 }
 
+/// Forward + backward over the contiguous batch slice `[lo, hi)`:
+/// per-sequence gradients accumulate into their own buffers (even when
+/// serial, so the reduction structure — and therefore every bit of the
+/// result — is independent of the thread count), then they are summed in
+/// fixed batch order starting from zeros.  `denom` must be the GLOBAL
+/// loss-mask sum so that a partial slice's loss/grads are exactly the
+/// full-batch contribution of those sequences — a ZeRO rank's partial
+/// sum, combinable bit-exactly by rank-ordered reduce_scatter.
+fn batch_loss_grads(
+    cfg: &ModelConfig,
+    variant: Variant,
+    pattern: &Pattern,
+    masked: bool,
+    specs: &[(String, Vec<usize>, Init)],
+    pv: &ParamView,
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &Tensor,
+    denom: f32,
+    lo: usize,
+    hi: usize,
+) -> Result<(f32, Vec<Tensor>)> {
+    let seq = cfg.train_seq;
+    let nseq = hi - lo;
+    let seq_flops = 8 * seq * cfg.d_model * (cfg.d_model + cfg.ffn_dim) * pattern.len();
+    let per_seq: Vec<Result<(f32, Vec<Tensor>)>> =
+        par::par_map(nseq, nseq * seq_flops, |i| {
+            let b = lo + i;
+            let mut g: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
+            let l = seq_loss_grads(
+                cfg,
+                variant,
+                pattern,
+                pv,
+                &mut g,
+                &tokens[b * seq..(b + 1) * seq],
+                &targets[b * seq..(b + 1) * seq],
+                &mask.data()[b * seq..(b + 1) * seq],
+                denom,
+                masked,
+            )?;
+            Ok((l, g))
+        });
+    let mut grads: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
+    let mut loss = 0.0f32;
+    for r in per_seq {
+        let (l, g) = r?;
+        loss += l;
+        for (acc, gt) in grads.iter_mut().zip(&g) {
+            acc.add_assign(gt);
+        }
+    }
+    Ok((loss, grads))
+}
+
 /// The flat-signature Adam train step (`train_step_*` artifacts).
 fn train_step_impl(
     cfg: &ModelConfig,
@@ -1162,40 +1222,12 @@ fn train_step_impl(
     let mask = ins[3 * p + 2].host_f32()?;
     let lr = ins[3 * p + 3].host_f32()?.data()[0];
     let step = ins[3 * p + 4].host_f32()?.data()[0];
-    let (bsz, seq) = (cfg.train_batch, cfg.train_seq);
+    let bsz = cfg.train_batch;
 
     let denom = mask.data().iter().sum::<f32>().max(1.0);
-    // Sequence-parallel batch: every sequence's backward runs into its own
-    // gradient buffers (even when serial, so the reduction structure —
-    // and therefore every bit of the result — is independent of the
-    // thread count), then they are summed in fixed batch order.
-    let seq_flops = 8 * seq * cfg.d_model * (cfg.d_model + cfg.ffn_dim) * pattern.len();
-    let per_seq: Vec<Result<(f32, Vec<Tensor>)>> =
-        par::par_map(bsz, bsz * seq_flops, |b| {
-            let mut g: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
-            let l = seq_loss_grads(
-                cfg,
-                variant,
-                pattern,
-                &pv,
-                &mut g,
-                &tokens[b * seq..(b + 1) * seq],
-                &targets[b * seq..(b + 1) * seq],
-                &mask.data()[b * seq..(b + 1) * seq],
-                denom,
-                masked,
-            )?;
-            Ok((l, g))
-        });
-    let mut grads: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
-    let mut loss = 0.0f32;
-    for r in per_seq {
-        let (l, g) = r?;
-        loss += l;
-        for (acc, gt) in grads.iter_mut().zip(&g) {
-            acc.add_assign(gt);
-        }
-    }
+    let (loss, grads) = batch_loss_grads(
+        cfg, variant, pattern, masked, &specs, &pv, tokens, targets, mask, denom, 0, bsz,
+    )?;
 
     // AdamW (paper Sec. 4.1 hyperparameters; no decay on norm gains/biases)
     let (b1, b2, eps, wd) = (0.9f32, 0.95f32, 1e-8f32, 0.1f32);
@@ -1227,6 +1259,47 @@ fn train_step_impl(
     }
     out.extend(new_m);
     out.extend(new_v);
+    out.push(Tensor::scalar1(loss));
+    Ok(out)
+}
+
+/// The optimizer-free gradient step (`grad_step_*` artifacts): forward +
+/// backward over the contiguous `seq_range = [lo, hi)` slice of the batch,
+/// returning spec-ordered gradients plus the slice's loss contribution.
+/// The loss denominator comes from the FULL batch mask, so a rank that
+/// owns `[lo, hi)` produces exactly its additive share of the global
+/// gradient: summing the per-rank outputs in rank order (reduce_scatter's
+/// contract) reproduces the `train_step_*` gradient bit-for-bit whenever
+/// each rank owns at most one sequence, and to fp-rounding otherwise.
+/// An empty range (`lo == hi`) is valid and returns exact zeros — idle
+/// high ranks when W exceeds the batch size.
+fn grad_step_impl(
+    cfg: &ModelConfig,
+    variant: Variant,
+    pattern: &Pattern,
+    masked: bool,
+    ins: &[Value],
+) -> Result<Vec<Tensor>> {
+    let specs = param_specs(cfg, variant, pattern);
+    let p = specs.len();
+    anyhow::ensure!(ins.len() == p + 4, "grad step arity");
+    let pv = ParamView::new(&specs, &ins[..p])?;
+    let tokens = ins[p].host_i32()?;
+    let targets = ins[p + 1].host_i32()?;
+    let mask = ins[p + 2].host_f32()?;
+    let range = ins[p + 3].host_i32()?;
+    let bsz = cfg.train_batch;
+    let (lo, hi) = (range[0] as usize, range[1] as usize);
+    anyhow::ensure!(
+        range[0] >= 0 && lo <= hi && hi <= bsz,
+        "grad step seq_range [{}, {}) outside batch 0..{bsz}",
+        range[0],
+        range[1]
+    );
+    let denom = mask.data().iter().sum::<f32>().max(1.0);
+    let (loss, mut out) = batch_loss_grads(
+        cfg, variant, pattern, masked, &specs, &pv, tokens, targets, mask, denom, lo, hi,
+    )?;
     out.push(Tensor::scalar1(loss));
     Ok(out)
 }
@@ -2408,6 +2481,30 @@ impl Registry {
                     train_step_impl(cfg, variant, &pat, masked, ins)
                 }),
             );
+            // optimizer-free gradient step for the ZeRO-sharded driver:
+            // params + batch + seq_range -> spec-ordered grads + loss
+            let mut gins: Vec<TensorMeta> = specs
+                .iter()
+                .map(|(nm, sh, _)| f32m(&format!("p.{nm}"), sh))
+                .collect();
+            gins.push(i32m("tokens", &[bs, sl]));
+            gins.push(i32m("targets", &[bs, sl]));
+            gins.push(f32m("loss_mask", &[bs, sl]));
+            gins.push(i32m("seq_range", &[2]));
+            let mut gouts: Vec<TensorMeta> = specs
+                .iter()
+                .map(|(nm, sh, _)| f32m(&format!("g.{nm}"), sh))
+                .collect();
+            gouts.push(f32m("loss", &[1]));
+            let pat = pattern.clone();
+            reg.add(
+                &format!("grad_step_{tag}"),
+                gins,
+                gouts,
+                Arc::new(move |cfg: &ModelConfig, ins: &[Value]| {
+                    grad_step_impl(cfg, variant, &pat, masked, ins)
+                }),
+            );
         }
 
         reg
@@ -2810,6 +2907,14 @@ mod tests {
             "train_step_based_pure",
             "init_rebased_h2",
             "train_step_rebased_pure",
+            // every train tag exposes the optimizer-free gradient step
+            // consumed by the ZeRO-sharded distributed driver
+            "grad_step_basic_pure",
+            "grad_step_softmax_std",
+            "grad_step_basic_pure_nm",
+            "grad_step_gla_pure",
+            "grad_step_retention_h2",
+            "grad_step_rebased_pure",
         ] {
             assert!(man.artifacts.contains_key(name), "{name}");
             assert!(reg.kernel(name).is_ok(), "{name}");

@@ -71,7 +71,7 @@ impl CostModel {
     }
 
     /// Ring-AllGather: single launch, (W-1) pipelined slices.
-    fn allgather_time(&self, bytes_per_rank: f64, world: usize) -> f64 {
+    pub fn allgather_time(&self, bytes_per_rank: f64, world: usize) -> f64 {
         if world <= 1 {
             return 0.0;
         }
@@ -86,7 +86,7 @@ impl CostModel {
 
     /// All-to-All / ReduceScatter: single launch; each rank keeps its own
     /// 1/W slice, so only (W-1)/W of the payload crosses the wire.
-    fn a2a_time(&self, bytes_per_rank: f64, world: usize) -> f64 {
+    pub fn a2a_time(&self, bytes_per_rank: f64, world: usize) -> f64 {
         if world <= 1 {
             return 0.0;
         }
@@ -190,6 +190,51 @@ pub fn simulate(
     simulate_plan(&plan, shape, cm)
 }
 
+/// ZeRO-1 data-parallel sharding model: what the in-memory training driver
+/// measures at toy scale (`TrainReport::{opt_bytes_per_rank, wire_bytes}`),
+/// extrapolated to paper scale on the α–β cost model.  `bench-all` prints
+/// this next to the scheduler tables so the replicated-vs-sharded memory
+/// and wire cost are visible at W = 64 / 2048K without running anything.
+#[derive(Clone, Copy, Debug)]
+pub struct ZeroShardModel {
+    pub world: usize,
+    pub param_elems: f64,
+    /// Adam-moment bytes per rank when every rank replicates (2·P·4)
+    pub opt_bytes_replicated: f64,
+    /// Adam-moment bytes per rank under ZeRO-1 (2·P·4/W)
+    pub opt_bytes_sharded: f64,
+    /// gradient reduce-scatter + parameter all-gather wire bytes per rank
+    /// per step: 2·(W-1)/W·P·4
+    pub wire_bytes_per_rank: f64,
+    /// α–β time for the two collectives (seconds per step)
+    pub comm_time: f64,
+}
+
+/// Cost the per-step ZeRO-1 collectives for `param_elems` f32 parameters.
+pub fn zero_shard(param_elems: f64, world: usize, cm: &CostModel) -> ZeroShardModel {
+    let pbytes = param_elems * 4.0;
+    let w = world.max(1);
+    let opt_rep = 2.0 * pbytes;
+    let (wire, comm_time) = if w > 1 {
+        (
+            2.0 * pbytes * (w as f64 - 1.0) / w as f64,
+            // grads reduce-scatter over the full flat vector, then the
+            // updated 1/W shards all-gather back
+            cm.a2a_time(pbytes, w) + cm.allgather_time(pbytes / w as f64, w),
+        )
+    } else {
+        (0.0, 0.0)
+    };
+    ZeroShardModel {
+        world: w,
+        param_elems,
+        opt_bytes_replicated: opt_rep,
+        opt_bytes_sharded: opt_rep / w as f64,
+        wire_bytes_per_rank: wire,
+        comm_time,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +242,33 @@ mod tests {
 
     fn fig3_shape(seq_k: usize) -> SimShape {
         SimShape::linear_llama3_1b(64, seq_k * 1024, 1)
+    }
+
+    #[test]
+    fn zero_shard_memory_and_wire_laws() {
+        // ZeRO-1 at paper scale: optimizer memory per rank falls as 1/W,
+        // wire bytes per rank approach (but never reach) 2·P·4.
+        let cm = CostModel::default();
+        let p = SimShape::linear_llama3_1b(64, 2048 * 1024, 1).param_count();
+        let z1 = zero_shard(p, 1, &cm);
+        let z4 = zero_shard(p, 4, &cm);
+        let z64 = zero_shard(p, 64, &cm);
+        // W=1 is the replicated degenerate case: no sharding, no wire
+        assert_eq!(z1.opt_bytes_sharded, z1.opt_bytes_replicated);
+        assert_eq!(z1.wire_bytes_per_rank, 0.0);
+        assert_eq!(z1.comm_time, 0.0);
+        // memory: exactly 1/W of replicated
+        assert!((z4.opt_bytes_sharded - z4.opt_bytes_replicated / 4.0).abs() < 1.0);
+        assert!((z64.opt_bytes_sharded - z64.opt_bytes_replicated / 64.0).abs() < 1.0);
+        // wire: 2·(W-1)/W·P·4, monotone in W, bounded by 2·P·4
+        let cap = 2.0 * p * 4.0;
+        assert!(z4.wire_bytes_per_rank < z64.wire_bytes_per_rank);
+        assert!(z64.wire_bytes_per_rank < cap);
+        assert!(z64.wire_bytes_per_rank > 0.98 * cap);
+        // the collectives cost real time at W=64 but far less than the
+        // fixed per-iteration overhead the Table-6 calibration absorbs
+        assert!(z64.comm_time > 0.0);
+        assert!(z64.comm_time < cm.fixed_overhead);
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! Deterministic binary training checkpoints.
+//!
+//! A checkpoint captures the COMPLETE training state — flat parameters,
+//! both Adam moments, the step counter, the lr-schedule position
+//! (total_steps + peak/min lr), and the `BatchIter` cursor — so a killed
+//! run resumes to a bit-identical loss curve (`tests/train_distributed.rs`
+//! diffs the CSVs byte-for-byte).  The format is fixed-layout
+//! little-endian with a magic, a version field, and an FNV-1a checksum;
+//! writes go through a tmp file + rename so a crash mid-save never
+//! corrupts the previous snapshot.  Moments are stored UNSHARDED
+//! (gathered, unpadded), which makes the file world-size independent: a
+//! checkpoint written at W=1 resumes at W=4 and vice versa.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic   8  b"LASP2CKP"
+//! version u32  = 1
+//! tag     u32 len + utf8 bytes      (train artifact tag, e.g. basic_pure)
+//! mlm     u8                        (0 causal / 1 bidirectional)
+//! seed    u64
+//! total_steps / steps_done / data_cursor   u64 each
+//! peak_lr / min_lr                  f32 each
+//! n_elems u64
+//! params / m / v                    n_elems f32 each
+//! checksum u64   FNV-1a over everything before it
+//! ```
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Current checkpoint format version (bump on any layout change).
+pub const CKPT_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 8] = b"LASP2CKP";
+
+/// Complete training state; see the module docs for the wire layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub tag: String,
+    pub mlm: bool,
+    pub seed: u64,
+    /// lr-schedule horizon the run was launched with (`--steps`)
+    pub total_steps: u64,
+    /// optimizer steps already applied to `params`/`m`/`v`
+    pub steps_done: u64,
+    /// `BatchIter::cursor()` — batches consumed so far
+    pub data_cursor: u64,
+    pub peak_lr: f32,
+    pub min_lr: f32,
+    /// flat parameters in `FlatLayout` order (unpadded)
+    pub params: Vec<f32>,
+    /// first Adam moment, same layout as `params`
+    pub m: Vec<f32>,
+    /// second Adam moment, same layout as `params`
+    pub v: Vec<f32>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.buf.len(), "checkpoint truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+impl Checkpoint {
+    /// Number of flat parameter elements.
+    pub fn n_elems(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Serialize to the versioned byte layout (deterministic: identical
+    /// state produces identical bytes — the kill-and-resume gate relies
+    /// on comparing these files directly).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        assert_eq!(self.params.len(), self.m.len());
+        assert_eq!(self.params.len(), self.v.len());
+        let mut out = Vec::with_capacity(64 + self.tag.len() + 12 * self.params.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.tag.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.tag.as_bytes());
+        out.push(self.mlm as u8);
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.total_steps.to_le_bytes());
+        out.extend_from_slice(&self.steps_done.to_le_bytes());
+        out.extend_from_slice(&self.data_cursor.to_le_bytes());
+        out.extend_from_slice(&self.peak_lr.to_le_bytes());
+        out.extend_from_slice(&self.min_lr.to_le_bytes());
+        out.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        push_f32s(&mut out, &self.params);
+        push_f32s(&mut out, &self.m);
+        push_f32s(&mut out, &self.v);
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse + validate (magic, version, length, checksum).
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint> {
+        anyhow::ensure!(buf.len() > MAGIC.len() + 8, "checkpoint truncated");
+        let (body, tail) = buf.split_at(buf.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().unwrap());
+        anyhow::ensure!(
+            fnv1a(body) == want,
+            "checkpoint checksum mismatch (corrupt or partially written file)"
+        );
+        let mut r = Reader { buf: body, pos: 0 };
+        anyhow::ensure!(r.take(8)? == MAGIC, "not a LASP2 checkpoint (bad magic)");
+        let version = r.u32()?;
+        anyhow::ensure!(
+            version == CKPT_VERSION,
+            "checkpoint version {version} unsupported (this build reads {CKPT_VERSION})"
+        );
+        let tag_len = r.u32()? as usize;
+        let tag = String::from_utf8(r.take(tag_len)?.to_vec())
+            .context("checkpoint tag is not utf8")?;
+        let mlm = r.take(1)?[0] != 0;
+        let seed = r.u64()?;
+        let total_steps = r.u64()?;
+        let steps_done = r.u64()?;
+        let data_cursor = r.u64()?;
+        let peak_lr = r.f32()?;
+        let min_lr = r.f32()?;
+        let n = r.u64()? as usize;
+        let params = r.f32s(n)?;
+        let m = r.f32s(n)?;
+        let v = r.f32s(n)?;
+        anyhow::ensure!(r.pos == body.len(), "checkpoint has trailing bytes");
+        Ok(Checkpoint {
+            tag,
+            mlm,
+            seed,
+            total_steps,
+            steps_done,
+            data_cursor,
+            peak_lr,
+            min_lr,
+            params,
+            m,
+            v,
+        })
+    }
+
+    /// Atomic save: write `<path>.tmp`, then rename over `path`.
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).ok();
+            }
+        }
+        let tmp = format!("{path}.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {tmp}"))?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all().ok();
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp} -> {path}"))
+    }
+
+    /// Load + validate a checkpoint file.
+    pub fn load(path: &str) -> Result<Checkpoint> {
+        let buf = std::fs::read(path).with_context(|| format!("reading checkpoint {path}"))?;
+        Self::from_bytes(&buf).with_context(|| format!("parsing checkpoint {path}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            tag: "basic_pure".into(),
+            mlm: false,
+            seed: 7,
+            total_steps: 100,
+            steps_done: 42,
+            data_cursor: 42,
+            peak_lr: 3e-3,
+            min_lr: 1e-6,
+            params: (0..97).map(|i| i as f32 * 0.25 - 3.0).collect(),
+            m: (0..97).map(|i| (i as f32).sin()).collect(),
+            v: (0..97).map(|i| (i as f32).cos().abs()).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact_and_deterministic() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        // determinism: same state -> same bytes (the resume gate diffs files)
+        assert_eq!(bytes, ck.to_bytes());
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back, ck);
+        // f32 payloads roundtrip bit-exactly, including negative zero
+        let mut z = sample();
+        z.params[0] = -0.0;
+        let back = Checkpoint::from_bytes(&z.to_bytes()).unwrap();
+        assert_eq!(back.params[0].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_detected() {
+        let bytes = sample().to_bytes();
+        for flip in [0usize, 9, 20, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[flip] ^= 0x40;
+            assert!(Checkpoint::from_bytes(&bad).is_err(), "flip at {flip}");
+        }
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        assert!(Checkpoint::from_bytes(b"short").is_err());
+    }
+
+    #[test]
+    fn future_version_is_rejected() {
+        let mut bytes = sample().to_bytes();
+        // bump the version field (bytes 8..12) and re-sign the checksum so
+        // ONLY the version check can reject it
+        bytes[8] = CKPT_VERSION as u8 + 1;
+        let n = bytes.len();
+        let sum = fnv1a(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn save_load_via_file() {
+        let dir = std::env::temp_dir().join("lasp2_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        let path = path.to_str().unwrap();
+        let ck = sample();
+        ck.save(path).unwrap();
+        assert_eq!(Checkpoint::load(path).unwrap(), ck);
+        // no tmp file left behind
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        std::fs::remove_file(path).ok();
+    }
+}

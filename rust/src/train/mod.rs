@@ -1,23 +1,45 @@
-//! Training loop driver: runs the `train_step_*` artifact (full forward +
-//! backward + Adam) from rust, feeding synthetic batches and logging the
-//! loss curve.  Every linear variant trains on the native backend —
-//! including the decay-gated ones (backward-through-gates) — so no tag is
-//! skipped here; a missing artifact is a hard error, not a silent no-op.
-//! Used by the convergence experiments (Tables 2/3/4) and the end-to-end
-//! example.
+//! Distributed, resumable training driver.
+//!
+//! The loop is SPMD over the in-memory `comm::World`: every rank runs the
+//! optimizer-free `grad_step_*` artifact on its contiguous slice of the
+//! batch, combines gradients with a rank-ordered `reduce_scatter`, applies
+//! ZeRO-sharded AdamW on its own parameter shard (`optimizer::ShardedAdam`),
+//! and rejoins the updated shards with an `all_gather` — LASP-2's
+//! data-parallel companion (ZeRO-1: optimizer state per rank is 2·P·4/W
+//! bytes).  `world = 1` is the replicated degenerate case (no collectives),
+//! and W=4 reproduces its loss curve BIT-FOR-BIT because each rank's
+//! partial gradient is summed in the same fixed order the serial path uses
+//! (see `grad_step_impl` / `tests/train_distributed.rs`).
+//!
+//! Training state (params, both Adam moments, step counter, lr-schedule
+//! position, data cursor) snapshots to a versioned binary `Checkpoint`;
+//! a killed run resumes to a bit-identical loss curve, and the loss CSV
+//! appends on resume instead of truncating.  Every linear variant trains
+//! natively — including the decay-gated ones (backward-through-gates) —
+//! so no tag is skipped here; a missing artifact is a hard error, not a
+//! silent no-op.  Used by the convergence experiments (Tables 2/3/4), the
+//! end-to-end example, and the `train` CLI.
 
+use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::comm::{Communicator, World};
 use crate::config::{Pattern, Variant};
-use crate::coordinator::{param_specs, Params};
+use crate::coordinator::{param_specs, FlatLayout, Params};
 use crate::data::BatchIter;
 use crate::runtime::{Engine, Value};
 use crate::tensor::Tensor;
+
+pub mod checkpoint;
+pub mod optimizer;
+
+pub use checkpoint::{Checkpoint, CKPT_VERSION};
+pub use optimizer::ShardedAdam;
 
 /// Cosine LR schedule with linear warmup (paper Sec. 4.1 hyperparameters).
 pub fn lr_schedule(step: usize, total: usize, peak: f32, min_lr: f32) -> f32 {
@@ -31,6 +53,8 @@ pub fn lr_schedule(step: usize, total: usize, peak: f32, min_lr: f32) -> f32 {
 
 #[derive(Clone, Debug)]
 pub struct TrainOpts {
+    /// TOTAL lr-schedule horizon; a resumed run continues toward the same
+    /// total, it does not add steps
     pub steps: usize,
     pub peak_lr: f32,
     pub min_lr: f32,
@@ -38,8 +62,19 @@ pub struct TrainOpts {
     /// bidirectional (MLM) task — Table 3
     pub mlm: bool,
     pub log_every: usize,
-    /// optional CSV path for the loss curve
+    /// optional CSV path for the loss curve (appends on resume)
     pub csv: Option<String>,
+    /// ZeRO data-parallel world size (1 = single-rank replicated)
+    pub world: usize,
+    /// checkpoint file to resume from
+    pub resume: Option<String>,
+    /// checkpoint file to snapshot to
+    pub save: Option<String>,
+    /// snapshot every K steps (0 = only at the end / halt point)
+    pub save_every: usize,
+    /// stop after K optimizer steps THIS invocation (a simulated kill for
+    /// the resume gate; requires `save`) — 0 = run to `steps`
+    pub halt_after: usize,
 }
 
 impl Default for TrainOpts {
@@ -52,25 +87,191 @@ impl Default for TrainOpts {
             mlm: false,
             log_every: 10,
             csv: None,
+            world: 1,
+            resume: None,
+            save: None,
+            save_every: 0,
+            halt_after: 0,
         }
     }
 }
 
 #[derive(Clone, Debug)]
 pub struct TrainReport {
+    /// losses of the steps executed THIS invocation (`start_step..`)
     pub losses: Vec<f32>,
     pub final_loss: f32,
-    /// mean loss over the last 10% of steps (the "converged" metric)
+    /// mean loss over the last 10% of executed steps (the "converged" metric)
     pub tail_loss: f32,
     pub tokens_per_sec: f64,
     pub params: usize,
+    /// total schedule steps (`TrainOpts::steps`)
     pub steps: usize,
+    pub world: usize,
+    /// first step executed this invocation (0 unless resumed)
+    pub start_step: usize,
+    /// Adam-moment bytes each rank actually held (ZeRO-sharded)
+    pub opt_bytes_per_rank: usize,
+    /// Adam-moment bytes a replicated rank would hold (2·P·4)
+    pub opt_bytes_replicated: usize,
+    /// wire bytes moved by the training collectives this invocation
+    pub wire_bytes: u64,
+    pub collective_ops: u64,
 }
 
-/// Train a (variant, pattern) model with the given train-step artifact.
+/// Rank-0 side effects, shared across worker threads.  IO failures are
+/// RECORDED rather than returned mid-loop: an early return from one rank
+/// would strand the others at the next collective.
+struct DriverIo {
+    csv: Option<File>,
+    err: Option<anyhow::Error>,
+}
+
+impl DriverIo {
+    fn record(&mut self, e: anyhow::Error) {
+        if self.err.is_none() {
+            self.err = Some(e);
+        }
+    }
+}
+
+/// Everything a rank needs, bundled so the SPMD closure stays one call.
+struct RankCtx<'a> {
+    engine: &'a Engine,
+    tag: &'a str,
+    opts: &'a TrainOpts,
+    layout: &'a FlatLayout,
+    /// unpadded flat parameters at `start_step`
+    init_flat: &'a [f32],
+    /// unpadded Adam moments from a checkpoint (fresh zeros when None)
+    init_moments: Option<(&'a [f32], &'a [f32])>,
+    start_step: usize,
+    end_step: usize,
+    total: usize,
+    io: &'a Mutex<DriverIo>,
+    t0: Instant,
+}
+
+struct RankOut {
+    losses: Vec<f32>,
+    opt_bytes: usize,
+}
+
+fn rank_loop(ctx: &RankCtx, comm: Option<&Communicator>) -> Result<RankOut> {
+    let cfg = &ctx.engine.model;
+    let opts = ctx.opts;
+    let (world, rank) = match comm {
+        Some(c) => (c.size(), c.rank()),
+        None => (1, 0),
+    };
+    let layout = ctx.layout;
+    let e_pad = layout.padded(world);
+    let mut flat = vec![0.0f32; e_pad];
+    flat[..layout.total()].copy_from_slice(ctx.init_flat);
+    let mut opt = match ctx.init_moments {
+        Some((m, v)) => ShardedAdam::restore(layout, world, rank, m, v),
+        None => ShardedAdam::new(layout, world, rank),
+    };
+    let (bsz, seq) = (cfg.train_batch, cfg.train_seq);
+    // contiguous batch shard: rank r owns sequences [lo, hi); a ceil split,
+    // so trailing ranks may own none — they contribute exact-zero partial
+    // gradients and still join every collective
+    let per = bsz.div_ceil(world);
+    let lo = (rank * per).min(bsz);
+    let hi = ((rank + 1) * per).min(bsz);
+
+    let mut data = if opts.mlm {
+        BatchIter::mlm(cfg.vocab, bsz, seq, opts.seed)
+    } else {
+        BatchIter::causal(cfg.vocab, bsz, seq, opts.seed)
+    };
+    // one batch per step: fast-forward the stream to the resume point
+    data.skip_to(ctx.start_step);
+
+    let exe = ctx.engine.artifact(&format!("grad_step_{}", ctx.tag))?;
+    let mut losses = Vec::with_capacity(ctx.end_step - ctx.start_step);
+    let mut tokens_seen = 0usize;
+    for it in ctx.start_step..ctx.end_step {
+        let b = data.next_batch();
+        let lr = lr_schedule(it, ctx.total, opts.peak_lr, opts.min_lr);
+        let mut ins: Vec<Value> =
+            layout.unflatten(&flat).into_iter().map(Value::F32).collect();
+        ins.push(Value::I32(b.tokens, vec![bsz, seq]));
+        ins.push(Value::I32(b.targets, vec![bsz, seq]));
+        ins.push(Value::F32(Tensor::new(vec![bsz, seq], b.loss_mask)));
+        ins.push(Value::I32(vec![lo as i32, hi as i32], vec![2]));
+        let mut outs = exe.run(&ins)?;
+        let local_loss = outs.pop().unwrap().data()[0];
+        let grads = layout.flatten(&outs, e_pad);
+        opt.step(comm, &mut flat, grads, lr, (it + 1) as f32)?;
+        // logging loss: rank-ordered sum of per-rank contributions; with
+        // contiguous batch shards this IS the batch-ordered sum the W=1
+        // path produces, so the logged curve is identical bit-for-bit
+        let loss = match comm {
+            Some(c) => c
+                .all_gather(vec![Tensor::scalar1(local_loss)])
+                .iter()
+                .map(|m| m[0].data()[0])
+                .fold(0.0f32, |a, x| a + x),
+            None => local_loss,
+        };
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {it}: {loss}");
+        tokens_seen += bsz * seq;
+        losses.push(loss);
+
+        // deterministic snapshot schedule: EVERY rank evaluates the same
+        // condition and joins the state-gather collective; only rank 0
+        // touches the filesystem
+        let snapshot_due = opts.save.is_some()
+            && (it + 1 == ctx.end_step
+                || (opts.save_every > 0 && (it + 1) % opts.save_every == 0));
+        if snapshot_due {
+            let (mf, vf) = opt.gather_state(comm, layout.total());
+            if rank == 0 {
+                let ck = Checkpoint {
+                    tag: ctx.tag.to_string(),
+                    mlm: opts.mlm,
+                    seed: opts.seed,
+                    total_steps: ctx.total as u64,
+                    steps_done: (it + 1) as u64,
+                    data_cursor: data.cursor() as u64,
+                    peak_lr: opts.peak_lr,
+                    min_lr: opts.min_lr,
+                    params: flat[..layout.total()].to_vec(),
+                    m: mf,
+                    v: vf,
+                };
+                let path = opts.save.as_deref().unwrap();
+                if let Err(e) = ck.save(path) {
+                    ctx.io.lock().unwrap().record(e);
+                }
+            }
+        }
+        if rank == 0 {
+            let mut io = ctx.io.lock().unwrap();
+            if let Some(f) = io.csv.as_mut() {
+                if let Err(e) = writeln!(f, "{it},{loss},{lr}") {
+                    io.record(e.into());
+                }
+            }
+            if opts.log_every > 0 && (it % opts.log_every == 0 || it + 1 == ctx.end_step) {
+                let tps = tokens_seen as f64 / ctx.t0.elapsed().as_secs_f64();
+                eprintln!(
+                    "[train {} w{world}] step {it:>4} loss {loss:.4} lr {lr:.2e} ({tps:.0} tok/s)",
+                    ctx.tag
+                );
+            }
+        }
+    }
+    Ok(RankOut { losses, opt_bytes: opt.state_bytes() })
+}
+
+/// Train a (variant, pattern) model with the given artifact tag.
 ///
 /// `artifact_tag` example: "basic_pure" -> uses `init_basic_pure` +
-/// `train_step_basic_pure`.
+/// `grad_step_basic_pure`.  `opts.world > 1` runs ZeRO-sharded over an
+/// in-memory SPMD world; `opts.resume`/`opts.save` make the run
+/// checkpointed and resumable (see the module docs).
 pub fn train(
     engine: &Arc<Engine>,
     variant: Variant,
@@ -79,89 +280,155 @@ pub fn train(
     opts: &TrainOpts,
 ) -> Result<TrainReport> {
     let cfg = &engine.model;
-    let init_name = format!("init_{artifact_tag}");
-    let step_name = format!("train_step_{artifact_tag}");
-    let params = Params::from_init_artifact(
-        engine, variant, pattern, &init_name, opts.seed as i32,
-    )
-    .with_context(|| format!("init artifact {init_name}"))?;
-    let n_params = params.len();
-    let total_elems = params.n_elems();
+    let world = opts.world.max(1);
+    anyhow::ensure!(
+        opts.halt_after == 0 || opts.save.is_some(),
+        "halt_after requires a save path (a halted run must be resumable)"
+    );
     let specs = param_specs(cfg, variant, pattern);
+    let layout = FlatLayout::new(&specs);
+    let total = opts.steps;
 
-    let step_exe = engine.artifact(&step_name)?;
-    let (bsz, seq) = (cfg.train_batch, cfg.train_seq);
-    let mut data = if opts.mlm {
-        BatchIter::mlm(cfg.vocab, bsz, seq, opts.seed)
+    // start state: fresh init artifact, or checkpoint restore.  Restore
+    // validates everything that must match for the resumed curve to be a
+    // continuation: model size, data stream, and lr-schedule position.
+    let (start_step, init_flat, moments) = match &opts.resume {
+        Some(path) => {
+            let ck = Checkpoint::load(path)?;
+            anyhow::ensure!(
+                ck.tag == artifact_tag,
+                "checkpoint {path} was written by tag {} (resuming {artifact_tag})",
+                ck.tag
+            );
+            anyhow::ensure!(
+                ck.n_elems() == layout.total(),
+                "checkpoint has {} parameter elements, model has {}",
+                ck.n_elems(),
+                layout.total()
+            );
+            anyhow::ensure!(
+                ck.seed == opts.seed && ck.mlm == opts.mlm,
+                "checkpoint data stream (seed {}, mlm {}) != run (seed {}, mlm {})",
+                ck.seed,
+                ck.mlm,
+                opts.seed,
+                opts.mlm
+            );
+            anyhow::ensure!(
+                ck.total_steps as usize == total
+                    && ck.peak_lr == opts.peak_lr
+                    && ck.min_lr == opts.min_lr,
+                "lr schedule mismatch: checkpoint ({} steps, peak {:e}, min {:e}) \
+                 vs run ({total} steps, peak {:e}, min {:e})",
+                ck.total_steps,
+                ck.peak_lr,
+                ck.min_lr,
+                opts.peak_lr,
+                opts.min_lr
+            );
+            anyhow::ensure!(
+                ck.data_cursor == ck.steps_done,
+                "checkpoint data cursor {} != steps done {}",
+                ck.data_cursor,
+                ck.steps_done
+            );
+            (ck.steps_done as usize, ck.params, Some((ck.m, ck.v)))
+        }
+        None => {
+            let init_name = format!("init_{artifact_tag}");
+            let params = Params::from_init_artifact(
+                engine, variant, pattern, &init_name, opts.seed as i32,
+            )
+            .with_context(|| format!("init artifact {init_name}"))?;
+            let tensors: Vec<Tensor> = specs
+                .iter()
+                .map(|(n, _, _)| params.get(n).unwrap().clone())
+                .collect();
+            (0usize, layout.flatten(&tensors, layout.total()), None)
+        }
+    };
+    anyhow::ensure!(
+        start_step < total,
+        "checkpoint is already at step {start_step} of {total}; nothing to train"
+    );
+    let end_step = if opts.halt_after > 0 {
+        (start_step + opts.halt_after).min(total)
     } else {
-        BatchIter::causal(cfg.vocab, bsz, seq, opts.seed)
+        total
     };
 
-    // state: flat params + adam moments
-    let mut flat: Vec<Tensor> = specs
-        .iter()
-        .map(|(n, _, _)| params.get(n).unwrap().clone())
-        .collect();
-    let mut mom: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
-    let mut vel: Vec<Tensor> = specs.iter().map(|(_, s, _)| Tensor::zeros(s)).collect();
-
-    let mut csv = match &opts.csv {
+    // loss CSV: a resumed run APPENDS to the existing curve (no second
+    // header); a fresh run truncates and writes the header
+    let csv = match &opts.csv {
         Some(p) => {
             if let Some(dir) = Path::new(p).parent() {
                 std::fs::create_dir_all(dir).ok();
             }
-            let mut f = std::fs::File::create(p)?;
-            writeln!(f, "step,loss,lr,tokens_per_sec")?;
+            let append = opts.resume.is_some() && Path::new(p).exists();
+            let f = if append {
+                OpenOptions::new().append(true).open(p)?
+            } else {
+                let mut f = File::create(p)?;
+                writeln!(f, "step,loss,lr")?;
+                f
+            };
             Some(f)
         }
         None => None,
     };
-
-    let mut losses = Vec::with_capacity(opts.steps);
+    let io = Mutex::new(DriverIo { csv, err: None });
     let t0 = Instant::now();
-    let mut tokens_seen = 0usize;
-    for it in 0..opts.steps {
-        let b = data.next_batch();
-        let lr = lr_schedule(it, opts.steps, opts.peak_lr, opts.min_lr);
-        let mut ins: Vec<Value> = Vec::with_capacity(3 * n_params + 5);
-        ins.extend(flat.iter().map(|t| Value::F32(t.clone())));
-        ins.extend(mom.iter().map(|t| Value::F32(t.clone())));
-        ins.extend(vel.iter().map(|t| Value::F32(t.clone())));
-        ins.push(Value::I32(b.tokens.clone(), vec![bsz, seq]));
-        ins.push(Value::I32(b.targets.clone(), vec![bsz, seq]));
-        ins.push(Value::F32(Tensor::new(vec![bsz, seq], b.loss_mask.clone())));
-        ins.push(Value::F32(Tensor::scalar1(lr)));
-        ins.push(Value::F32(Tensor::scalar1((it + 1) as f32)));
-        let mut outs = step_exe.run(&ins)?;
-        let loss_t = outs.pop().unwrap();
-        let loss = loss_t.data()[0];
-        anyhow::ensure!(loss.is_finite(), "loss diverged at step {it}: {loss}");
-        vel = outs.split_off(2 * n_params);
-        mom = outs.split_off(n_params);
-        flat = outs;
-        tokens_seen += bsz * seq;
-        losses.push(loss);
-        let elapsed = t0.elapsed().as_secs_f64();
-        let tps = tokens_seen as f64 / elapsed;
-        if let Some(f) = csv.as_mut() {
-            writeln!(f, "{it},{loss},{lr},{tps:.1}")?;
+    let ctx = RankCtx {
+        engine: engine.as_ref(),
+        tag: artifact_tag,
+        opts,
+        layout: &layout,
+        init_flat: &init_flat,
+        init_moments: moments.as_ref().map(|(m, v)| (m.as_slice(), v.as_slice())),
+        start_step,
+        end_step,
+        total,
+        io: &io,
+        t0,
+    };
+    let (rank0, wire_bytes, collective_ops) = if world == 1 {
+        (rank_loop(&ctx, None)?, 0u64, 0u64)
+    } else {
+        let w = World::new(world);
+        let results = w.run(|c| rank_loop(&ctx, Some(&c)));
+        let snap = w.counters();
+        let mut r0 = None;
+        for (r, res) in results.into_iter().enumerate() {
+            match res {
+                Ok(out) if r == 0 => r0 = Some(out),
+                Ok(_) => {}
+                Err(e) => return Err(e).with_context(|| format!("rank {r}")),
+            }
         }
-        if opts.log_every > 0 && (it % opts.log_every == 0 || it + 1 == opts.steps) {
-            eprintln!(
-                "[train {artifact_tag}] step {it:>4} loss {loss:.4} lr {lr:.2e} ({tps:.0} tok/s)"
-            );
-        }
+        (r0.unwrap(), snap.bytes, snap.collective_ops)
+    };
+    if let Some(e) = io.into_inner().unwrap().err {
+        return Err(e);
     }
-    let tail_n = (opts.steps / 10).max(1);
-    let tail_loss =
-        losses[opts.steps - tail_n..].iter().sum::<f32>() / tail_n as f32;
+
+    let losses = rank0.losses;
+    let executed = end_step - start_step;
+    let tail_n = (executed / 10).max(1);
+    let tail_loss = losses[executed - tail_n..].iter().sum::<f32>() / tail_n as f32;
+    let tokens_seen = executed * cfg.train_batch * cfg.train_seq;
     Ok(TrainReport {
         final_loss: *losses.last().unwrap(),
         tail_loss,
         tokens_per_sec: tokens_seen as f64 / t0.elapsed().as_secs_f64(),
         losses,
-        params: total_elems,
-        steps: opts.steps,
+        params: layout.total(),
+        steps: total,
+        world,
+        start_step,
+        opt_bytes_per_rank: rank0.opt_bytes,
+        opt_bytes_replicated: layout.total() * 8,
+        wire_bytes,
+        collective_ops,
     })
 }
 
@@ -182,6 +449,31 @@ mod tests {
     }
 
     #[test]
+    fn lr_schedule_continuity_under_resume() {
+        // the driver recomputes lr from the ABSOLUTE step and the
+        // checkpointed schedule horizon, so the lr at step k must not
+        // depend on where the run was cut — in any phase
+        let (total, peak, min_lr) = (100usize, 3e-3f32, 1e-6f32);
+        let uninterrupted: Vec<f32> =
+            (0..total).map(|k| lr_schedule(k, total, peak, min_lr)).collect();
+        // halt inside warmup (3), at the peak (10), mid-decay (55, 80)
+        for halt in [3usize, 10, 55, 80] {
+            for (k, &want) in uninterrupted.iter().enumerate().skip(halt) {
+                let resumed = lr_schedule(k, total, peak, min_lr);
+                assert_eq!(
+                    resumed.to_bits(),
+                    want.to_bits(),
+                    "step {k} after halt at {halt}"
+                );
+            }
+        }
+        // phase sanity: 5 is warmup (rising), 10 the peak, 80 decaying
+        assert!(uninterrupted[5] > uninterrupted[4]);
+        assert!(uninterrupted[80] < uninterrupted[40]);
+        assert!(uninterrupted[99] >= min_lr);
+    }
+
+    #[test]
     fn tiny_training_reduces_loss() {
         let engine = Engine::load_preset("tiny").expect("tiny artifacts");
         let pattern = Pattern("LL".into());
@@ -199,12 +491,16 @@ mod tests {
             "no learning: {:?}",
             rep.losses
         );
+        // W=1 holds the full replicated optimizer state and moves nothing
+        assert_eq!(rep.world, 1);
+        assert_eq!(rep.opt_bytes_per_rank, rep.opt_bytes_replicated);
+        assert_eq!(rep.wire_bytes, 0);
     }
 
     #[test]
     fn tiny_gated_training_reduces_loss() {
         // gated-variant training end-to-end through the native
-        // backward-through-gates train_step artifacts (the Table-2/4 rows
+        // backward-through-gates gradient artifacts (the Table-2/4 rows
         // that used to be PJRT-only).
         let engine = Engine::load_preset("tiny").expect("tiny artifacts");
         let pattern = Pattern("LL".into());
