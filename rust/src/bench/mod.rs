@@ -19,7 +19,7 @@ use crate::config::{Pattern, RunConfig, Scheduler, Variant};
 use crate::coordinator::{forward_distributed, Params};
 use crate::metrics::{fmt_seq, Table};
 use crate::runtime::Engine;
-use crate::serve::{argmax, Model};
+use crate::serve::{argmax, gen_trace, Model, ServeConfig, ServeLoop, TraceConfig};
 use crate::sim::{simulate, zero_shard, CostModel};
 use crate::coordinator::plan::SimShape;
 use crate::tensor::Tensor;
@@ -329,6 +329,121 @@ pub fn decode_bench_rows(engine: &Arc<Engine>, n_tokens: usize) -> Result<(Table
     Ok((t, rows))
 }
 
+/// One serve-bench measurement (`lasp2 bench-serve`): a full trace replay
+/// through the continuous-batching loop for one model.  `tag` follows the
+/// decode-bench convention (`{variant}_{pattern-tag}`), and the committed
+/// BENCH_floor.json gates match on `serve_tps_{tag}` (floor) and
+/// `serve_p99ttft_ms_{tag}` (ceiling).
+#[derive(Clone)]
+pub struct ServeRow {
+    pub tag: String,
+    pub pattern: String,
+    pub sessions: usize,
+    pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub decode_tps: f64,
+    pub sustained_tps: f64,
+    pub bytes_per_session: f64,
+    /// 1e9 / bytes_per_session — the headline serving-density contrast
+    /// between constant-state linear variants and the std KV baseline.
+    pub sessions_per_gb: f64,
+    pub cache_hits: u64,
+    pub evictions: u64,
+}
+
+/// `serve_bench_rows` without the machine-readable rows.
+pub fn serve_bench(
+    engine: &Arc<Engine>,
+    sessions: usize,
+    seed: u64,
+    budget: usize,
+    max_active: usize,
+    full: bool,
+) -> Result<Table> {
+    Ok(serve_bench_rows(engine, sessions, seed, budget, max_active, full)?.0)
+}
+
+/// Serve-loop bench (REAL-EXEC): replay one synthetic multi-tenant trace
+/// per model through [`ServeLoop`] and report TTFT percentiles, decode
+/// and sustained tokens/s, and sessions-per-GB.  The headline contrast:
+/// linear variants hold a CONSTANT per-session state, so their
+/// sessions/GB is flat in context length, while the softmax baseline's
+/// KV cache grows with every token.  `full` adds the remaining linear
+/// variants to the four headline models.
+pub fn serve_bench_rows(
+    engine: &Arc<Engine>,
+    sessions: usize,
+    seed: u64,
+    budget: usize,
+    max_active: usize,
+    full: bool,
+) -> Result<(Table, Vec<ServeRow>)> {
+    anyhow::ensure!(sessions > 0, "bench-serve: at least one session");
+    let mut cases: Vec<(Variant, &str)> = vec![(Variant::Basic, "0"), (Variant::Gla, "0")];
+    if full {
+        for v in Variant::linear_variants() {
+            if !cases.contains(&(*v, "0")) {
+                cases.push((*v, "0"));
+            }
+        }
+    }
+    cases.push((Variant::Basic, "1/2"));
+    cases.push((Variant::Softmax, "all"));
+    let mut t = Table::new(&[
+        "model",
+        "pattern",
+        "p50 TTFT ms",
+        "p99 TTFT ms",
+        "decode tok/s",
+        "sustained tok/s",
+        "KB/session",
+        "sessions/GB",
+        "cache hits",
+        "evictions",
+    ]);
+    let mut rows = Vec::new();
+    for (variant, ratio) in cases {
+        let model = Model::with_engine(engine.clone(), variant, ratio, 1)?;
+        model.warmup_serving()?;
+        let cfg = ServeConfig {
+            max_active,
+            mem_budget: budget,
+            ..Default::default()
+        };
+        let mut sl = ServeLoop::new(&model, cfg);
+        for req in gen_trace(&TraceConfig::for_model(model.config(), sessions, seed)) {
+            sl.enqueue(req);
+        }
+        let sum = sl.run()?;
+        t.row(&[
+            variant.name().to_string(),
+            model.pattern().0.clone(),
+            format!("{:.2}", sum.p50_ttft_ms),
+            format!("{:.2}", sum.p99_ttft_ms),
+            format!("{:.0}", sum.decode_tps),
+            format!("{:.0}", sum.sustained_tps),
+            format!("{:.1}", sum.mean_state_bytes / 1e3),
+            format!("{:.0}", sum.sessions_per_gb),
+            sum.cache_hits.to_string(),
+            sum.evictions.to_string(),
+        ]);
+        rows.push(ServeRow {
+            tag: format!("{}_{}", variant.name(), Pattern::tag(ratio)),
+            pattern: model.pattern().0.clone(),
+            sessions: sum.sessions,
+            p50_ttft_ms: sum.p50_ttft_ms,
+            p99_ttft_ms: sum.p99_ttft_ms,
+            decode_tps: sum.decode_tps,
+            sustained_tps: sum.sustained_tps,
+            bytes_per_session: sum.mean_state_bytes,
+            sessions_per_gb: sum.sessions_per_gb,
+            cache_hits: sum.cache_hits,
+            evictions: sum.evictions,
+        });
+    }
+    Ok((t, rows))
+}
+
 /// Table 2: convergence (loss + throughput) for the attention-module zoo,
 /// REAL training through the train_step artifacts.
 pub fn table2_convergence(engine: &Arc<Engine>, steps: usize) -> Result<Table> {
@@ -579,6 +694,11 @@ pub struct KernelsReport {
     pub crossover: Option<Vec<CrossoverRow>>,
     /// ZeRO replicated-vs-sharded memory/wire rows (`zero_sharding_table`)
     pub zero: Option<Vec<ZeroRow>>,
+    /// (preset, sessions, rows) — serve-loop trace replay
+    /// (`serve_bench_rows`); the gated metrics are emitted under FLAT
+    /// per-tag keys (`serve_tps_<tag>`, `serve_p99ttft_ms_<tag>`) so the
+    /// floor checker's flat-JSON scan can match them.
+    pub serve: Option<(String, usize, Vec<ServeRow>)>,
 }
 
 impl KernelsReport {
@@ -652,6 +772,34 @@ impl KernelsReport {
                 s.push_str(&format!("}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
             }
             s.push_str("  ]");
+        }
+        if let Some((preset, sessions, rows)) = &self.serve {
+            s.push_str(&format!(
+                ",\n  \"serve\": {{\"preset\": \"{preset}\", \"sessions\": {sessions}, \"rows\": [\n"
+            ));
+            for (i, r) in rows.iter().enumerate() {
+                s.push_str(&format!(
+                    "    {{\"tag\": \"{}\", \"pattern\": \"{}\", \
+                     \"serve_tps_{}\": {:.1}, \"serve_p99ttft_ms_{}\": {:.2}, \
+                     \"p50_ttft_ms\": {:.2}, \"sustained_tps\": {:.1}, \
+                     \"bytes_per_session\": {:.0}, \"sessions_per_gb\": {:.0}, \
+                     \"cache_hits\": {}, \"evictions\": {}}}{}\n",
+                    r.tag,
+                    r.pattern,
+                    r.tag,
+                    r.decode_tps,
+                    r.tag,
+                    r.p99_ttft_ms,
+                    r.p50_ttft_ms,
+                    r.sustained_tps,
+                    r.bytes_per_session,
+                    r.sessions_per_gb,
+                    r.cache_hits,
+                    r.evictions,
+                    if i + 1 < rows.len() { "," } else { "" }
+                ));
+            }
+            s.push_str("  ]}");
         }
         if let Some(rows) = &self.zero {
             s.push_str(",\n  \"zero\": [\n");

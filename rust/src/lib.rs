@@ -7,8 +7,10 @@
 //!   in-memory multi-device world with instrumented collectives, a
 //!   discrete-event cluster simulator for paper-scale extrapolation, a
 //!   training loop, the serving layer (`serve::Model`/`serve::Session`:
-//!   constant-memory autoregressive decode on the recurrent state), and
-//!   the benchmark harness for every table/figure.
+//!   constant-memory autoregressive decode on the recurrent state, plus
+//!   the `serve::ServeLoop` continuous-batching scheduler with prefix
+//!   caching and evict/resume), and the benchmark harness for every
+//!   table/figure.
 //! * **L2 (python/compile, build-time)** — Linear-Llama3 in JAX, lowered
 //!   once to HLO-text artifacts.
 //! * **L1 (python/compile/kernels, build-time)** — Pallas kernels for the
@@ -34,5 +36,5 @@ pub mod train;
 
 pub use config::{ModelConfig, Pattern, RunConfig, Scheduler, Variant};
 pub use runtime::Engine;
-pub use serve::{Batch, Model, Session};
+pub use serve::{decode_step, Batch, Model, ServeConfig, ServeLoop, Session};
 pub use tensor::Tensor;

@@ -10,6 +10,8 @@
 //!   bench-table4  Table 4 hybrid-ratio ablation (real training)
 //!   bench-table5  Table 5 gather-split ablation (sim)
 //!   bench-table6  Table 6 quantitative scalability (sim)
+//!   serve-sim     continuous-batching serve loop over a synthetic trace
+//!   bench-serve   serve-loop bench: TTFT percentiles + sessions/GB
 //!   bench-all     everything above
 
 use std::collections::HashMap;
@@ -22,7 +24,7 @@ use lasp2::config::{Pattern, RunConfig, Scheduler, Variant};
 use lasp2::coordinator::{forward_distributed, forward_mono, Params};
 use lasp2::metrics::Table;
 use lasp2::runtime::Engine;
-use lasp2::serve::{argmax, Model};
+use lasp2::serve::{argmax, gen_trace, Model, ServeConfig, ServeLoop, TraceConfig};
 use lasp2::sim::CostModel;
 use lasp2::tensor::par;
 use lasp2::train::{train, TrainOpts};
@@ -106,6 +108,23 @@ COMMANDS
   bench-table4  hybrid-ratio ablation (real training)
   bench-table5  AllGather split-size ablation (sim)
   bench-table6  quantitative scalability table (sim)
+  serve-sim     continuous-batching serve loop: admit/prefill/decode/evict
+                a synthetic multi-tenant trace through ONE model, printing
+                TTFT percentiles, tokens/s, and the schedule output digest
+                (bit-identical at any LASP2_THREADS — the CI cross-thread
+                determinism check compares the digest line)
+                  --preset tiny|small  --variant basic|gla|...  --ratio 0|1/2
+                  --sessions N  --seed S  --budget-mb MB (0 = unbounded)
+                  --max-active K  --cache-entries E (0 disables the cache)
+  bench-serve   serve-loop bench across the headline models (basic/gla
+                pure-linear, basic 1/2 hybrid, softmax std baseline;
+                --full adds the remaining linear variants)
+                  --preset tiny|small  --sessions N  --seed S
+                  --budget-mb MB  --max-active K
+                  --json path.json  (adds the \"serve\" section)
+                  --floor BENCH_floor.json  (fail if decode tok/s drops
+                  >30% below the serve_tps_* floor, or p99 TTFT rises
+                  >30% above the serve_p99ttft_ms_* ceiling)
   bench-decode  serving decode: tokens/s + state-bytes-vs-seqlen table
                   --preset tiny|small  --tokens N
                   --json path.json  (machine-readable results)
@@ -137,6 +156,8 @@ fn main() -> Result<()> {
         "run" => cmd_run(&args),
         "train" => cmd_train(&args),
         "generate" => cmd_generate(&args),
+        "serve-sim" => cmd_serve_sim(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "bench-decode" => cmd_decode_bench(&args),
         "bench-kernels" => cmd_bench_kernels(&args),
         "bench-fig3" => cmd_fig3(&args),
@@ -265,6 +286,7 @@ fn cmd_decode_bench(args: &Args) -> Result<()> {
             fig3: None,
             crossover: None,
             zero: None,
+            serve: None,
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
@@ -274,6 +296,101 @@ fn cmd_decode_bench(args: &Args) -> Result<()> {
             .with_context(|| format!("reading floor file {floor_path}"))?;
         check_decode_floor(&rows, &text)?;
         println!("decode floor check passed ({floor_path})");
+    }
+    Ok(())
+}
+
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "tiny");
+    let variant = Variant::parse(&args.get("variant", "basic"))?;
+    let ratio = args.get("ratio", "0");
+    let sessions = args.usize("sessions", 8)?;
+    let seed = args.usize("seed", 1)? as u64;
+    let budget_mb = args.usize("budget-mb", 0)?;
+    let cfg = ServeConfig {
+        max_active: args.usize("max-active", 8)?,
+        mem_budget: budget_mb << 20,
+        prefix_cache_entries: args.usize("cache-entries", 8)?,
+        ..Default::default()
+    };
+    anyhow::ensure!(cfg.max_active >= 1, "--max-active must be >= 1");
+    anyhow::ensure!(sessions >= 1, "--sessions must be >= 1");
+    let model = Model::load(&preset, variant, &ratio, 1)?;
+    model.warmup_serving()?;
+    println!(
+        "preset={preset} variant={variant} pattern={} sessions={sessions} seed={seed} \
+         max_active={} budget_mb={budget_mb}",
+        model.pattern().0,
+        cfg.max_active,
+    );
+    let mut sl = ServeLoop::new(&model, cfg);
+    for req in gen_trace(&TraceConfig::for_model(model.config(), sessions, seed)) {
+        sl.enqueue(req);
+    }
+    let sum = sl.run()?;
+    println!(
+        "served {} sessions in {} ticks ({:.1} ms): {} tokens generated",
+        sum.sessions,
+        sum.total_ticks,
+        sum.elapsed_s * 1e3,
+        sum.generated_tokens
+    );
+    println!(
+        "latency/throughput: p50 TTFT {:.2} ms, p99 TTFT {:.2} ms, \
+         decode {:.0} tok/s, sustained {:.0} tok/s",
+        sum.p50_ttft_ms, sum.p99_ttft_ms, sum.decode_tps, sum.sustained_tps
+    );
+    println!(
+        "state: {:.0} bytes/session mean ({:.0} sessions/GB) | cache {} hits \
+         / {} misses / {} inserts | {} evictions, {} resumes",
+        sum.mean_state_bytes,
+        sum.sessions_per_gb,
+        sum.cache_hits,
+        sum.cache_misses,
+        sum.cache_insertions,
+        sum.evictions,
+        sum.resumes
+    );
+    // the CI determinism smoke compares this line across LASP2_THREADS
+    println!("output_digest=0x{:016x}", sum.output_digest);
+    if args.is_set("profile") {
+        print_profile(model.engine());
+    }
+    Ok(())
+}
+
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let preset = args.get("preset", "tiny");
+    let sessions = args.usize("sessions", 256)?;
+    let seed = args.usize("seed", 1)? as u64;
+    let budget = args.usize("budget-mb", 0)? << 20;
+    let max_active = args.usize("max-active", 8)?;
+    let full = args.is_set("full");
+    let engine = Engine::load_preset(&preset)?;
+    println!("# Serve loop — continuous batching ({preset}, {sessions} sessions)\n");
+    let (table, rows) =
+        bench::serve_bench_rows(&engine, sessions, seed, budget, max_active, full)?;
+    println!("{}", table.to_markdown());
+    if let Some(path) = args.flags.get("json") {
+        let report = bench::KernelsReport {
+            source: "lasp2 bench-serve".into(),
+            threads: par::num_threads(),
+            gemm: Vec::new(),
+            train: None,
+            decode: None,
+            fig3: None,
+            crossover: None,
+            zero: None,
+            serve: Some((preset.clone(), sessions, rows.clone())),
+        };
+        std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    if let Some(floor_path) = args.flags.get("floor") {
+        let text = std::fs::read_to_string(floor_path)
+            .with_context(|| format!("reading floor file {floor_path}"))?;
+        check_serve_floor(&rows, &text)?;
+        println!("serve floor check passed ({floor_path})");
     }
     Ok(())
 }
@@ -310,6 +427,42 @@ fn check_decode_floor(rows: &[bench::DecodeRow], floor_text: &str) -> Result<()>
     anyhow::ensure!(checked > 0, "floor file matched no decode rows");
     if !failures.is_empty() {
         bail!("decode perf regression:\n  {}", failures.join("\n  "));
+    }
+    Ok(())
+}
+
+/// CI perf smoke for the serve loop: decode tokens/s must stay above
+/// `serve_tps_{tag}` * 0.7 (a >30% throughput regression fails), and p99
+/// TTFT must stay below `serve_p99ttft_ms_{tag}` * 1.3 (a >30% latency
+/// regression fails).  Rows without committed entries are skipped, but at
+/// least one metric must match or the floor file is misconfigured.
+fn check_serve_floor(rows: &[bench::ServeRow], floor_text: &str) -> Result<()> {
+    let mut failures = Vec::new();
+    let mut checked = 0;
+    for r in rows {
+        if let Some(floor) = json_lookup_f64(floor_text, &format!("serve_tps_{}", r.tag)) {
+            checked += 1;
+            if r.decode_tps < floor * 0.7 {
+                failures.push(format!(
+                    "serve_tps_{}: {:.0} tok/s < 70% of committed floor {:.0}",
+                    r.tag, r.decode_tps, floor
+                ));
+            }
+        }
+        let ceil_key = format!("serve_p99ttft_ms_{}", r.tag);
+        if let Some(ceil) = json_lookup_f64(floor_text, &ceil_key) {
+            checked += 1;
+            if r.p99_ttft_ms > ceil * 1.3 {
+                failures.push(format!(
+                    "{ceil_key}: {:.2} ms > 130% of committed ceiling {ceil:.2}",
+                    r.p99_ttft_ms
+                ));
+            }
+        }
+    }
+    anyhow::ensure!(checked > 0, "floor file matched no serve rows");
+    if !failures.is_empty() {
+        bail!("serve perf regression:\n  {}", failures.join("\n  "));
     }
     Ok(())
 }
@@ -353,6 +506,7 @@ fn cmd_bench_kernels(args: &Args) -> Result<()> {
             fig3: None,
             crossover: None,
             zero: None,
+            serve: None,
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
@@ -405,16 +559,21 @@ fn cmd_bench_all(args: &Args) -> Result<()> {
     println!("# Serving decode — constant-memory inference ({preset}, {n} tokens)\n");
     let (dtable, drows) = bench::decode_bench_rows(&engine, n)?;
     println!("{}", dtable.to_markdown());
+    let sessions = args.usize("serve-sessions", 64)?;
+    println!("# Serve loop — continuous batching ({preset}, {sessions} sessions)\n");
+    let (stable, srows) = bench::serve_bench_rows(&engine, sessions, 1, 0, 8, false)?;
+    println!("{}", stable.to_markdown());
     if let Some(path) = args.flags.get("json") {
         let report = bench::KernelsReport {
             source: "lasp2 bench-all".into(),
             threads: par::num_threads(),
             gemm,
             train: Some((preset.clone(), tag, step_ms, tps)),
-            decode: Some((preset, n, drows)),
+            decode: Some((preset.clone(), n, drows)),
             fig3: fig3_rows,
             crossover: Some(xrows),
             zero: Some(zrows),
+            serve: Some((preset, sessions, srows)),
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
@@ -639,6 +798,33 @@ mod tests {
         assert!(super::check_decode_floor(&[row(100.0)], text).is_err());
         // a floor file matching no rows is a configuration error
         assert!(super::check_decode_floor(&[row(250.0)], "{}").is_err());
+    }
+
+    #[test]
+    fn serve_floor_check() {
+        let text = r#"{"floors": {"serve_tps_basic_pure": 100.0,
+                       "serve_p99ttft_ms_basic_pure": 50.0}}"#;
+        let row = |tps: f64, p99: f64| lasp2::bench::ServeRow {
+            tag: "basic_pure".into(),
+            pattern: "LL".into(),
+            sessions: 8,
+            p50_ttft_ms: p99 / 2.0,
+            p99_ttft_ms: p99,
+            decode_tps: tps,
+            sustained_tps: tps / 2.0,
+            bytes_per_session: 1e4,
+            sessions_per_gb: 1e5,
+            cache_hits: 0,
+            evictions: 0,
+        };
+        // 80 tok/s >= 70 and 60 ms <= 65: both inside the 30% budgets
+        assert!(super::check_serve_floor(&[row(80.0, 60.0)], text).is_ok());
+        // throughput regression: 50 < 100 * 0.7
+        assert!(super::check_serve_floor(&[row(50.0, 60.0)], text).is_err());
+        // latency regression: 70 ms > 50 * 1.3
+        assert!(super::check_serve_floor(&[row(80.0, 70.0)], text).is_err());
+        // a floor file matching no rows is a configuration error
+        assert!(super::check_serve_floor(&[row(80.0, 60.0)], "{}").is_err());
     }
 
     #[test]

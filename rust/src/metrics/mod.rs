@@ -110,6 +110,16 @@ pub fn fmt_seq(tokens: usize) -> String {
     }
 }
 
+/// Nearest-rank percentile over an ASCENDING-sorted slice (`q` in 0..=1).
+/// Returns 0.0 for an empty slice — callers report "no samples" as zero.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +139,16 @@ mod tests {
         assert_eq!(fmt_si(1500.0), "1.5K");
         assert_eq!(fmt_si(2_000_000.0), "2.00M");
         assert_eq!(fmt_seq(2048 * 1024), "2048K");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
     }
 }

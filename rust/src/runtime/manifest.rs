@@ -34,6 +34,9 @@ impl DType {
     }
 }
 
+/// Declared tensor signature.  A `shape` dim of 0 is a wildcard: the
+/// runtime accepts any extent there (used for capacity-sized KV caches
+/// that grow between calls; kernels read the live extent off the input).
 #[derive(Clone, Debug)]
 pub struct TensorMeta {
     pub name: String,

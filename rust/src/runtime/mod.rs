@@ -146,12 +146,17 @@ impl Executable {
             );
         }
         for (v, m) in inputs.iter().zip(&self.meta.inputs) {
-            if v.shape() != m.shape.as_slice() {
+            // a manifest dim of 0 is a wildcard: the artifact accepts any
+            // extent there (capacity-sized KV caches grow between calls)
+            let vs = v.shape();
+            let ok = vs.len() == m.shape.len()
+                && vs.iter().zip(&m.shape).all(|(&a, &b)| b == 0 || a == b);
+            if !ok {
                 bail!(
                     "{}: input {} shape {:?} != manifest {:?}",
                     self.meta.name,
                     m.name,
-                    v.shape(),
+                    vs,
                     m.shape
                 );
             }

@@ -2094,8 +2094,10 @@ impl Registry {
                     f32m("wq", &[d, hh * dh]),
                     f32m("wk", &[d, hh * dh]),
                     f32m("wv", &[d, hh * dh]),
-                    f32m("k_cache", &[ms, hh, dh]),
-                    f32m("v_cache", &[ms, hh, dh]),
+                    // capacity-sized caches: dim 0 is a wildcard (the
+                    // serve layer grows them; only `len` rows are live)
+                    f32m("k_cache", &[0, hh, dh]),
+                    f32m("v_cache", &[0, hh, dh]),
                     i32m("len", &[1]),
                 ];
                 epi_ins(&mut v);
@@ -2118,6 +2120,11 @@ impl Registry {
                     len >= 0 && len as usize + cc <= ms,
                     "s_prefill: kv len {len} + chunk {cc} exceeds max_seq {ms}"
                 );
+                anyhow::ensure!(
+                    len as usize <= kc.shape()[0] && len as usize <= vc.shape()[0],
+                    "s_prefill: kv len {len} exceeds cache capacity {}",
+                    kc.shape()[0]
+                );
                 let qoff = len;
                 let len = len as usize;
                 let hn = rmsnorm(x, ln1);
@@ -2134,12 +2141,20 @@ impl Registry {
                 let mut s = scratch::take(cc * w);
                 for h in 0..hh {
                     let qs = &q.data()[h * dh..];
-                    gemm::nt(cc, dh, len, qs, stride, &kc.data()[h * dh..], stride, &mut s, w);
+                    // len == 0 also means the cache may still be capacity
+                    // 0 (a fresh session) — don't even slice it then
+                    if len > 0 {
+                        let ks = &kc.data()[h * dh..];
+                        gemm::nt(cc, dh, len, qs, stride, ks, stride, &mut s, w);
+                    }
                     let new_cols = &mut s[len..];
                     gemm::nt(cc, dh, cc, qs, stride, &k.data()[h * dh..], stride, new_cols, w);
                     softmax_causal_scaled_raw(&mut s, cc, w, scale, qoff, 0);
                     let out = &mut attn.data_mut()[h * dh..];
-                    gemm::nn(cc, len, dh, &s, w, &vc.data()[h * dh..], stride, out, stride);
+                    if len > 0 {
+                        let vrows = &vc.data()[h * dh..];
+                        gemm::nn(cc, len, dh, &s, w, vrows, stride, out, stride);
+                    }
                     let vs = &v.data()[h * dh..];
                     gemm::nn_acc(cc, cc, dh, &s[len..], w, vs, stride, out, stride);
                 }
@@ -2213,8 +2228,10 @@ impl Registry {
                         f32m("wq", &[d, hh * dh]),
                         f32m("wk", &[d, hh * dh]),
                         f32m("wv", &[d, hh * dh]),
-                        f32m("k_cache", &[b, ms, hh, dh]),
-                        f32m("v_cache", &[b, ms, hh, dh]),
+                        // per-session capacity in dim 1 is a wildcard; the
+                        // kernel reads the live extent off the tensor
+                        f32m("k_cache", &[b, 0, hh, dh]),
+                        f32m("v_cache", &[b, 0, hh, dh]),
                         i32m("len", &[b]),
                     ];
                     epi_ins(&mut v);
@@ -2239,6 +2256,7 @@ impl Registry {
                         .map(|e| e.host_f32())
                         .collect::<Result<_>>()?;
                     let (hh, dh, ms) = (cfg.n_heads, cfg.head_dim, cfg.max_seq);
+                    let cap = kc.shape()[1];
                     let stride = hh * dh;
                     let scale = 1.0 / (dh as f32).sqrt();
                     let d = cfg.d_model;
@@ -2248,6 +2266,10 @@ impl Registry {
                         anyhow::ensure!(
                             len >= 0 && (len as usize) < ms,
                             "s_decode: kv len {len} out of range (max_seq {ms})"
+                        );
+                        anyhow::ensure!(
+                            len as usize <= cap,
+                            "s_decode: kv len {len} exceeds cache capacity {cap}"
                         );
                         flops += 8 * d * stride + 6 * d * cfg.ffn_dim + 4 * len as usize * stride;
                     }
@@ -2261,29 +2283,35 @@ impl Registry {
                             let k = hn.matmul(wk).reshape(&[1, hh, dh]);
                             let v = hn.matmul(wv).reshape(&[1, hh, dh]);
                             let len = lens[bi] as usize;
-                            let base = bi * ms * stride;
+                            let base = bi * cap * stride;
                             let mut attn = Tensor::zeros(&[1, hh, dh]);
                             let mut s = scratch::take(len + 1);
                             for h in 0..hh {
                                 let qh = &q.data()[h * dh..(h + 1) * dh];
-                                gemm::nt(
-                                    1,
-                                    dh,
-                                    len,
-                                    qh,
-                                    dh,
-                                    &kc.data()[base + h * dh..],
-                                    stride,
-                                    &mut s,
-                                    len + 1,
-                                );
+                                // len == 0 can mean a capacity-0 fresh
+                                // cache — don't slice it then
+                                if len > 0 {
+                                    gemm::nt(
+                                        1,
+                                        dh,
+                                        len,
+                                        qh,
+                                        dh,
+                                        &kc.data()[base + h * dh..],
+                                        stride,
+                                        &mut s,
+                                        len + 1,
+                                    );
+                                }
                                 let kh = &k.data()[h * dh..(h + 1) * dh];
                                 s[len] = qh.iter().zip(kh).map(|(a, b2)| a * b2).sum();
                                 // q sits at position len: every entry visible
                                 softmax_causal_scaled_raw(&mut s, 1, len + 1, scale, len as i32, 0);
                                 let out = &mut attn.data_mut()[h * dh..(h + 1) * dh];
-                                let vrows = &vc.data()[base + h * dh..];
-                                gemm::nn(1, len, dh, &s, len + 1, vrows, stride, out, dh);
+                                if len > 0 {
+                                    let vrows = &vc.data()[base + h * dh..];
+                                    gemm::nn(1, len, dh, &s, len + 1, vrows, stride, out, dh);
+                                }
                                 let pl = s[len];
                                 let vh = &v.data()[h * dh..(h + 1) * dh];
                                 for (o, &vv) in out.iter_mut().zip(vh) {

@@ -1,0 +1,116 @@
+//! Request admission queue for the continuous-batching serve loop.
+//!
+//! Requests carry LOGICAL arrival/deadline metadata measured in scheduler
+//! ticks (one tick = one [`super::step_loop::ServeLoop::step`] call), not
+//! wall-clock time: the loop's admission decisions are pure functions of
+//! the tick counter, which is what makes the whole schedule — and hence
+//! every session's token stream — bit-reproducible at any thread count.
+
+use std::collections::VecDeque;
+
+/// One serving request: a prompt to prefill, a generation budget, and the
+/// scheduling metadata the loop orders work by.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Unique, monotonically increasing id (ties in every scheduling
+    /// ordering break on id, which keeps the loop deterministic).
+    pub id: u64,
+    /// Tick at which the request becomes visible to admission.
+    pub arrival_tick: u64,
+    /// Prompt tokens (system prefix + user turn).
+    pub prompt: Vec<i32>,
+    /// Length of the shared system prefix (prefix-cache key); 0 disables
+    /// prefix caching for this request.  Cache hits additionally require
+    /// the prefix to be chunk-aligned and shorter than the prompt.
+    pub prefix_len: usize,
+    /// Tokens to generate after the prompt.
+    pub max_new: usize,
+    /// Soft deadline tick; the eviction policy parks the request with the
+    /// LATEST deadline first (it has the most slack to absorb a stall).
+    pub deadline_tick: u64,
+}
+
+/// Arrival-ordered admission queue.  `push` keeps the queue sorted by
+/// `(arrival_tick, id)`; `pop_ready` releases the head once the loop's
+/// tick has reached its arrival.
+#[derive(Default)]
+pub struct AdmissionQueue {
+    queue: VecDeque<Request>,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> AdmissionQueue {
+        AdmissionQueue::default()
+    }
+
+    /// Insert in `(arrival_tick, id)` order (stable for any push order).
+    pub fn push(&mut self, req: Request) {
+        let key = (req.arrival_tick, req.id);
+        let at = self
+            .queue
+            .iter()
+            .position(|r| (r.arrival_tick, r.id) > key)
+            .unwrap_or(self.queue.len());
+        self.queue.insert(at, req);
+    }
+
+    /// Take the earliest request whose arrival tick has passed.
+    pub fn pop_ready(&mut self, tick: u64) -> Option<Request> {
+        match self.queue.front() {
+            Some(r) if r.arrival_tick <= tick => self.queue.pop_front(),
+            _ => None,
+        }
+    }
+
+    /// Arrival tick of the next queued request (for idle fast-forward).
+    pub fn next_arrival(&self) -> Option<u64> {
+        self.queue.front().map(|r| r.arrival_tick)
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: u64) -> Request {
+        Request {
+            id,
+            arrival_tick: arrival,
+            prompt: vec![1, 2, 3],
+            prefix_len: 0,
+            max_new: 4,
+            deadline_tick: arrival + 100,
+        }
+    }
+
+    #[test]
+    fn pops_in_arrival_then_id_order_regardless_of_push_order() {
+        let mut q = AdmissionQueue::new();
+        q.push(req(3, 5));
+        q.push(req(1, 5));
+        q.push(req(2, 0));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.next_arrival(), Some(0));
+        assert_eq!(q.pop_ready(10).unwrap().id, 2);
+        assert_eq!(q.pop_ready(10).unwrap().id, 1);
+        assert_eq!(q.pop_ready(10).unwrap().id, 3);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn holds_requests_until_their_arrival_tick() {
+        let mut q = AdmissionQueue::new();
+        q.push(req(1, 7));
+        assert!(q.pop_ready(6).is_none());
+        assert_eq!(q.pop_ready(7).unwrap().id, 1);
+        assert!(q.pop_ready(7).is_none());
+    }
+}

@@ -1,0 +1,162 @@
+//! Synthetic multi-tenant trace generator for the serve loop.
+//!
+//! Traces model a serving mix: a handful of shared SYSTEM prompts (the
+//! prefix-cache workload), per-request user turns of mixed length, short
+//! generations, and arrivals spread over a window of scheduler ticks.
+//! Generation is a pure function of the seed (an LCG, no external RNG),
+//! so the same `TraceConfig` always produces the identical request list —
+//! which the CI digest check relies on to compare thread counts.
+
+use crate::config::ModelConfig;
+
+use super::admission::Request;
+
+/// Trace shape knobs; build with [`TraceConfig::for_model`] so lengths
+/// stay inside the preset's chunk/context geometry.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub sessions: usize,
+    pub seed: u64,
+    /// Number of distinct shared system prompts.
+    pub sys_prompts: usize,
+    /// System-prefix length in tokens (chunk-aligned for cacheability).
+    pub sys_len: usize,
+    /// User-turn length range (inclusive).
+    pub user_min: usize,
+    pub user_max: usize,
+    /// Generation-budget range (inclusive).
+    pub gen_min: usize,
+    pub gen_max: usize,
+    /// Arrivals are spread uniformly over `[0, arrival_window)` ticks.
+    pub arrival_window: u64,
+    /// Deadline slack added beyond the request's own work estimate.
+    pub deadline_slack: u64,
+    pub vocab: usize,
+}
+
+impl TraceConfig {
+    /// Defaults derived from the model geometry: chunk-aligned system
+    /// prefix (one chunk), user turns of half-to-two chunks, 4-16 token
+    /// generations.  The longest possible request stays well inside
+    /// `max_seq` for every built-in preset.
+    pub fn for_model(cfg: &ModelConfig, sessions: usize, seed: u64) -> TraceConfig {
+        let c = cfg.chunk_len;
+        let t = TraceConfig {
+            sessions,
+            seed,
+            sys_prompts: 4,
+            sys_len: c,
+            user_min: c / 2,
+            user_max: 2 * c,
+            gen_min: 4,
+            gen_max: 16,
+            arrival_window: (sessions as u64) / 2 + 1,
+            deadline_slack: 256,
+            vocab: cfg.vocab,
+        };
+        assert!(
+            t.sys_len + t.user_max + t.gen_max < cfg.max_seq,
+            "trace lengths exceed max_seq {}",
+            cfg.max_seq
+        );
+        t
+    }
+}
+
+/// Deterministic 64-bit LCG (Knuth's MMIX constants).
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+}
+
+/// The shared system prompt with index `s`: deterministic tokens, distinct
+/// across prompts, independent of the trace seed (so two traces over the
+/// same model share cache entries).
+fn sys_prompt(s: usize, len: usize, vocab: usize) -> Vec<i32> {
+    (0..len)
+        .map(|i| ((s * 31 + i * 7 + 3) % vocab) as i32)
+        .collect()
+}
+
+/// Generate the request list for a trace, in id order.
+pub fn gen_trace(t: &TraceConfig) -> Vec<Request> {
+    let mut rng = Lcg(t.seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1));
+    let mut out = Vec::with_capacity(t.sessions);
+    for id in 0..t.sessions as u64 {
+        let s = rng.range(0, t.sys_prompts as u64 - 1) as usize;
+        let mut prompt = sys_prompt(s, t.sys_len, t.vocab);
+        let user_len = rng.range(t.user_min as u64, t.user_max as u64) as usize;
+        for _ in 0..user_len {
+            prompt.push((rng.next() % t.vocab as u64) as i32);
+        }
+        let max_new = rng.range(t.gen_min as u64, t.gen_max as u64) as usize;
+        let arrival_tick = rng.range(0, t.arrival_window - 1);
+        let work = (prompt.len() as u64) / 8 + max_new as u64;
+        out.push(Request {
+            id,
+            arrival_tick,
+            prefix_len: t.sys_len,
+            prompt,
+            max_new,
+            deadline_tick: arrival_tick + work + t.deadline_slack,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn trace_is_deterministic_and_in_bounds() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let t = TraceConfig::for_model(&cfg, 32, 7);
+        let a = gen_trace(&t);
+        let b = gen_trace(&t);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.arrival_tick, y.arrival_tick);
+            assert_eq!(x.max_new, y.max_new);
+        }
+        for r in &a {
+            assert!(r.prompt.len() + r.max_new < cfg.max_seq);
+            assert_eq!(r.prefix_len, cfg.chunk_len);
+            assert!(r.prompt.len() > r.prefix_len);
+            assert!(r.prompt.iter().all(|&t| t >= 0 && (t as usize) < cfg.vocab));
+            assert!(r.arrival_tick < t.arrival_window);
+        }
+        // different seeds produce different traces
+        let c = gen_trace(&TraceConfig { seed: 8, ..t });
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn shared_system_prompts_repeat_across_requests() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let t = TraceConfig::for_model(&cfg, 64, 3);
+        let trace = gen_trace(&t);
+        let mut prefixes: Vec<&[i32]> =
+            trace.iter().map(|r| &r.prompt[..r.prefix_len]).collect();
+        prefixes.sort();
+        prefixes.dedup();
+        // 64 requests draw from only sys_prompts distinct prefixes
+        assert!(prefixes.len() <= t.sys_prompts);
+        assert!(prefixes.len() > 1);
+    }
+}

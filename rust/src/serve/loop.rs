@@ -1,0 +1,568 @@
+//! Continuous-batching serve loop (module `step_loop`; the file keeps the
+//! scheduler's colloquial name, `loop.rs`).
+//!
+//! One [`ServeLoop::step`] is one scheduler tick:
+//!
+//! 1. **resume** — parked (evicted) sessions re-enter, oldest id first,
+//!    while the active-state memory budget allows;
+//! 2. **admit** — queued requests whose arrival tick has passed enter,
+//!    restoring a [`PrefixCache`] snapshot when their system prefix was
+//!    already prefilled by an earlier request;
+//! 3. **prefill** — up to `prefill_chunks_per_tick` chunk-sized units of
+//!    prompt are fed, round-robin across admitted requests, so a long
+//!    prompt never monopolizes a tick;
+//! 4. **decode** — every request whose prompt is complete advances ONE
+//!    token through [`decode_step`](super::decode_step), the same batched
+//!    entry point `Session::decode`/`Batch::decode` use;
+//! 5. **evict** — while active state exceeds the budget, the request with
+//!    the latest deadline is snapshotted and parked (its state moves off
+//!    the active pool, e.g. to host memory), to be resumed in phase 1.
+//!
+//! **Determinism.** Every scheduling decision is a pure function of the
+//! logical tick counter and request ids — never wall-clock time, which is
+//! only sampled for REPORTED metrics.  Since the kernels are bit-identical
+//! at any `LASP2_THREADS` and batched decode is bit-identical to B=1
+//! decode, each request's token stream equals a sequential
+//! `Session::generate` bit-for-bit, through prefix-cache hits and
+//! evict/resume cycles (pinned by `tests/serve_loop.rs`).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::admission::{AdmissionQueue, Request};
+use super::prefix_cache::{token_hash, PrefixCache};
+use super::{argmax, decode_step, Model, Session, Snapshot};
+
+/// Serve-loop knobs.  `mem_budget` bounds the summed `state_bytes` of
+/// ACTIVE sessions (0 = unbounded); parked snapshots and the prefix cache
+/// model host-side storage and are not counted against it.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Max concurrently active (admitted, unparked) sessions.
+    pub max_active: usize,
+    /// Active-state byte budget; exceeding it triggers eviction.  The
+    /// loop never parks its last active session, so one request always
+    /// makes progress even when a single state outgrows the budget.
+    pub mem_budget: usize,
+    /// Prefill units (one chunk, or one ragged tail) fed per tick.
+    pub prefill_chunks_per_tick: usize,
+    /// Prefix-cache capacity in entries (0 disables caching).
+    pub prefix_cache_entries: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_active: 8,
+            mem_budget: 0,
+            prefill_chunks_per_tick: 2,
+            prefix_cache_entries: 8,
+        }
+    }
+}
+
+/// An admitted request and its live session.
+struct InFlight<'m> {
+    req: Request,
+    session: Session<'m>,
+    /// Prompt tokens consumed so far.
+    fed: usize,
+    /// Next token to feed (last generated), once prefill is complete.
+    last: i32,
+    out: Vec<i32>,
+    /// Prefix is chunk-aligned, shorter than the prompt, and nonzero —
+    /// i.e. eligible for cache lookup/insert.
+    cacheable_prefix: bool,
+    /// Restored from the prefix cache (skip the cold-path insert).
+    from_cache: bool,
+    t_admit: Instant,
+    ttft_tick: Option<u64>,
+    ttft_wall_ms: Option<f64>,
+}
+
+/// An evicted request: state snapshotted off the active pool.
+struct Parked {
+    req: Request,
+    snap: Snapshot,
+    fed: usize,
+    last: i32,
+    out: Vec<i32>,
+    cacheable_prefix: bool,
+    from_cache: bool,
+    t_admit: Instant,
+    ttft_tick: Option<u64>,
+    ttft_wall_ms: Option<f64>,
+}
+
+/// A completed request, as the summary reports it.
+#[derive(Clone, Debug)]
+pub struct FinishedRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Ticks from arrival to the first generated token.
+    pub ttft_ticks: u64,
+    /// Wall ms from admission to the first generated token.
+    pub ttft_wall_ms: f64,
+    pub finished_tick: u64,
+    /// Final resident state bytes of the session.
+    pub state_bytes: usize,
+}
+
+/// Aggregate metrics over one trace replay.
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    pub sessions: usize,
+    pub total_ticks: u64,
+    pub generated_tokens: usize,
+    pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    /// Tokens/s over time spent INSIDE batched decode calls.
+    pub decode_tps: f64,
+    /// Generated tokens/s over the whole replay wall time.
+    pub sustained_tps: f64,
+    pub mean_state_bytes: f64,
+    /// 1e9 / mean_state_bytes — the headline serving-density number.
+    pub sessions_per_gb: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_insertions: u64,
+    pub evictions: u64,
+    pub resumes: u64,
+    /// FNV-1a over `(id, tokens)` in id order — equal across thread
+    /// counts and scheduling knobs iff the token streams are bit-equal.
+    pub output_digest: u64,
+    pub elapsed_s: f64,
+}
+
+/// FNV-1a digest of the finished token streams, in id order.
+pub fn output_digest(finished: &[FinishedRequest]) -> u64 {
+    let mut sorted: Vec<&FinishedRequest> = finished.iter().collect();
+    sorted.sort_by_key(|f| f.id);
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut fold = |h: &mut u64, bytes: &[u8]| {
+        for &b in bytes {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for f in sorted {
+        fold(&mut h, &f.id.to_le_bytes());
+        h = h.wrapping_add(token_hash(&f.tokens));
+    }
+    h
+}
+
+/// The continuous-batching scheduler over one [`Model`].
+pub struct ServeLoop<'m> {
+    model: &'m Model,
+    cfg: ServeConfig,
+    queue: AdmissionQueue,
+    cache: PrefixCache,
+    active: Vec<InFlight<'m>>,
+    parked: Vec<Parked>,
+    finished: Vec<FinishedRequest>,
+    tick: u64,
+    evictions: u64,
+    resumes: u64,
+    decode_nanos: u64,
+    decoded_tokens: usize,
+    /// Livelock bound bookkeeping for [`run`](Self::run).
+    work_units: u64,
+    max_arrival: u64,
+    t0: Instant,
+}
+
+impl<'m> ServeLoop<'m> {
+    pub fn new(model: &'m Model, cfg: ServeConfig) -> ServeLoop<'m> {
+        let cache = PrefixCache::new(cfg.prefix_cache_entries);
+        ServeLoop {
+            model,
+            cfg,
+            queue: AdmissionQueue::new(),
+            cache,
+            active: Vec::new(),
+            parked: Vec::new(),
+            finished: Vec::new(),
+            tick: 0,
+            evictions: 0,
+            resumes: 0,
+            decode_nanos: 0,
+            decoded_tokens: 0,
+            work_units: 0,
+            max_arrival: 0,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Queue a request for admission at its arrival tick.
+    pub fn enqueue(&mut self, req: Request) {
+        let c = self.model.config().chunk_len;
+        self.work_units +=
+            (req.prompt.len() / c + 2 + req.max_new) as u64;
+        self.max_arrival = self.max_arrival.max(req.arrival_tick);
+        self.queue.push(req);
+    }
+
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty() && self.parked.is_empty()
+    }
+
+    pub fn finished(&self) -> &[FinishedRequest] {
+        &self.finished
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn cache(&self) -> &PrefixCache {
+        &self.cache
+    }
+
+    fn active_bytes(&self) -> usize {
+        self.active.iter().map(|f| f.session.state_bytes()).sum()
+    }
+
+    fn over_budget(&self) -> bool {
+        self.cfg.mem_budget > 0 && self.active_bytes() > self.cfg.mem_budget
+    }
+
+    /// One scheduler tick: resume -> admit -> prefill -> decode -> evict.
+    pub fn step(&mut self) -> Result<()> {
+        // idle fast-forward: with nothing in flight, jump straight to the
+        // next arrival (keeps tick-based TTFT meaningful for sparse traces)
+        if self.active.is_empty() && self.parked.is_empty() {
+            if let Some(a) = self.queue.next_arrival() {
+                if a > self.tick {
+                    self.tick = a;
+                }
+            }
+        }
+        let tick = self.tick;
+
+        // 1. resume parked sessions, oldest id first, while budget allows
+        // (always resume into an empty pool, so parking can't deadlock)
+        while !self.parked.is_empty() && self.active.len() < self.cfg.max_active {
+            let pi = self
+                .parked
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, p)| p.req.id)
+                .map(|(i, _)| i)
+                .unwrap();
+            let fits = self.cfg.mem_budget == 0
+                || self.active_bytes() + self.parked[pi].snap.state_bytes()
+                    <= self.cfg.mem_budget;
+            if !fits && !self.active.is_empty() {
+                break;
+            }
+            let p = self.parked.remove(pi);
+            let mut session = self.model.session();
+            session.restore(&p.snap);
+            self.active.push(InFlight {
+                req: p.req,
+                session,
+                fed: p.fed,
+                last: p.last,
+                out: p.out,
+                cacheable_prefix: p.cacheable_prefix,
+                from_cache: p.from_cache,
+                t_admit: p.t_admit,
+                ttft_tick: p.ttft_tick,
+                ttft_wall_ms: p.ttft_wall_ms,
+            });
+            self.resumes += 1;
+        }
+
+        // 2. admit arrived requests while the pool and the budget allow
+        while self.active.len() < self.cfg.max_active {
+            if self.over_budget() && !self.active.is_empty() {
+                break;
+            }
+            let Some(req) = self.queue.pop_ready(tick) else { break };
+            let c = self.model.config().chunk_len;
+            let cacheable = req.prefix_len > 0
+                && req.prefix_len % c == 0
+                && req.prefix_len < req.prompt.len();
+            let mut session = self.model.session();
+            let mut fed = 0;
+            let mut from_cache = false;
+            if cacheable {
+                if let Some(snap) = self.cache.lookup(&req.prompt[..req.prefix_len], tick) {
+                    session.restore(snap);
+                    fed = req.prefix_len;
+                    from_cache = true;
+                }
+            }
+            self.active.push(InFlight {
+                req,
+                session,
+                fed,
+                last: 0,
+                out: Vec::new(),
+                cacheable_prefix: cacheable,
+                from_cache,
+                t_admit: Instant::now(),
+                ttft_tick: None,
+                ttft_wall_ms: None,
+            });
+        }
+        // decode/prefill order is id order, independent of admission path
+        self.active.sort_by_key(|f| f.req.id);
+
+        // 3. chunked prefill, round-robin in id order
+        let mut units = self.cfg.prefill_chunks_per_tick;
+        let c = self.model.config().chunk_len;
+        let vb = self.model.config().vocab;
+        while units > 0 {
+            let mut fed_any = false;
+            for f in self.active.iter_mut() {
+                if units == 0 {
+                    break;
+                }
+                let plen = f.req.prompt.len();
+                if f.fed >= plen {
+                    continue;
+                }
+                let take = if f.session.pos() % c == 0 && plen - f.fed >= c {
+                    c
+                } else {
+                    plen - f.fed
+                };
+                let logits = f.session.prefill(&f.req.prompt[f.fed..f.fed + take])?;
+                f.fed += take;
+                units -= 1;
+                fed_any = true;
+                if f.cacheable_prefix && !f.from_cache && f.fed == f.req.prefix_len {
+                    // cold path: snapshot right after the shared prefix so
+                    // later requests with the same system prompt skip it
+                    self.cache
+                        .insert(&f.req.prompt[..f.fed], f.session.snapshot(), tick);
+                }
+                if f.fed == plen {
+                    f.ttft_tick = Some(tick);
+                    f.ttft_wall_ms = Some(f.t_admit.elapsed().as_secs_f64() * 1e3);
+                    if f.req.max_new > 0 {
+                        let rows = logits.shape()[0];
+                        let first = argmax(&logits.data()[(rows - 1) * vb..]);
+                        f.last = first;
+                        f.out.push(first);
+                    }
+                }
+            }
+            if !fed_any {
+                break;
+            }
+        }
+
+        // 4. batched decode: one token for every prompt-complete request
+        let mut sess: Vec<&mut Session<'m>> = Vec::new();
+        let mut toks: Vec<i32> = Vec::new();
+        let mut sinks: Vec<(&mut i32, &mut Vec<i32>)> = Vec::new();
+        for f in self.active.iter_mut() {
+            if f.fed == f.req.prompt.len() && f.out.len() < f.req.max_new {
+                toks.push(f.last);
+                sess.push(&mut f.session);
+                sinks.push((&mut f.last, &mut f.out));
+            }
+        }
+        if !sess.is_empty() {
+            let td = Instant::now();
+            let rows = decode_step(&mut sess, &toks)?;
+            self.decode_nanos += td.elapsed().as_nanos() as u64;
+            self.decoded_tokens += rows.len();
+            for (row, (last, out)) in rows.iter().zip(sinks) {
+                let next = argmax(row.data());
+                *last = next;
+                out.push(next);
+            }
+        }
+
+        // retire completed requests
+        let mut i = 0;
+        while i < self.active.len() {
+            let done = {
+                let f = &self.active[i];
+                f.fed == f.req.prompt.len() && f.out.len() >= f.req.max_new
+            };
+            if done {
+                let f = self.active.remove(i);
+                self.finished.push(FinishedRequest {
+                    id: f.req.id,
+                    state_bytes: f.session.state_bytes(),
+                    ttft_ticks: f
+                        .ttft_tick
+                        .map(|t| t.saturating_sub(f.req.arrival_tick))
+                        .unwrap_or(0),
+                    ttft_wall_ms: f.ttft_wall_ms.unwrap_or(0.0),
+                    finished_tick: tick,
+                    tokens: f.out,
+                });
+            } else {
+                i += 1;
+            }
+        }
+
+        // 5. evict while over budget (latest deadline first, largest id
+        // on ties); the last active session is never parked
+        while self.over_budget() && self.active.len() > 1 {
+            let vi = self
+                .active
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, f)| (f.req.deadline_tick, f.req.id))
+                .map(|(i, _)| i)
+                .unwrap();
+            let f = self.active.remove(vi);
+            self.parked.push(Parked {
+                snap: f.session.snapshot(),
+                req: f.req,
+                fed: f.fed,
+                last: f.last,
+                out: f.out,
+                cacheable_prefix: f.cacheable_prefix,
+                from_cache: f.from_cache,
+                t_admit: f.t_admit,
+                ttft_tick: f.ttft_tick,
+                ttft_wall_ms: f.ttft_wall_ms,
+            });
+            self.evictions += 1;
+        }
+
+        self.tick += 1;
+        Ok(())
+    }
+
+    /// Drive [`step`](Self::step) to completion and summarize.  Bails on a
+    /// livelocked schedule (tick count far beyond the enqueued work).
+    pub fn run(&mut self) -> Result<ServeSummary> {
+        let bound = self.max_arrival + 10 * self.work_units + 1000;
+        while !self.is_done() {
+            if self.tick > bound {
+                bail!(
+                    "serve loop livelock: tick {} exceeds bound {bound} \
+                     ({} active, {} parked, {} queued)",
+                    self.tick,
+                    self.active.len(),
+                    self.parked.len(),
+                    self.queue.len()
+                );
+            }
+            self.step()?;
+        }
+        Ok(self.summary())
+    }
+
+    /// Aggregate metrics over the finished requests so far.
+    pub fn summary(&self) -> ServeSummary {
+        let elapsed = self.t0.elapsed().as_secs_f64();
+        let mut ttfts: Vec<f64> =
+            self.finished.iter().map(|f| f.ttft_wall_ms).collect();
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let generated: usize = self.finished.iter().map(|f| f.tokens.len()).sum();
+        let mean_state = if self.finished.is_empty() {
+            0.0
+        } else {
+            self.finished.iter().map(|f| f.state_bytes as f64).sum::<f64>()
+                / self.finished.len() as f64
+        };
+        ServeSummary {
+            sessions: self.finished.len(),
+            total_ticks: self.tick,
+            generated_tokens: generated,
+            p50_ttft_ms: crate::metrics::percentile(&ttfts, 0.50),
+            p99_ttft_ms: crate::metrics::percentile(&ttfts, 0.99),
+            decode_tps: if self.decode_nanos > 0 {
+                self.decoded_tokens as f64 / (self.decode_nanos as f64 / 1e9)
+            } else {
+                0.0
+            },
+            sustained_tps: if elapsed > 0.0 { generated as f64 / elapsed } else { 0.0 },
+            mean_state_bytes: mean_state,
+            sessions_per_gb: if mean_state > 0.0 { 1e9 / mean_state } else { 0.0 },
+            cache_hits: self.cache.hits,
+            cache_misses: self.cache.misses,
+            cache_insertions: self.cache.insertions,
+            evictions: self.evictions,
+            resumes: self.resumes,
+            output_digest: output_digest(&self.finished),
+            elapsed_s: elapsed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Variant;
+
+    fn request(id: u64, arrival: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+        Request {
+            id,
+            arrival_tick: arrival,
+            prompt,
+            prefix_len: 0,
+            max_new,
+            deadline_tick: arrival + 64,
+        }
+    }
+
+    #[test]
+    fn loop_drains_and_matches_sequential_generate() {
+        let model = Model::load("tiny", Variant::Basic, "0", 11).unwrap();
+        let mut sl = ServeLoop::new(&model, ServeConfig::default());
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|k| (0..40).map(|i| ((i * 7 + k * 13 + 5) % 256) as i32).collect())
+            .collect();
+        for (k, p) in prompts.iter().enumerate() {
+            sl.enqueue(request(k as u64, k as u64, p.clone(), 6));
+        }
+        let sum = sl.run().unwrap();
+        assert_eq!(sum.sessions, 3);
+        assert_eq!(sum.generated_tokens, 18);
+        let mut fin = sl.finished().to_vec();
+        fin.sort_by_key(|f| f.id);
+        for (k, p) in prompts.iter().enumerate() {
+            let mut s = model.session();
+            let want = s.generate(p, 6).unwrap();
+            assert_eq!(fin[k].tokens, want, "request {k}");
+        }
+    }
+
+    #[test]
+    fn idle_fast_forward_skips_to_next_arrival() {
+        let model = Model::load("tiny", Variant::Basic, "0", 11).unwrap();
+        let mut sl = ServeLoop::new(&model, ServeConfig::default());
+        sl.enqueue(request(0, 500, vec![1, 2, 3], 2));
+        let sum = sl.run().unwrap();
+        assert_eq!(sum.sessions, 1);
+        // one tick of ragged prefill + one decode tick, right after arrival
+        assert!(sum.total_ticks >= 500 && sum.total_ticks < 510);
+    }
+
+    #[test]
+    fn digest_is_order_insensitive_but_content_sensitive() {
+        let a = FinishedRequest {
+            id: 1,
+            tokens: vec![5, 6],
+            ttft_ticks: 0,
+            ttft_wall_ms: 0.0,
+            finished_tick: 0,
+            state_bytes: 0,
+        };
+        let mut b = a.clone();
+        b.id = 2;
+        b.tokens = vec![7];
+        let d1 = output_digest(&[a.clone(), b.clone()]);
+        let d2 = output_digest(&[b.clone(), a.clone()]);
+        assert_eq!(d1, d2);
+        let mut c = b.clone();
+        c.tokens = vec![8];
+        assert_ne!(d1, output_digest(&[a, c]));
+    }
+}

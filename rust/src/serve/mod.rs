@@ -14,10 +14,29 @@
 //!   state for prefix reuse (system-prompt caching).
 //! * `Batch` — steps many sessions per kernel call by grouping them into
 //!   the batched decode artifacts (`*_B{2,4,8}`).
+//! * `step_loop` (in `loop.rs`) — the continuous-batching serve loop:
+//!   admission ([`admission`]), prefix caching ([`prefix_cache`]),
+//!   eviction/resume under a memory budget, and chunked-prefill/decode
+//!   interleaving.  [`loadgen`] builds the synthetic multi-tenant traces
+//!   that drive it (`lasp2 serve-sim` / `lasp2 bench-serve`).
 //!
 //! Correctness is pinned by `tests/serve_decode.rs`: decoding token by
 //! token reproduces the `forward_mono_*` oracle logits at every position
 //! for all six linear variants, a hybrid pattern, and the std baseline.
+//! `tests/serve_loop.rs` pins the loop itself: its per-session token
+//! streams are bit-identical to sequential `Session::generate`, through
+//! prefix-cache hits and evict/resume cycles, at any thread count.
+
+pub mod admission;
+pub mod loadgen;
+pub mod prefix_cache;
+#[path = "loop.rs"]
+pub mod step_loop;
+
+pub use admission::{AdmissionQueue, Request};
+pub use loadgen::{gen_trace, TraceConfig};
+pub use prefix_cache::PrefixCache;
+pub use step_loop::{FinishedRequest, ServeConfig, ServeLoop, ServeSummary};
 
 use std::sync::Arc;
 
@@ -103,9 +122,11 @@ impl Model {
     }
 
     /// A fresh session: zero recurrent state, empty KV caches, position 0.
+    /// Std KV caches start at capacity 0 and grow on demand (power-of-two
+    /// doubling), so an idle hybrid session costs only its linear states.
     pub fn session(&self) -> Session<'_> {
         let cfg = &self.engine.model;
-        let (hh, dh, ms) = (cfg.n_heads, cfg.head_dim, cfg.max_seq);
+        let (hh, dh) = (cfg.n_heads, cfg.head_dim);
         let fk = cfg.feat_dim(self.params.variant);
         let states = self
             .params
@@ -119,8 +140,8 @@ impl Model {
                     })
                 } else {
                     LayerState::Std {
-                        k: Tensor::zeros(&[ms, hh, dh]),
-                        v: Tensor::zeros(&[ms, hh, dh]),
+                        k: Tensor::zeros(&[0, hh, dh]),
+                        v: Tensor::zeros(&[0, hh, dh]),
                         len: 0,
                     }
                 }
@@ -167,7 +188,40 @@ impl Model {
 #[derive(Clone)]
 enum LayerState {
     Linear(ChunkState),
+    /// `k`/`v` are capacity-sized `[cap, H, dh]` (cap ≥ `len`, power-of-
+    /// two doubling via [`grow_kv`]); only the first `len` rows are live.
     Std { k: Tensor, v: Tensor, len: usize },
+}
+
+/// Total resident bytes of a state vector: the whole `ChunkState` for
+/// linear layers, the ALLOCATED capacity (not the logical `len`) for std
+/// KV caches — what a serving system actually pins per session.
+fn states_bytes(states: &[LayerState]) -> usize {
+    states
+        .iter()
+        .map(|s| match s {
+            LayerState::Linear(cs) => cs.byte_size(),
+            LayerState::Std { k, v, .. } => k.byte_size() + v.byte_size(),
+        })
+        .sum()
+}
+
+/// Grow a std layer's KV cache to hold at least `needed` rows, copying
+/// the `live` rows over.  Capacity doubles (min 16 rows) and is capped at
+/// `max_seq` — the position checks upstream guarantee `needed <= max_seq`.
+fn grow_kv(k: &mut Tensor, v: &mut Tensor, live: usize, needed: usize, max_seq: usize) {
+    let cap = k.shape()[0];
+    if cap >= needed {
+        return;
+    }
+    let (hh, dh) = (k.shape()[1], k.shape()[2]);
+    let new_cap = needed.next_power_of_two().max(16).min(max_seq);
+    let stride = hh * dh;
+    for t in [k, v] {
+        let mut buf = vec![0.0f32; new_cap * stride];
+        buf[..live * stride].copy_from_slice(&t.data()[..live * stride]);
+        *t = Tensor::new(vec![new_cap, hh, dh], buf);
+    }
 }
 
 /// A point-in-time copy of a session's state (prefix reuse: snapshot after
@@ -179,6 +233,19 @@ pub struct Snapshot {
     model_id: usize,
     states: Vec<LayerState>,
     pos: usize,
+}
+
+impl Snapshot {
+    /// Position the snapshot was taken at.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Resident bytes of the captured state (same accounting as
+    /// [`Session::state_bytes`]) — what a parked/cached copy costs.
+    pub fn state_bytes(&self) -> usize {
+        states_bytes(&self.states)
+    }
 }
 
 /// One in-flight request: mutable decode state over a shared `Model`.
@@ -197,19 +264,12 @@ impl<'m> Session<'m> {
 
     /// Bytes of per-request state a serving system must hold: the
     /// recurrent `ChunkState` for linear layers (CONSTANT in position) and
-    /// the live rows of the std KV caches (LINEAR in position).  Std
-    /// caches are preallocated at `max_seq` here for simplicity; this
-    /// reports the logical size a paged cache would pin.
+    /// the ALLOCATED capacity of the std KV caches (grows with position,
+    /// power-of-two doubling).  This is actual resident memory — what the
+    /// sessions-per-GB accounting in `bench-serve` divides by — not the
+    /// logical row count.
     pub fn state_bytes(&self) -> usize {
-        let cfg = &self.model.engine.model;
-        let kv_row = cfg.n_heads * cfg.head_dim * 2 * 4;
-        self.states
-            .iter()
-            .map(|s| match s {
-                LayerState::Linear(cs) => cs.byte_size(),
-                LayerState::Std { len, .. } => len * kv_row,
-            })
-            .sum()
+        states_bytes(&self.states)
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -336,6 +396,7 @@ impl<'m> Session<'m> {
                 x = outs.pop().unwrap();
                 if let LayerState::Std { k, v, len } = &mut self.states[li] {
                     let stride = cfg.n_heads * cfg.head_dim;
+                    grow_kv(k, v, *len, *len + c, cfg.max_seq);
                     k.data_mut()[*len * stride..(*len + c) * stride]
                         .copy_from_slice(k_new.data());
                     v.data_mut()[*len * stride..(*len + c) * stride]
@@ -357,9 +418,11 @@ impl<'m> Session<'m> {
 
     /// One autoregressive step: O(1) memory on linear layers (recurrent
     /// state update), one KV-cache row on std layers.  Returns `[vocab]`
-    /// logits for the NEXT position.
+    /// logits for the NEXT position.  Routed through [`decode_step`] — the
+    /// same batching entry point the serve loop and `Batch` use — so the
+    /// B=1 path is the batched path, not a separate code path.
     pub fn decode(&mut self, token: i32) -> Result<Tensor> {
-        let mut out = decode_many(std::slice::from_mut(self), &[token])?;
+        let mut out = decode_step(&mut [self], &[token])?;
         Ok(out.pop().unwrap())
     }
 
@@ -433,34 +496,52 @@ impl<'m> Batch<'m> {
             tokens.len(),
             self.sessions.len()
         );
-        let mut out = Vec::with_capacity(tokens.len());
-        let mut start = 0;
-        while start < self.sessions.len() {
-            let b = self.group_size(self.sessions.len() - start);
-            out.extend(decode_many(
-                &mut self.sessions[start..start + b],
-                &tokens[start..start + b],
-            )?);
-            start += b;
-        }
-        Ok(out)
-    }
-
-    /// Largest registered decode batch size that fits `n` sessions.
-    fn group_size(&self, n: usize) -> usize {
-        let engine = self.model.engine.as_ref();
-        crate::runtime::native::DECODE_BATCH_SIZES
-            .iter()
-            .rev()
-            .copied()
-            .find(|b| *b <= n && engine.has_artifact(&format!("head_dec_B{b}")))
-            .unwrap_or(1)
+        let mut refs: Vec<&mut Session<'m>> = self.sessions.iter_mut().collect();
+        decode_step(&mut refs, tokens)
     }
 }
 
-/// The shared decode step over a group of sessions (batch size == group
+/// Largest registered decode batch size that fits `n` sessions.
+pub(crate) fn group_size(engine: &Engine, n: usize) -> usize {
+    crate::runtime::native::DECODE_BATCH_SIZES
+        .iter()
+        .rev()
+        .copied()
+        .find(|b| *b <= n && engine.has_artifact(&format!("head_dec_B{b}")))
+        .unwrap_or(1)
+}
+
+/// Step an arbitrary set of sessions by one token each (`tokens[i]` feeds
+/// `sessions[i]`): the SINGLE batching entry point every decode path goes
+/// through — `Session::decode`, `Session::generate`, `Batch::decode`, and
+/// the continuous-batching serve loop.  Sessions are greedily split into
+/// the largest registered `*_B{b}` kernel groups (B=1 remainder), so a
+/// lone session and a member of a full batch run the identical code path.
+/// Returns per-session `[vocab]` logits.
+pub fn decode_step(sessions: &mut [&mut Session<'_>], tokens: &[i32]) -> Result<Vec<Tensor>> {
+    anyhow::ensure!(
+        !sessions.is_empty() && tokens.len() == sessions.len(),
+        "decode_step: {} tokens for {} sessions",
+        tokens.len(),
+        sessions.len()
+    );
+    let engine = sessions[0].model.engine.clone();
+    let mut out = Vec::with_capacity(tokens.len());
+    let mut start = 0;
+    while start < sessions.len() {
+        let b = group_size(&engine, sessions.len() - start);
+        out.extend(decode_group(
+            &mut sessions[start..start + b],
+            &tokens[start..start + b],
+        )?);
+        start += b;
+    }
+    Ok(out)
+}
+
+/// The shared decode step over one kernel group (batch size == group
 /// length; a matching `*_B{len}` artifact set must be registered).
-fn decode_many(sessions: &mut [Session<'_>], tokens: &[i32]) -> Result<Vec<Tensor>> {
+fn decode_group(sessions: &mut [&mut Session<'_>], tokens: &[i32]) -> Result<Vec<Tensor>> {
     let b = sessions.len();
     anyhow::ensure!(b > 0 && tokens.len() == b, "decode group arity");
     let model = sessions[0].model;
@@ -572,36 +653,48 @@ fn decode_many(sessions: &mut [Session<'_>], tokens: &[i32]) -> Result<Vec<Tenso
             let epi_vals = model.params.epilogue(engine, li)?;
             // stage the KV caches: B=1 MOVES both cache tensors into the
             // Values (zero copy — the kernel attends over the live rows
-            // in place); B>1 packs into pooled scratch buffers
-            let (k_val, v_val, lens) = if b == 1 {
+            // in place); B>1 packs the LIVE rows into pooled scratch
+            // buffers sized to the group's max extent (the kernels take
+            // the capacity dim as a wildcard and never read past `len`)
+            let (k_val, v_val, lens, cap1) = if b == 1 {
                 match &mut sessions[0].states[li] {
-                    LayerState::Std { k, v, len } => (
-                        std::mem::replace(k, Tensor::zeros(&[0])).reshape(&[1, ms, hh, dh]),
-                        std::mem::replace(v, Tensor::zeros(&[0])).reshape(&[1, ms, hh, dh]),
-                        vec![*len as i32],
-                    ),
+                    LayerState::Std { k, v, len } => {
+                        let cap = k.shape()[0];
+                        (
+                            std::mem::replace(k, Tensor::zeros(&[0]))
+                                .reshape(&[1, cap, hh, dh]),
+                            std::mem::replace(v, Tensor::zeros(&[0]))
+                                .reshape(&[1, cap, hh, dh]),
+                            vec![*len as i32],
+                            cap,
+                        )
+                    }
                     LayerState::Linear(_) => bail!("layer {li}: state kind mismatch"),
                 }
             } else {
-                let mut kd = scratch::take(b * ms * stride);
-                let mut vd = scratch::take(b * ms * stride);
                 let mut lens = Vec::with_capacity(b);
-                for (bi, s) in sessions.iter().enumerate() {
+                for s in sessions.iter() {
                     match &s.states[li] {
-                        LayerState::Std { k, v, len } => {
-                            kd[bi * ms * stride..(bi + 1) * ms * stride]
-                                .copy_from_slice(k.data());
-                            vd[bi * ms * stride..(bi + 1) * ms * stride]
-                                .copy_from_slice(v.data());
-                            lens.push(*len as i32);
-                        }
+                        LayerState::Std { len, .. } => lens.push(*len as i32),
                         LayerState::Linear(_) => bail!("layer {li}: state kind mismatch"),
                     }
                 }
+                let gcap = lens.iter().map(|&l| l as usize + 1).max().unwrap();
+                let mut kd = scratch::take(b * gcap * stride);
+                let mut vd = scratch::take(b * gcap * stride);
+                for (bi, s) in sessions.iter().enumerate() {
+                    if let LayerState::Std { k, v, len } = &s.states[li] {
+                        let n = *len * stride;
+                        let base = bi * gcap * stride;
+                        kd[base..base + n].copy_from_slice(&k.data()[..n]);
+                        vd[base..base + n].copy_from_slice(&v.data()[..n]);
+                    }
+                }
                 (
-                    Tensor::new(vec![b, ms, hh, dh], kd),
-                    Tensor::new(vec![b, ms, hh, dh], vd),
+                    Tensor::new(vec![b, gcap, hh, dh], kd),
+                    Tensor::new(vec![b, gcap, hh, dh], vd),
                     lens,
+                    0,
                 )
             };
             let mut ins = vec![
@@ -624,8 +717,8 @@ fn decode_many(sessions: &mut [Session<'_>], tokens: &[i32]) -> Result<Vec<Tenso
             if b == 1 {
                 if let (Value::F32(kt), Value::F32(vt)) = (kc_back, vc_back) {
                     if let LayerState::Std { k, v, .. } = &mut sessions[0].states[li] {
-                        *k = kt.reshape(&[ms, hh, dh]);
-                        *v = vt.reshape(&[ms, hh, dh]);
+                        *k = kt.reshape(&[cap1, hh, dh]);
+                        *v = vt.reshape(&[cap1, hh, dh]);
                     }
                 }
             } else {
@@ -646,6 +739,7 @@ fn decode_many(sessions: &mut [Session<'_>], tokens: &[i32]) -> Result<Vec<Tenso
                 .zip(v_new.chunk0(b))
             {
                 if let LayerState::Std { k, v, len } = &mut s.states[li] {
+                    grow_kv(k, v, *len, *len + 1, ms);
                     k.data_mut()[*len * stride..(*len + 1) * stride]
                         .copy_from_slice(kr.data());
                     v.data_mut()[*len * stride..(*len + 1) * stride]

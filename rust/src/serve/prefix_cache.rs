@@ -1,0 +1,177 @@
+//! Prefix cache: shared system prompts prefill ONCE.
+//!
+//! Keyed by an FNV-1a hash of the prefix tokens (full token equality is
+//! re-checked on lookup, so a hash collision degrades to a miss, never a
+//! wrong restore).  Values are [`Snapshot`]s taken right after the prefix
+//! was prefilled; a hit restores the snapshot into a fresh session and the
+//! loop skips straight to the user-specific suffix.  Because `prefill` is
+//! deterministic and chunk-aligned restores replay the identical op
+//! sequence, a hit is bit-identical to a cold prefill (pinned by
+//! `tests/serve_loop.rs`).
+
+use super::Snapshot;
+
+/// FNV-1a over the token stream — the cache key and the serve loop's
+/// output digest both use it (stable, dependency-free, order-sensitive).
+pub fn token_hash(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &t in tokens {
+        for byte in t.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+struct Entry {
+    hash: u64,
+    tokens: Vec<i32>,
+    snap: Snapshot,
+    last_used: u64,
+    bytes: usize,
+}
+
+/// Fixed-capacity LRU cache from token prefixes to state snapshots.
+pub struct PrefixCache {
+    entries: Vec<Entry>,
+    capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl PrefixCache {
+    /// `capacity` = max entries (0 disables the cache entirely).
+    pub fn new(capacity: usize) -> PrefixCache {
+        PrefixCache {
+            entries: Vec::new(),
+            capacity,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total resident bytes of all cached snapshots.
+    pub fn bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Look up a prefix; on a hit, refresh its LRU stamp with the caller's
+    /// tick and return the snapshot to restore.
+    pub fn lookup(&mut self, tokens: &[i32], tick: u64) -> Option<&Snapshot> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let h = token_hash(tokens);
+        let at = self
+            .entries
+            .iter()
+            .position(|e| e.hash == h && e.tokens == tokens);
+        match at {
+            Some(i) => {
+                self.hits += 1;
+                self.entries[i].last_used = tick;
+                Some(&self.entries[i].snap)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly prefilled prefix, evicting the least-recently-used
+    /// entry (ties: smallest hash) when at capacity.  Re-inserting an
+    /// existing prefix refreshes its snapshot in place.
+    pub fn insert(&mut self, tokens: &[i32], snap: Snapshot, tick: u64) {
+        if self.capacity == 0 {
+            return;
+        }
+        let h = token_hash(tokens);
+        if let Some(e) = self
+            .entries
+            .iter_mut()
+            .find(|e| e.hash == h && e.tokens == tokens)
+        {
+            e.snap = snap;
+            e.last_used = tick;
+            return;
+        }
+        while self.entries.len() >= self.capacity {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| (e.last_used, e.hash))
+                .map(|(i, _)| i)
+                .unwrap();
+            self.entries.remove(victim);
+            self.evictions += 1;
+        }
+        let bytes = snap.state_bytes();
+        self.entries.push(Entry {
+            hash: h,
+            tokens: tokens.to_vec(),
+            snap,
+            last_used: tick,
+            bytes,
+        });
+        self.insertions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Model;
+    use super::*;
+    use crate::config::Variant;
+
+    #[test]
+    fn token_hash_is_order_sensitive_and_stable() {
+        assert_eq!(token_hash(&[1, 2, 3]), token_hash(&[1, 2, 3]));
+        assert_ne!(token_hash(&[1, 2, 3]), token_hash(&[3, 2, 1]));
+        assert_ne!(token_hash(&[]), token_hash(&[0]));
+    }
+
+    #[test]
+    fn lru_insert_lookup_evict() {
+        let model = Model::load("tiny", Variant::Basic, "0", 3).unwrap();
+        let s = model.session();
+        let mut cache = PrefixCache::new(2);
+        cache.insert(&[1, 2], s.snapshot(), 10);
+        cache.insert(&[3, 4], s.snapshot(), 11);
+        assert!(cache.lookup(&[1, 2], 12).is_some()); // refreshes [1,2]
+        cache.insert(&[5, 6], s.snapshot(), 13); // evicts [3,4] (LRU)
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions, 1);
+        assert!(cache.lookup(&[3, 4], 14).is_none());
+        assert!(cache.lookup(&[1, 2], 15).is_some());
+        assert!(cache.lookup(&[5, 6], 16).is_some());
+        assert_eq!(cache.hits, 4);
+        assert_eq!(cache.misses, 1);
+        assert!(cache.bytes() > 0);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let model = Model::load("tiny", Variant::Basic, "0", 3).unwrap();
+        let s = model.session();
+        let mut cache = PrefixCache::new(0);
+        cache.insert(&[1], s.snapshot(), 0);
+        assert!(cache.lookup(&[1], 1).is_none());
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.misses, 0);
+    }
+}
