@@ -16,7 +16,7 @@ fn bench_case(w: usize, elems: usize, iters: usize) -> (f64, f64) {
     let t0 = Instant::now();
     for _ in 0..iters {
         world.run(|c| {
-            c.all_gather(vec![Tensor::zeros(&[elems])]);
+            c.all_gather(vec![Tensor::zeros(&[elems])]).unwrap();
         });
     }
     let ag = t0.elapsed().as_secs_f64() / iters as f64;
@@ -30,10 +30,10 @@ fn bench_case(w: usize, elems: usize, iters: usize) -> (f64, f64) {
             let m = if r == 0 {
                 Tensor::zeros(&[elems])
             } else {
-                c.recv(r - 1).pop().unwrap()
+                c.recv(r - 1).unwrap().pop().unwrap()
             };
             if r + 1 < c.size() {
-                c.send(r + 1, vec![m]);
+                c.send(r + 1, vec![m]).unwrap();
             }
         });
     }

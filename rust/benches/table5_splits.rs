@@ -32,7 +32,8 @@ fn main() {
                     c.all_gather_split(
                         vec![Tensor::zeros(&[16, 256, 256])],
                         splits,
-                    );
+                    )
+                    .unwrap();
                 });
                 t0.elapsed().as_secs_f64()
             })

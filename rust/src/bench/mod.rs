@@ -699,6 +699,94 @@ pub struct KernelsReport {
     /// per-tag keys (`serve_tps_<tag>`, `serve_p99ttft_ms_<tag>`) so the
     /// floor checker's flat-JSON scan can match them.
     pub serve: Option<(String, usize, Vec<ServeRow>)>,
+    /// chaos-scenario recovery rows (`lasp2 chaos`)
+    pub fault: Option<Vec<FaultRow>>,
+}
+
+/// One chaos-scenario row (`lasp2 chaos`): a seeded fault injected into
+/// the elastic trainer or the serve loop, with recovery accounting.
+pub struct FaultRow {
+    pub scenario: String,
+    /// World size before / after elastic recovery (equal when the fault
+    /// was transient or serve-side).
+    pub world_before: usize,
+    pub world_after: usize,
+    pub recoveries: usize,
+    pub steps_lost: usize,
+    pub recovery_ms: f64,
+    /// Post-recovery result was bit-identical to the fault-free run.
+    pub deterministic: bool,
+}
+
+/// Format fault rows as the `"fault"` section body (a JSON array) —
+/// shared by [`KernelsReport::to_json`] and the `lasp2 chaos` splice
+/// path, so both emit byte-identical sections.
+pub fn fault_fragment(rows: &[FaultRow]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"world_before\": {}, \
+             \"world_after\": {}, \"recoveries\": {}, \"steps_lost\": {}, \
+             \"recovery_ms\": {:.3}, \"deterministic\": {}}}{}\n",
+            r.scenario,
+            r.world_before,
+            r.world_after,
+            r.recoveries,
+            r.steps_lost,
+            r.recovery_ms,
+            r.deterministic,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]");
+    s
+}
+
+/// Splice a `"fault"` section into an existing BENCH_kernels.json
+/// document, replacing any previous one — `lasp2 chaos` updates just its
+/// own section without re-running every other bench.  `fragment` is the
+/// section body (see [`fault_fragment`]), e.g. `[ ... ]`.
+pub fn splice_fault_section(existing: &str, fragment: &str) -> Result<String> {
+    let mut doc = existing.trim_end().to_string();
+    if let Some(k) = doc.find("\"fault\":") {
+        // drop the old section: preceding comma through balanced close
+        let start = doc[..k].rfind(',').unwrap_or(k);
+        let tail = &doc[k..];
+        let open = tail
+            .find(['[', '{'])
+            .ok_or_else(|| anyhow::anyhow!("malformed fault section"))?;
+        let mut depth = 0i64;
+        let mut in_str = false;
+        let mut esc = false;
+        let mut end = None;
+        for (i, ch) in tail[open..].char_indices() {
+            if esc {
+                esc = false;
+                continue;
+            }
+            match ch {
+                '\\' if in_str => esc = true,
+                '"' => in_str = !in_str,
+                '[' | '{' if !in_str => depth += 1,
+                ']' | '}' if !in_str => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = Some(k + open + i + 1);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let end =
+            end.ok_or_else(|| anyhow::anyhow!("unbalanced fault section"))?;
+        doc.replace_range(start..end, "");
+    }
+    let close = doc
+        .rfind('}')
+        .ok_or_else(|| anyhow::anyhow!("not a JSON object"))?;
+    let head = doc[..close].trim_end();
+    Ok(format!("{head},\n  \"fault\": {fragment}\n}}\n"))
 }
 
 impl KernelsReport {
@@ -819,6 +907,10 @@ impl KernelsReport {
             }
             s.push_str("  ]");
         }
+        if let Some(rows) = &self.fault {
+            s.push_str(",\n  \"fault\": ");
+            s.push_str(&fault_fragment(rows));
+        }
         s.push_str("\n}\n");
         s
     }
@@ -841,4 +933,69 @@ pub fn fig4_scalability(cm: &CostModel) -> Table {
         t.row(&[w.to_string(), fmt_seq(best), format!("{tps:.0}")]);
     }
     t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(fault: Option<Vec<FaultRow>>) -> KernelsReport {
+        KernelsReport {
+            source: "test".into(),
+            threads: 1,
+            gemm: Vec::new(),
+            train: None,
+            decode: None,
+            fig3: None,
+            crossover: None,
+            zero: None,
+            serve: None,
+            fault,
+        }
+    }
+
+    fn row(scenario: &str) -> FaultRow {
+        FaultRow {
+            scenario: scenario.into(),
+            world_before: 4,
+            world_after: 2,
+            recoveries: 1,
+            steps_lost: 1,
+            recovery_ms: 3.25,
+            deterministic: true,
+        }
+    }
+
+    #[test]
+    fn to_json_emits_fault_section_matching_the_fragment() {
+        let doc = report_with(Some(vec![row("crash_w4")])).to_json();
+        assert!(doc.contains("\"fault\": [\n"));
+        assert!(doc.contains("\"scenario\": \"crash_w4\""));
+        assert!(doc.contains(&fault_fragment(&[row("crash_w4")])));
+        // balanced braces/brackets (hand-rolled writer sanity)
+        let open = doc.matches(['{', '[']).count();
+        let close = doc.matches(['}', ']']).count();
+        assert_eq!(open, close);
+    }
+
+    #[test]
+    fn splice_inserts_then_replaces_without_duplicating() {
+        let base = report_with(None).to_json();
+        let frag1 = fault_fragment(&[row("crash_w4")]);
+        let d1 = splice_fault_section(&base, &frag1).unwrap();
+        assert_eq!(d1.matches("\"fault\"").count(), 1);
+        assert!(d1.contains("crash_w4"));
+        assert!(d1.ends_with("}\n"));
+        // splicing again replaces the old section in place
+        let frag2 = fault_fragment(&[row("straggler"), row("corrupt")]);
+        let d2 = splice_fault_section(&d1, &frag2).unwrap();
+        assert_eq!(d2.matches("\"fault\"").count(), 1);
+        assert!(!d2.contains("crash_w4"));
+        assert!(d2.contains("straggler") && d2.contains("corrupt"));
+        // and the result is byte-identical to emitting it directly
+        assert_eq!(d2, splice_fault_section(&base, &frag2).unwrap());
+        let open = d2.matches(['{', '[']).count();
+        let close = d2.matches(['}', ']']).count();
+        assert_eq!(open, close);
+    }
 }

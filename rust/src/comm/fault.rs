@@ -1,0 +1,418 @@
+//! Deterministic fault injection for the in-memory communicator.
+//!
+//! A [`FaultPlan`] is a seeded list of one-shot events keyed on
+//! `(rank, op_index)`, where a rank's op index counts every communicator
+//! call it makes (collectives, P2P sends/receives, barriers) in program
+//! order — so a plan built once replays identically at any thread count.
+//! Installed on a [`World`](super::World) via
+//! [`install_faults`](super::World::install_faults), the plan can:
+//!
+//! * **crash** a rank (it returns [`CommError::Crashed`] and poisons the
+//!   world so peers fail fast instead of hanging),
+//! * **delay** a rank (straggler injection — results must stay
+//!   bit-identical thanks to the two-barrier generation fencing),
+//! * **drop** a message on the receiver side for the first `times`
+//!   delivery attempts (recovered by bounded-backoff retry),
+//! * **corrupt** a message (a real bit flip in a copy, detected by the
+//!   per-message FNV-1a checksum sealed in at send time; transient
+//!   corruption is retried, persistent corruption surfaces as
+//!   [`CommError::Corrupt`] — never as a wrong numerical result).
+//!
+//! Events fire at most once even if a plan is re-installed on a rebuilt
+//! (elastic-recovery) world: the crash that killed W=4 must not kill the
+//! resumed W=2 run.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::Msg;
+
+/// Typed communication failure.  Every collective and P2P primitive
+/// returns `Result<_, CommError>`; the train driver keys its elastic
+/// recovery policy on the variant (see `DESIGN.md` "Fault tolerance").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// An injected crash killed `rank` at its `op`-th communicator call
+    /// (peers of a crashed rank observe the same variant via the abort
+    /// flag, so the supervisor can tell *who* died from any rank's error).
+    Crashed { rank: usize, op: u64 },
+    /// A peer (`rank`) failed or panicked and poisoned the world.
+    Aborted { rank: usize },
+    /// A barrier or receive wait exceeded the world timeout.
+    Timeout { rank: usize, ms: u64 },
+    /// A message failed its FNV-1a checksum even after all retries.
+    Corrupt { src: usize, dst: usize, op: u64, attempts: u32 },
+    /// A message never arrived within the retry budget.
+    Lost { src: usize, dst: usize, op: u64, attempts: u32 },
+    /// A P2P channel endpoint disappeared (peer thread exited).
+    PeerGone { rank: usize, peer: usize },
+    /// A shared-memory lock was poisoned by a panicking peer.
+    Poisoned { what: &'static str },
+    /// Internal protocol invariant broken (empty slot between barriers).
+    Protocol { what: &'static str },
+    /// A mesh sub-communicator was requested on a flat world.
+    NoMesh { dim: &'static str },
+}
+
+impl CommError {
+    /// The rank a rebuilt world must exclude, when this error identifies
+    /// one (only injected/observed crashes do — timeouts and corruption
+    /// keep the world size and retry from the checkpoint instead).
+    pub fn crashed_rank(&self) -> Option<usize> {
+        match self {
+            CommError::Crashed { rank, .. } => Some(*rank),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Crashed { rank, op } => {
+                write!(f, "comm/crash: rank {rank} crashed at op {op}")
+            }
+            CommError::Aborted { rank } => {
+                write!(f, "comm/abort: rank {rank} failed; world poisoned")
+            }
+            CommError::Timeout { rank, ms } => {
+                write!(f, "comm/timeout: rank {rank} waited > {ms} ms")
+            }
+            CommError::Corrupt { src, dst, op, attempts } => write!(
+                f,
+                "comm/corrupt: checksum mismatch {src}->{dst} at op {op} after {attempts} attempts"
+            ),
+            CommError::Lost { src, dst, op, attempts } => write!(
+                f,
+                "comm/lost: message {src}->{dst} at op {op} dropped after {attempts} attempts"
+            ),
+            CommError::PeerGone { rank, peer } => {
+                write!(f, "comm/peer-gone: rank {rank} lost channel to {peer}")
+            }
+            CommError::Poisoned { what } => write!(f, "comm/poisoned: {what} lock poisoned"),
+            CommError::Protocol { what } => write!(f, "comm/protocol: {what}"),
+            CommError::NoMesh { dim } => {
+                write!(f, "comm/no-mesh: {dim} sub-communicator on a flat world")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// Why a world was poisoned — recorded once in the barrier so every rank
+/// blocked anywhere in the communicator fails fast with the SAME typed
+/// error instead of each waiting out its own timeout.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum AbortCause {
+    Crash { rank: usize, op: u64 },
+    Fail { rank: usize },
+    Timeout { rank: usize, ms: u64 },
+}
+
+impl AbortCause {
+    pub(crate) fn to_error(self) -> CommError {
+        match self {
+            AbortCause::Crash { rank, op } => CommError::Crashed { rank, op },
+            AbortCause::Fail { rank } => CommError::Aborted { rank },
+            AbortCause::Timeout { rank, ms } => CommError::Timeout { rank, ms },
+        }
+    }
+}
+
+/// What an injected event does when its `(rank, at_op)` key matches.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultKind {
+    /// The rank dies: its next communicator call returns
+    /// [`CommError::Crashed`] and the world is poisoned.
+    Crash,
+    /// Straggler: the rank sleeps `micros` before starting the op.
+    Delay { micros: u64 },
+    /// Receiver-side loss: the message from `src` is invisible for the
+    /// first `times` delivery attempts (then retries see it).
+    DropMsg { src: usize, times: u32 },
+    /// Receiver-side corruption: a bit-flipped copy of the message from
+    /// `src` is delivered for the first `times` attempts; the checksum
+    /// catches it and the receiver retries.
+    Corrupt { src: usize, times: u32 },
+}
+
+/// One scheduled fault: `kind` fires when rank `rank` executes its
+/// `at_op`-th communicator call.  One-shot for `Crash`/`Delay` (the
+/// `fired` latch survives plan re-installation on a rebuilt world).
+#[derive(Debug)]
+pub struct FaultEvent {
+    rank: usize,
+    at_op: u64,
+    kind: FaultKind,
+    fired: AtomicBool,
+}
+
+/// A deterministic, seeded schedule of faults plus the retry policy the
+/// communicator uses when validation fails.  Build with the fluent
+/// constructors, share via `Arc`, install with
+/// [`World::install_faults`](super::World::install_faults).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    /// delivery attempts beyond the first before giving up (default 3)
+    pub max_retries: u32,
+    /// first backoff sleep; doubles per attempt, capped at 2^10 x base
+    pub backoff_base_us: u64,
+    retries: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Empty plan with the default retry policy (3 retries, 100 us base).
+    pub fn new() -> FaultPlan {
+        FaultPlan {
+            events: Vec::new(),
+            max_retries: 3,
+            backoff_base_us: 100,
+            retries: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    fn push(mut self, rank: usize, at_op: u64, kind: FaultKind) -> FaultPlan {
+        self.events.push(FaultEvent { rank, at_op, kind, fired: AtomicBool::new(false) });
+        self
+    }
+
+    /// Crash `rank` at its `at_op`-th communicator call.
+    pub fn crash(self, rank: usize, at_op: u64) -> FaultPlan {
+        self.push(rank, at_op, FaultKind::Crash)
+    }
+
+    /// Delay `rank` by `micros` before its `at_op`-th communicator call.
+    pub fn delay(self, rank: usize, at_op: u64, micros: u64) -> FaultPlan {
+        self.push(rank, at_op, FaultKind::Delay { micros })
+    }
+
+    /// Drop the message `src -> rank` during rank's `at_op`-th call for
+    /// the first `times` delivery attempts.
+    pub fn drop_msg(self, rank: usize, at_op: u64, src: usize, times: u32) -> FaultPlan {
+        self.push(rank, at_op, FaultKind::DropMsg { src, times })
+    }
+
+    /// Corrupt the message `src -> rank` during rank's `at_op`-th call
+    /// for the first `times` delivery attempts.
+    pub fn corrupt(self, rank: usize, at_op: u64, src: usize, times: u32) -> FaultPlan {
+        self.push(rank, at_op, FaultKind::Corrupt { src, times })
+    }
+
+    /// Override the retry policy.
+    pub fn with_retry(mut self, max_retries: u32, backoff_base_us: u64) -> FaultPlan {
+        self.max_retries = max_retries;
+        self.backoff_base_us = backoff_base_us;
+        self
+    }
+
+    /// Retries the communicator performed because of this plan.
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Events that actually fired.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Crash/delay hook, called as `rank` starts communicator op `op`.
+    pub(crate) fn on_op(&self, rank: usize, op: u64) -> Result<(), CommError> {
+        for ev in &self.events {
+            if ev.rank != rank || ev.at_op != op {
+                continue;
+            }
+            match ev.kind {
+                FaultKind::Crash => {
+                    if !ev.fired.swap(true, Ordering::Relaxed) {
+                        self.injected.fetch_add(1, Ordering::Relaxed);
+                        return Err(CommError::Crashed { rank, op });
+                    }
+                }
+                FaultKind::Delay { micros } => {
+                    if !ev.fired.swap(true, Ordering::Relaxed) {
+                        self.injected.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_micros(micros));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn injects(&self, want_drop: bool, dst: usize, op: u64, src: usize, attempt: u32) -> bool {
+        for ev in &self.events {
+            if ev.rank != dst || ev.at_op != op {
+                continue;
+            }
+            let hit = match ev.kind {
+                FaultKind::DropMsg { src: s, times } if want_drop => s == src && attempt < times,
+                FaultKind::Corrupt { src: s, times } if !want_drop => s == src && attempt < times,
+                _ => false,
+            };
+            if hit {
+                if !ev.fired.swap(true, Ordering::Relaxed) {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Is the `src -> dst` message invisible on this delivery `attempt`?
+    pub(crate) fn injects_drop(&self, dst: usize, op: u64, src: usize, attempt: u32) -> bool {
+        self.injects(true, dst, op, src, attempt)
+    }
+
+    /// Is the `src -> dst` message bit-flipped on this delivery `attempt`?
+    pub(crate) fn injects_corrupt(&self, dst: usize, op: u64, src: usize, attempt: u32) -> bool {
+        self.injects(false, dst, op, src, attempt)
+    }
+
+    /// Backoff before delivery attempt `attempt` (>= 1): exponential from
+    /// `backoff_base_us`, exponent capped so the sleep stays bounded.
+    pub(crate) fn backoff(&self, attempt: u32) -> Duration {
+        let exp = (attempt.saturating_sub(1)).min(10);
+        Duration::from_micros(self.backoff_base_us.saturating_mul(1u64 << exp))
+    }
+}
+
+/// Per-world fault bookkeeping: the shared plan plus one op counter per
+/// rank (counters are world-local, so a rebuilt world replays op indices
+/// from zero while the plan's one-shot latches carry over).
+#[derive(Debug)]
+pub(crate) struct FaultState {
+    pub(crate) plan: std::sync::Arc<FaultPlan>,
+    pub(crate) ops: Vec<AtomicU64>,
+}
+
+impl FaultState {
+    pub(crate) fn new(plan: std::sync::Arc<FaultPlan>, size: usize) -> FaultState {
+        FaultState { plan, ops: (0..size).map(|_| AtomicU64::new(0)).collect() }
+    }
+}
+
+/// FNV-1a over every tensor's shape and raw f32 bits — the per-message
+/// checksum sealed in at send time and verified at delivery.
+pub fn checksum_msg(msg: &Msg) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |byte: u8| {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for t in msg {
+        for &d in t.shape() {
+            for b in (d as u64).to_le_bytes() {
+                eat(b);
+            }
+        }
+        for &v in t.data() {
+            for b in v.to_bits().to_le_bytes() {
+                eat(b);
+            }
+        }
+    }
+    h
+}
+
+/// A genuinely corrupted copy: clone the message and flip the low bit of
+/// the first element of the first non-empty tensor (so the checksum MUST
+/// catch it — injection never silently alters the caller's data).
+pub(crate) fn corrupt_copy(msg: &Msg) -> Msg {
+    let mut out = msg.clone();
+    for t in &mut out {
+        if !t.data().is_empty() {
+            let d = t.data_mut();
+            d[0] = f32::from_bits(d[0].to_bits() ^ 1);
+            break;
+        }
+    }
+    out
+}
+
+/// splitmix64: the seeded generator chaos scenarios draw from (same
+/// algorithm the data pipeline uses, kept dependency-free).
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn checksum_detects_single_bit_flip() {
+        let msg: Msg = vec![Tensor::randn(&[4, 3], 7), Tensor::randn(&[2], 8)];
+        let clean = checksum_msg(&msg);
+        let bad = corrupt_copy(&msg);
+        assert_ne!(clean, checksum_msg(&bad), "bit flip must change the checksum");
+        // corruption happens in a COPY — the original is untouched
+        assert_eq!(clean, checksum_msg(&msg));
+    }
+
+    #[test]
+    fn checksum_covers_shape_not_just_data() {
+        let a: Msg = vec![Tensor::new(vec![2, 3], vec![0.0; 6])];
+        let b: Msg = vec![Tensor::new(vec![3, 2], vec![0.0; 6])];
+        assert_ne!(checksum_msg(&a), checksum_msg(&b));
+    }
+
+    #[test]
+    fn crash_event_fires_exactly_once() {
+        let plan = FaultPlan::new().crash(1, 5);
+        assert!(plan.on_op(1, 4).is_ok());
+        assert!(plan.on_op(0, 5).is_ok(), "other ranks unaffected");
+        assert_eq!(
+            plan.on_op(1, 5),
+            Err(CommError::Crashed { rank: 1, op: 5 })
+        );
+        // the latch holds across a re-installed plan (elastic rebuild)
+        assert!(plan.on_op(1, 5).is_ok(), "one-shot: must not re-fire");
+        assert_eq!(plan.injected(), 1);
+    }
+
+    #[test]
+    fn drop_and_corrupt_respect_attempt_budget() {
+        let plan = FaultPlan::new().drop_msg(2, 7, 0, 2).corrupt(2, 9, 1, 1);
+        assert!(plan.injects_drop(2, 7, 0, 0));
+        assert!(plan.injects_drop(2, 7, 0, 1));
+        assert!(!plan.injects_drop(2, 7, 0, 2), "attempt 2 sees the message");
+        assert!(!plan.injects_drop(2, 7, 1, 0), "wrong src");
+        assert!(plan.injects_corrupt(2, 9, 1, 0));
+        assert!(!plan.injects_corrupt(2, 9, 1, 1));
+        assert!(!plan.injects_corrupt(2, 7, 0, 0), "drop event is not corrupt");
+    }
+
+    #[test]
+    fn backoff_is_bounded_exponential() {
+        let plan = FaultPlan::new().with_retry(4, 100);
+        assert_eq!(plan.backoff(1).as_micros(), 100);
+        assert_eq!(plan.backoff(2).as_micros(), 200);
+        assert_eq!(plan.backoff(3).as_micros(), 400);
+        assert_eq!(plan.backoff(60).as_micros(), 100 << 10, "exponent capped");
+    }
+
+    #[test]
+    fn splitmix64_is_deterministic() {
+        let mut a = 42u64;
+        let mut b = 42u64;
+        let xs: Vec<u64> = (0..4).map(|_| splitmix64(&mut a)).collect();
+        let ys: Vec<u64> = (0..4).map(|_| splitmix64(&mut b)).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs[0], xs[1]);
+    }
+}

@@ -21,17 +21,41 @@
 //! `Communicator::col`) share one byte/step counter set with the root —
 //! the USP-style hybrid runs LASP-2's AllGather over the full world for
 //! linear layers and Ulysses All-to-All within rows for standard layers.
+//!
+//! **Fault model** (see `DESIGN.md` "Fault tolerance"): every primitive
+//! returns `Result<_, CommError>` instead of panicking.  Waits are
+//! bounded by a configurable timeout ([`World::set_timeout_ms`]); the
+//! barrier carries an abort flag so one rank's failure (injected crash,
+//! exhausted retries, worker panic) poisons the world and every peer
+//! fails fast with the same typed error instead of hanging.  With a
+//! [`FaultPlan`] installed, messages are sealed with an FNV-1a checksum
+//! at send time and verified at delivery with bounded exponential-backoff
+//! retries; without one, the hot path is untouched (no checksums, no
+//! clones beyond the original implementation).  [`World::run_catch`]
+//! supervises the per-rank threads and converts panics into per-rank
+//! `Err` values.
+
+pub mod fault;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Barrier, Mutex};
-use std::time::Instant;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
 use crate::tensor::Tensor;
 
+pub use fault::{CommError, FaultKind, FaultPlan};
+use fault::{AbortCause, FaultState};
+
 /// Message payload: a list of tensors (e.g. `[M_t, a_t]` for LASP-2 states).
 pub type Msg = Vec<Tensor>;
+
+/// Default bound on any single communicator wait (barrier or receive).
+pub const DEFAULT_TIMEOUT_MS: u64 = 30_000;
+
+/// Granularity at which blocked receivers poll the world abort flag.
+const ABORT_POLL: Duration = Duration::from_millis(5);
 
 /// Shared traffic counters, aggregated over every rank of a `World` (and,
 /// for mesh worlds, over all row/column sub-communicators too).
@@ -80,6 +104,92 @@ pub struct CommSnapshot {
     pub blocked_nanos: u64,
 }
 
+/// A message plus the FNV-1a checksum sealed in at send time (`None`
+/// when no fault plan is installed — the clean path pays nothing).
+#[derive(Clone)]
+struct Sealed {
+    msg: Msg,
+    sum: Option<u64>,
+}
+
+/// Generation barrier with an abort flag: `wait` returns `Err` (instead
+/// of blocking forever) once any rank records an [`AbortCause`], and a
+/// waiter that times out poisons the barrier itself so its peers fail
+/// fast too.  Replaces `std::sync::Barrier`, whose `wait` can neither
+/// time out nor be interrupted.
+struct SyncPoint {
+    size: usize,
+    state: Mutex<SyncState>,
+    cv: Condvar,
+}
+
+struct SyncState {
+    count: usize,
+    generation: u64,
+    abort: Option<AbortCause>,
+}
+
+impl SyncPoint {
+    fn new(size: usize) -> SyncPoint {
+        SyncPoint {
+            size,
+            state: Mutex::new(SyncState { count: 0, generation: 0, abort: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn wait(&self, rank: usize, timeout: Duration) -> Result<(), CommError> {
+        let mut st =
+            self.state.lock().map_err(|_| CommError::Poisoned { what: "barrier" })?;
+        if let Some(cause) = st.abort {
+            return Err(cause.to_error());
+        }
+        st.count += 1;
+        if st.count == self.size {
+            st.count = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let gen = st.generation;
+        let deadline = Instant::now() + timeout;
+        loop {
+            if st.generation != gen {
+                return Ok(());
+            }
+            if let Some(cause) = st.abort {
+                return Err(cause.to_error());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                let ms = timeout.as_millis() as u64;
+                st.abort = Some(AbortCause::Timeout { rank, ms });
+                self.cv.notify_all();
+                return Err(CommError::Timeout { rank, ms });
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .map_err(|_| CommError::Poisoned { what: "barrier" })?;
+            st = guard;
+        }
+    }
+
+    /// Record an abort cause (first writer wins) and wake every waiter.
+    fn abort(&self, cause: AbortCause) {
+        if let Ok(mut st) = self.state.lock() {
+            if st.abort.is_none() {
+                st.abort = Some(cause);
+            }
+            self.cv.notify_all();
+        }
+    }
+
+    fn aborted(&self) -> Option<AbortCause> {
+        self.state.lock().ok().and_then(|st| st.abort)
+    }
+}
+
 /// 2D process-mesh topology attached to a root `WorldInner`: orthogonal
 /// row/column sub-worlds that share the root's counters.
 struct Mesh {
@@ -94,23 +204,27 @@ struct Mesh {
 
 struct WorldInner {
     size: usize,
-    slots: Mutex<Vec<Option<Msg>>>,
+    slots: Mutex<Vec<Option<Sealed>>>,
     /// all_to_all mailbox: `mailbox[dst][src]`
-    mailbox: Mutex<Vec<Vec<Option<Msg>>>>,
-    barrier: Barrier,
+    mailbox: Mutex<Vec<Vec<Option<Sealed>>>>,
+    barrier: SyncPoint,
     /// p2p channels: `senders[dst][src]`, `receivers[dst][src]`
-    senders: Vec<Vec<Sender<Msg>>>,
-    receivers: Vec<Vec<Mutex<Receiver<Msg>>>>,
+    senders: Vec<Vec<Sender<Sealed>>>,
+    receivers: Vec<Vec<Mutex<Receiver<Sealed>>>>,
     /// shared with sub-worlds of a mesh so every hop is accounted once
     counters: Arc<CommCounters>,
     mesh: Option<Mesh>,
+    /// bound on any single barrier/recv wait (millis)
+    timeout_ms: AtomicU64,
+    /// installed fault plan + per-rank op counters (root world only)
+    fault: OnceLock<Arc<FaultState>>,
 }
 
 impl WorldInner {
     fn new(size: usize, counters: Arc<CommCounters>) -> WorldInner {
         assert!(size >= 1);
-        let mut senders: Vec<Vec<Sender<Msg>>> = (0..size).map(|_| Vec::new()).collect();
-        let mut receivers: Vec<Vec<Mutex<Receiver<Msg>>>> =
+        let mut senders: Vec<Vec<Sender<Sealed>>> = (0..size).map(|_| Vec::new()).collect();
+        let mut receivers: Vec<Vec<Mutex<Receiver<Sealed>>>> =
             (0..size).map(|_| Vec::new()).collect();
         for dst in 0..size {
             for _src in 0..size {
@@ -123,14 +237,34 @@ impl WorldInner {
             size,
             slots: Mutex::new(vec![None; size]),
             mailbox: Mutex::new((0..size).map(|_| vec![None; size]).collect()),
-            barrier: Barrier::new(size),
+            barrier: SyncPoint::new(size),
             senders,
             receivers,
             counters,
             mesh: None,
+            timeout_ms: AtomicU64::new(DEFAULT_TIMEOUT_MS),
+            fault: OnceLock::new(),
         }
     }
 }
+
+/// A worker thread panicked under [`World::run_catch`]; the payload (if
+/// it was a string) is preserved for the supervisor's report.
+#[derive(Debug)]
+pub struct RankPanic {
+    /// which rank's closure panicked
+    pub rank: usize,
+    /// the panic payload rendered as text
+    pub message: String,
+}
+
+impl std::fmt::Display for RankPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank {} panicked: {}", self.rank, self.message)
+    }
+}
+
+impl std::error::Error for RankPanic {}
 
 /// A communication world of `size` simulated devices (one OS thread each
 /// under [`World::run`]); optionally a 2D mesh with row/column
@@ -210,28 +344,81 @@ impl World {
         self.inner.counters.reset();
     }
 
+    /// Bound every barrier/receive wait (root AND mesh sub-worlds) to
+    /// `ms` milliseconds; a rank that exceeds it poisons the world with
+    /// [`CommError::Timeout`].
+    pub fn set_timeout_ms(&self, ms: u64) {
+        self.inner.timeout_ms.store(ms, Ordering::Relaxed);
+        if let Some(m) = &self.inner.mesh {
+            for g in m.row_groups.iter().chain(&m.col_groups) {
+                g.timeout_ms.store(ms, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Install a fault plan on this world.  Messages gain checksums, and
+    /// the plan's events fire against per-rank op counters that start at
+    /// zero for THIS world (one-shot events already fired on a previous
+    /// world stay fired).  At most one plan per world; later installs are
+    /// ignored.
+    pub fn install_faults(&self, plan: Arc<FaultPlan>) {
+        let _ = self.inner.fault.set(Arc::new(FaultState::new(plan, self.inner.size)));
+    }
+
     /// Run one SPMD closure per rank on its own thread; returns per-rank
-    /// results in rank order.  Panics in workers propagate.
-    pub fn run<T: Send>(
+    /// results in rank order.  Panics in workers propagate (thin wrapper
+    /// over [`World::run_catch`] for call sites that treat a worker panic
+    /// as fatal — fault-tolerant drivers use `run_catch` directly).
+    pub fn run<T: Send>(&self, f: impl Fn(Communicator) -> T + Sync) -> Vec<T> {
+        self.run_catch(f)
+            .into_iter()
+            .map(|r| match r {
+                Ok(v) => v,
+                Err(p) => panic!("worker panicked: {p}"),
+            })
+            .collect()
+    }
+
+    /// Run one SPMD closure per rank on its own thread, supervising the
+    /// workers: a panicking rank yields `Err(RankPanic)` in its slot (and
+    /// poisons the world so blocked peers fail fast with
+    /// [`CommError::Aborted`]) instead of tearing down the process.
+    pub fn run_catch<T: Send>(
         &self,
         f: impl Fn(Communicator) -> T + Sync,
-    ) -> Vec<T> {
+    ) -> Vec<Result<T, RankPanic>> {
         let n = self.size();
-        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut out: Vec<Option<Result<T, RankPanic>>> = (0..n).map(|_| None).collect();
         std::thread::scope(|s| {
             let mut handles = Vec::new();
             for (rank, slot) in out.iter_mut().enumerate() {
                 let comm = self.communicator(rank);
                 let f = &f;
+                let inner = &self.inner;
                 handles.push(s.spawn(move || {
-                    *slot = Some(f(comm));
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(comm))) {
+                        Ok(v) => *slot = Some(Ok(v)),
+                        Err(payload) => {
+                            inner.barrier.abort(AbortCause::Fail { rank });
+                            let message = if let Some(s) = payload.downcast_ref::<&str>() {
+                                (*s).to_string()
+                            } else if let Some(s) = payload.downcast_ref::<String>() {
+                                s.clone()
+                            } else {
+                                "non-string panic payload".to_string()
+                            };
+                            *slot = Some(Err(RankPanic { rank, message }));
+                        }
+                    }
                 }));
             }
             for h in handles {
-                h.join().expect("worker panicked");
+                let _ = h.join();
             }
         });
-        out.into_iter().map(|o| o.unwrap()).collect()
+        out.into_iter()
+            .map(|o| o.expect("worker thread wrote its slot"))
+            .collect()
     }
 }
 
@@ -247,6 +434,10 @@ fn slice0(t: &Tensor, parts: usize, idx: usize) -> Tensor {
         shape,
         t.data()[idx * rows * stride..(idx + 1) * rows * stride].to_vec(),
     )
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>, what: &'static str) -> Result<MutexGuard<'a, T>, CommError> {
+    m.lock().map_err(|_| CommError::Poisoned { what })
 }
 
 /// Per-device handle used inside worker threads.
@@ -293,9 +484,94 @@ impl Communicator {
         })
     }
 
-    /// Block until every rank of this communicator arrives.
-    pub fn barrier(&self) {
-        self.inner.barrier.wait();
+    fn timeout(&self) -> Duration {
+        Duration::from_millis(self.inner.timeout_ms.load(Ordering::Relaxed))
+    }
+
+    fn wait_barrier(&self) -> Result<(), CommError> {
+        self.inner.barrier.wait(self.rank, self.timeout())
+    }
+
+    /// Start a communicator op: bump this rank's op counter and let the
+    /// installed fault plan (if any) crash or delay us.  Returns the
+    /// fault context later delivery validation needs.
+    fn fault_enter(&self) -> Result<Option<(Arc<FaultState>, u64)>, CommError> {
+        let Some(fs) = self.inner.fault.get() else {
+            return Ok(None);
+        };
+        let op = fs.ops[self.rank].fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = fs.plan.on_op(self.rank, op) {
+            // injected crash: poison the world so peers fail fast with a
+            // typed error naming THIS rank instead of timing out
+            self.inner.barrier.abort(AbortCause::Crash { rank: self.rank, op });
+            return Err(e);
+        }
+        Ok(Some((fs.clone(), op)))
+    }
+
+    fn seal(&self, msg: Msg, checksum: bool) -> Sealed {
+        let sum = checksum.then(|| fault::checksum_msg(&msg));
+        Sealed { msg, sum }
+    }
+
+    /// Validate a delivered message against its sealed checksum, retrying
+    /// with bounded exponential backoff while the fault plan drops or
+    /// corrupts it.  Without a fault context this is a free unwrap.
+    fn open(
+        &self,
+        sealed: Sealed,
+        src: usize,
+        fctx: &Option<(Arc<FaultState>, u64)>,
+    ) -> Result<Msg, CommError> {
+        let Some((fs, op)) = fctx else {
+            return Ok(sealed.msg);
+        };
+        let plan = &fs.plan;
+        let want = sealed.sum.unwrap_or_else(|| fault::checksum_msg(&sealed.msg));
+        let mut attempt: u32 = 0;
+        loop {
+            if attempt > 0 {
+                plan.note_retry();
+                std::thread::sleep(plan.backoff(attempt));
+            }
+            let dropped = plan.injects_drop(self.rank, *op, src, attempt);
+            if !dropped {
+                let view = if plan.injects_corrupt(self.rank, *op, src, attempt) {
+                    fault::corrupt_copy(&sealed.msg)
+                } else {
+                    sealed.msg.clone()
+                };
+                if fault::checksum_msg(&view) == want {
+                    return Ok(view);
+                }
+            }
+            attempt += 1;
+            if attempt > plan.max_retries {
+                let err = if dropped {
+                    CommError::Lost { src, dst: self.rank, op: *op, attempts: attempt }
+                } else {
+                    CommError::Corrupt { src, dst: self.rank, op: *op, attempts: attempt }
+                };
+                self.inner.barrier.abort(AbortCause::Fail { rank: self.rank });
+                return Err(err);
+            }
+        }
+    }
+
+    /// Block until every rank of this communicator arrives (or the world
+    /// aborts / the wait times out).
+    pub fn barrier(&self) -> Result<(), CommError> {
+        let _fctx = self.fault_enter()?;
+        self.wait_barrier()
+    }
+
+    /// Cooperatively poison this world: record an abort naming this rank
+    /// and wake every blocked peer, which then fails with
+    /// [`CommError::Aborted`].  For supervisors whose rank closure bails
+    /// out for NON-communication reasons — without this, peers already
+    /// blocked in a collective would wait out the full timeout.
+    pub fn poison(&self) {
+        self.inner.barrier.abort(AbortCause::Fail { rank: self.rank });
     }
 
     fn account(&self, bytes: usize, t0: Instant, collective: bool) {
@@ -314,28 +590,42 @@ impl Communicator {
     /// rank-ordered list.  THE LASP-2 communication primitive (Alg. 1 line
     /// 6 / Alg. 2 line 7 on the memory states `M_t`, Alg. 3/4 on `dM_t`,
     /// Alg. 7 on K/V).
-    pub fn all_gather(&self, msg: Msg) -> Vec<Msg> {
+    pub fn all_gather(&self, msg: Msg) -> Result<Vec<Msg>, CommError> {
         let t0 = Instant::now();
+        let fctx = self.fault_enter()?;
         let sent: usize = msg.iter().map(|t| t.byte_size()).sum();
         {
-            let mut slots = self.inner.slots.lock().unwrap();
-            slots[self.rank] = Some(msg);
+            let mut slots = lock(&self.inner.slots, "all_gather slots")?;
+            slots[self.rank] = Some(self.seal(msg, fctx.is_some()));
         }
-        self.inner.barrier.wait();
-        let gathered: Vec<Msg> = {
-            let slots = self.inner.slots.lock().unwrap();
-            slots.iter().map(|s| s.as_ref().unwrap().clone()).collect()
+        self.wait_barrier()?;
+        let sealed: Vec<Sealed> = {
+            let slots = lock(&self.inner.slots, "all_gather slots")?;
+            let mut v = Vec::with_capacity(slots.len());
+            for s in slots.iter() {
+                v.push(
+                    s.clone()
+                        .ok_or(CommError::Protocol { what: "all_gather slot empty" })?,
+                );
+            }
+            v
         };
-        self.inner.barrier.wait();
+        // fence the generation BEFORE validation: our copies are private,
+        // so retry/backoff sleeps never stall peers starting the next op
+        self.wait_barrier()?;
+        let mut gathered = Vec::with_capacity(sealed.len());
+        for (src, s) in sealed.into_iter().enumerate() {
+            gathered.push(self.open(s, src, &fctx)?);
+        }
         // traffic: ring-allgather moves (W-1) * per-rank bytes per device
         self.account(sent * (self.size() - 1), t0, true);
-        gathered
+        Ok(gathered)
     }
 
     /// AllGather performed in `splits` sequential slices of the flattened
     /// payload (Table 5 ablation: "varying split sizes of gathering").
     /// Semantically identical to `all_gather`; launches `splits` collectives.
-    pub fn all_gather_split(&self, msg: Msg, splits: usize) -> Vec<Msg> {
+    pub fn all_gather_split(&self, msg: Msg, splits: usize) -> Result<Vec<Msg>, CommError> {
         assert!(splits >= 1);
         if splits == 1 {
             return self.all_gather(msg);
@@ -352,12 +642,12 @@ impl Communicator {
             let lo = (s * per).min(n);
             let hi = ((s + 1) * per).min(n);
             let piece = vec![Tensor::new(vec![hi - lo], flat[lo..hi].to_vec())];
-            let got = self.all_gather(piece);
+            let got = self.all_gather(piece)?;
             for (r, g) in got.into_iter().enumerate() {
                 gathered_flat[r].extend_from_slice(g[0].data());
             }
         }
-        gathered_flat
+        Ok(gathered_flat
             .into_iter()
             .map(|f| {
                 let mut out = Vec::with_capacity(shapes.len());
@@ -369,7 +659,7 @@ impl Communicator {
                 }
                 out
             })
-            .collect()
+            .collect())
     }
 
     /// All-to-All: rank r contributes `msgs[d]` for every destination d and
@@ -382,8 +672,9 @@ impl Communicator {
     /// and back.  Deterministic (rank-ordered output, two-barrier
     /// generation fencing like `all_gather`); wire accounting charges each
     /// rank the (W-1)/W of its payload that leaves the device.
-    pub fn all_to_all(&self, msgs: Vec<Msg>) -> Vec<Msg> {
+    pub fn all_to_all(&self, msgs: Vec<Msg>) -> Result<Vec<Msg>, CommError> {
         let t0 = Instant::now();
+        let fctx = self.fault_enter()?;
         let w = self.size();
         assert_eq!(msgs.len(), w, "all_to_all needs one message per destination");
         let sent: usize = msgs
@@ -392,23 +683,35 @@ impl Communicator {
             .filter(|(dst, _)| *dst != self.rank)
             .map(|(_, m)| m.iter().map(|t| t.byte_size()).sum::<usize>())
             .sum();
+        let checksum = fctx.is_some();
         {
-            let mut mb = self.inner.mailbox.lock().unwrap();
+            let mut mb = lock(&self.inner.mailbox, "all_to_all mailbox")?;
             for (dst, m) in msgs.into_iter().enumerate() {
                 debug_assert!(mb[dst][self.rank].is_none(), "mailbox generation overlap");
-                mb[dst][self.rank] = Some(m);
+                mb[dst][self.rank] = Some(self.seal(m, checksum));
             }
         }
-        self.inner.barrier.wait();
-        let out: Vec<Msg> = {
-            let mut mb = self.inner.mailbox.lock().unwrap();
-            mb[self.rank].iter_mut().map(|s| s.take().unwrap()).collect()
+        self.wait_barrier()?;
+        let sealed: Vec<Sealed> = {
+            let mut mb = lock(&self.inner.mailbox, "all_to_all mailbox")?;
+            let mut v = Vec::with_capacity(w);
+            for s in mb[self.rank].iter_mut() {
+                v.push(
+                    s.take()
+                        .ok_or(CommError::Protocol { what: "all_to_all slot empty" })?,
+                );
+            }
+            v
         };
         // fence the generation: no rank may start writing the next
         // all_to_all's slots until every rank has drained its row
-        self.inner.barrier.wait();
+        self.wait_barrier()?;
+        let mut out = Vec::with_capacity(w);
+        for (src, s) in sealed.into_iter().enumerate() {
+            out.push(self.open(s, src, &fctx)?);
+        }
         self.account(sent, t0, true);
-        out
+        Ok(out)
     }
 
     /// ReduceScatter: element-wise SUM of every rank's `msg`, then each
@@ -416,11 +719,15 @@ impl Communicator {
     /// must be divisible by the world size).
     ///
     /// The reduction is performed in fixed rank order 0..W-1 on every
-    /// rank, so results are bit-identical regardless of thread timing.
+    /// rank, so results are bit-identical regardless of thread timing —
+    /// and regardless of whether contributions were validated/retried
+    /// (the fault path clones before summing, preserving the exact
+    /// rank-ordered slice arithmetic of the clean path).
     /// Wire accounting matches a ring reduce-scatter: (W-1)/W of the
     /// payload per rank.
-    pub fn reduce_scatter(&self, msg: Msg) -> Msg {
+    pub fn reduce_scatter(&self, msg: Msg) -> Result<Msg, CommError> {
         let t0 = Instant::now();
+        let fctx = self.fault_enter()?;
         let w = self.size();
         let total: usize = msg.iter().map(|t| t.byte_size()).sum();
         for t in &msg {
@@ -432,49 +739,112 @@ impl Communicator {
             );
         }
         {
-            let mut slots = self.inner.slots.lock().unwrap();
-            slots[self.rank] = Some(msg);
+            let mut slots = lock(&self.inner.slots, "reduce_scatter slots")?;
+            slots[self.rank] = Some(self.seal(msg, fctx.is_some()));
         }
-        self.inner.barrier.wait();
-        let out: Msg = {
-            let slots = self.inner.slots.lock().unwrap();
-            let first = slots[0].as_ref().unwrap();
-            let mut acc: Vec<Tensor> =
-                first.iter().map(|t| slice0(t, w, self.rank)).collect();
-            for r in 1..w {
-                let m = slots[r].as_ref().unwrap();
-                for (a, t) in acc.iter_mut().zip(m.iter()) {
-                    a.add_assign(&slice0(t, w, self.rank));
+        self.wait_barrier()?;
+        let out: Msg = if fctx.is_some() {
+            // validated path: copy every contribution, fence, then verify
+            // each checksum (retrying injected faults) before the sum
+            let sealed: Vec<Sealed> = {
+                let slots = lock(&self.inner.slots, "reduce_scatter slots")?;
+                let mut v = Vec::with_capacity(w);
+                for s in slots.iter() {
+                    v.push(s.clone().ok_or(CommError::Protocol {
+                        what: "reduce_scatter slot empty",
+                    })?);
+                }
+                v
+            };
+            self.wait_barrier()?;
+            let mut acc: Option<Vec<Tensor>> = None;
+            for (src, s) in sealed.into_iter().enumerate() {
+                let m = self.open(s, src, &fctx)?;
+                let sl: Vec<Tensor> = m.iter().map(|t| slice0(t, w, self.rank)).collect();
+                match &mut acc {
+                    None => acc = Some(sl),
+                    Some(a) => {
+                        for (a, t) in a.iter_mut().zip(sl.iter()) {
+                            a.add_assign(t);
+                        }
+                    }
                 }
             }
-            acc
+            acc.ok_or(CommError::Protocol { what: "reduce_scatter empty world" })?
+        } else {
+            let out = {
+                let slots = lock(&self.inner.slots, "reduce_scatter slots")?;
+                let first = slots[0]
+                    .as_ref()
+                    .ok_or(CommError::Protocol { what: "reduce_scatter slot empty" })?;
+                let mut acc: Vec<Tensor> =
+                    first.msg.iter().map(|t| slice0(t, w, self.rank)).collect();
+                for r in 1..w {
+                    let m = slots[r]
+                        .as_ref()
+                        .ok_or(CommError::Protocol { what: "reduce_scatter slot empty" })?;
+                    for (a, t) in acc.iter_mut().zip(m.msg.iter()) {
+                        a.add_assign(&slice0(t, w, self.rank));
+                    }
+                }
+                acc
+            };
+            self.wait_barrier()?;
+            out
         };
-        self.inner.barrier.wait();
         self.account(total / w * (w - 1), t0, true);
-        out
+        Ok(out)
     }
 
     /// P2P send (LASP-1's ring primitive; also ZeCO's pipelined state hop).
-    pub fn send(&self, dst: usize, msg: Msg) {
+    pub fn send(&self, dst: usize, msg: Msg) -> Result<(), CommError> {
         let t0 = Instant::now();
+        let fctx = self.fault_enter()?;
         let bytes: usize = msg.iter().map(|t| t.byte_size()).sum();
-        self.inner.senders[dst][self.rank].send(msg).expect("recv side gone");
+        let sealed = self.seal(msg, fctx.is_some());
+        self.inner.senders[dst][self.rank]
+            .send(sealed)
+            .map_err(|_| CommError::PeerGone { rank: self.rank, peer: dst })?;
         self.account(bytes, t0, false);
+        Ok(())
     }
 
-    /// P2P blocking receive.
-    pub fn recv(&self, src: usize) -> Msg {
+    /// P2P blocking receive, bounded by the world timeout and interrupted
+    /// by a world abort (so a receiver whose sender crashed gets the
+    /// crash's typed error, not a timeout).
+    pub fn recv(&self, src: usize) -> Result<Msg, CommError> {
         let t0 = Instant::now();
-        let msg = self.inner.receivers[self.rank][src]
-            .lock()
-            .unwrap()
-            .recv()
-            .expect("send side gone");
+        let fctx = self.fault_enter()?;
+        let deadline = t0 + self.timeout();
+        let sealed = {
+            let rx = lock(&self.inner.receivers[self.rank][src], "recv channel")?;
+            loop {
+                if let Some(cause) = self.inner.barrier.aborted() {
+                    return Err(cause.to_error());
+                }
+                match rx.recv_timeout(ABORT_POLL) {
+                    Ok(s) => break s,
+                    Err(RecvTimeoutError::Timeout) => {
+                        if Instant::now() >= deadline {
+                            let ms = self.inner.timeout_ms.load(Ordering::Relaxed);
+                            self.inner
+                                .barrier
+                                .abort(AbortCause::Timeout { rank: self.rank, ms });
+                            return Err(CommError::Timeout { rank: self.rank, ms });
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(CommError::PeerGone { rank: self.rank, peer: src })
+                    }
+                }
+            }
+        };
+        let msg = self.open(sealed, src, &fctx)?;
         self.inner
             .counters
             .blocked_nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        msg
+        Ok(msg)
     }
 
     /// Right ring neighbor `(rank + 1) % W`.
@@ -499,7 +869,7 @@ mod tests {
     #[test]
     fn all_gather_orders_by_rank() {
         let w = World::new(4);
-        let results = w.run(|c| c.all_gather(vec![t(c.rank(), 1.0)]));
+        let results = w.run(|c| c.all_gather(vec![t(c.rank(), 1.0)]).unwrap());
         for msgs in results {
             assert_eq!(msgs.len(), 4);
             for (r, m) in msgs.iter().enumerate() {
@@ -514,7 +884,7 @@ mod tests {
         let results = w.run(|c| {
             let mut acc = 0.0;
             for it in 0..5 {
-                let got = c.all_gather(vec![t(c.rank(), it as f32)]);
+                let got = c.all_gather(vec![t(c.rank(), it as f32)]).unwrap();
                 acc += got[2][0].data()[0];
             }
             acc
@@ -527,10 +897,11 @@ mod tests {
     #[test]
     fn split_gather_equivalent() {
         let w = World::new(4);
-        let a = w.run(|c| c.all_gather(vec![Tensor::randn(&[3, 5], c.rank() as u64)]));
+        let a = w.run(|c| c.all_gather(vec![Tensor::randn(&[3, 5], c.rank() as u64)]).unwrap());
         let w2 = World::new(4);
         let b = w2.run(|c| {
             c.all_gather_split(vec![Tensor::randn(&[3, 5], c.rank() as u64)], 4)
+                .unwrap()
         });
         for (x, y) in a.iter().zip(&b) {
             for (mx, my) in x.iter().zip(y) {
@@ -549,8 +920,8 @@ mod tests {
             // pass rank around the full ring, accumulating
             let mut val = c.rank() as f32;
             for _ in 0..c.size() - 1 {
-                c.send(c.right(), vec![Tensor::full(&[1], val)]);
-                val = c.recv(c.left())[0].data()[0];
+                c.send(c.right(), vec![Tensor::full(&[1], val)]).unwrap();
+                val = c.recv(c.left()).unwrap()[0].data()[0];
             }
             val
         });
@@ -562,7 +933,7 @@ mod tests {
     fn counters_track_steps() {
         let w = World::new(4);
         w.run(|c| {
-            c.all_gather(vec![Tensor::zeros(&[8])]);
+            c.all_gather(vec![Tensor::zeros(&[8])]).unwrap();
         });
         let snap = w.counters();
         assert_eq!(snap.collective_ops, 4); // one launch per rank
@@ -575,7 +946,7 @@ mod tests {
     fn barrier_sync() {
         let w = World::new(8);
         let r = w.run(|c| {
-            c.barrier();
+            c.barrier().unwrap();
             c.rank()
         });
         assert_eq!(r, (0..8).collect::<Vec<_>>());
@@ -591,7 +962,7 @@ mod tests {
                 let msgs: Vec<Msg> = (0..c.size())
                     .map(|dst| vec![Tensor::full(&[4, 2], (c.rank() * 10 + dst) as f32)])
                     .collect();
-                c.all_to_all(msgs)
+                c.all_to_all(msgs).unwrap()
             });
             for (r, out) in results.iter().enumerate() {
                 assert_eq!(out.len(), size);
@@ -621,7 +992,7 @@ mod tests {
                         vec![Tensor::full(&[2], (gen * 100 + c.rank() * 10 + dst) as f32)]
                     })
                     .collect();
-                let out = c.all_to_all(msgs);
+                let out = c.all_to_all(msgs).unwrap();
                 sums.push(out.iter().map(|m| m[0].data()[0]).sum::<f32>());
             }
             sums
@@ -644,7 +1015,7 @@ mod tests {
                 let n = 2 * c.size();
                 let data: Vec<f32> =
                     (0..n).map(|i| (i * (c.rank() + 1)) as f32).collect();
-                c.reduce_scatter(vec![Tensor::new(vec![n], data)])
+                c.reduce_scatter(vec![Tensor::new(vec![n], data)]).unwrap()
             });
             // sum over ranks of (rank+1) = W(W+1)/2
             let mult = (size * (size + 1) / 2) as f32;
@@ -670,8 +1041,8 @@ mod tests {
             let w = World::new(size);
             let got = w.run(|c| {
                 let x = Tensor::randn(&[2 * c.size(), 3], 77 + c.rank() as u64);
-                let rs = c.reduce_scatter(vec![x.clone()]);
-                let all = c.all_gather(vec![x]);
+                let rs = c.reduce_scatter(vec![x.clone()]).unwrap();
+                let all = c.all_gather(vec![x]).unwrap();
                 let mut sum = all[0][0].clone();
                 for m in &all[1..] {
                     sum.add_assign(&m[0]);
@@ -696,8 +1067,8 @@ mod tests {
             let row = c.row().expect("mesh row");
             let col = c.col().expect("mesh col");
             assert!(row.row().is_none(), "sub-communicators are flat");
-            let rg = row.all_gather(vec![Tensor::full(&[1], c.rank() as f32)]);
-            let cg = col.all_gather(vec![Tensor::full(&[1], c.rank() as f32)]);
+            let rg = row.all_gather(vec![Tensor::full(&[1], c.rank() as f32)]).unwrap();
+            let cg = col.all_gather(vec![Tensor::full(&[1], c.rank() as f32)]).unwrap();
             let rv: Vec<f32> = rg.iter().map(|m| m[0].data()[0]).collect();
             let cv: Vec<f32> = cg.iter().map(|m| m[0].data()[0]).collect();
             (rv, cv)
@@ -721,7 +1092,7 @@ mod tests {
             let msgs: Vec<Msg> = (0..row.size())
                 .map(|d| vec![Tensor::full(&[1], (c.rank() * 10 + d) as f32)])
                 .collect();
-            let out = row.all_to_all(msgs);
+            let out = row.all_to_all(msgs).unwrap();
             out.iter().map(|m| m[0].data()[0]).collect::<Vec<f32>>()
         });
         // rank 0's row peers are {0,1}: receives [0*10+0, 1*10+0]
@@ -730,5 +1101,110 @@ mod tests {
         // rank 2's row peers are {2,3}
         assert_eq!(results[2], vec![20.0, 30.0]);
         assert_eq!(results[3], vec![21.0, 31.0]);
+    }
+
+    #[test]
+    fn run_catch_isolates_a_panicking_rank() {
+        let w = World::new(3);
+        let results = w.run_catch(|c| {
+            if c.rank() == 1 {
+                panic!("injected worker panic");
+            }
+            // peers blocked on the dead rank get a typed abort, not a hang
+            match c.all_gather(vec![Tensor::zeros(&[2])]) {
+                Err(CommError::Aborted { rank: 1 }) => c.rank(),
+                other => panic!("expected Aborted{{1}}, got {other:?}"),
+            }
+        });
+        assert_eq!(*results[0].as_ref().unwrap(), 0);
+        let p = results[1].as_ref().unwrap_err();
+        assert_eq!(p.rank, 1);
+        assert!(p.message.contains("injected worker panic"), "{}", p.message);
+        assert_eq!(*results[2].as_ref().unwrap(), 2);
+    }
+
+    #[test]
+    fn injected_crash_poisons_world_with_typed_errors() {
+        let w = World::new(4);
+        // rank 2's second communicator call (op index 1) is its last
+        w.install_faults(Arc::new(FaultPlan::new().crash(2, 1)));
+        let results = w.run_catch(|c| {
+            let mut errs = Vec::new();
+            for it in 0..3 {
+                match c.all_gather(vec![Tensor::full(&[2], it as f32)]) {
+                    Ok(_) => {}
+                    Err(e) => {
+                        errs.push(e);
+                        break;
+                    }
+                }
+            }
+            errs
+        });
+        for (r, res) in results.iter().enumerate() {
+            let errs = res.as_ref().unwrap();
+            assert_eq!(errs.len(), 1, "rank {r} must fail exactly once");
+            // every rank — crasher and peers — names the crashed rank
+            assert_eq!(errs[0], CommError::Crashed { rank: 2, op: 1 }, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn transient_drop_and_corruption_recover_bit_exactly() {
+        // faults below the retry budget are invisible to the caller: the
+        // gathered values match a clean run bit-for-bit, and the plan
+        // records the retries it took
+        let clean = World::new(4)
+            .run(|c| c.all_gather(vec![Tensor::randn(&[3, 2], c.rank() as u64)]).unwrap());
+        let w = World::new(4);
+        let plan = Arc::new(
+            FaultPlan::new()
+                .with_retry(3, 10)
+                .drop_msg(0, 0, 2, 2)
+                .corrupt(3, 0, 1, 1),
+        );
+        w.install_faults(plan.clone());
+        let faulty =
+            w.run(|c| c.all_gather(vec![Tensor::randn(&[3, 2], c.rank() as u64)]).unwrap());
+        for (a, b) in clean.iter().zip(&faulty) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x[0], y[0]);
+            }
+        }
+        assert!(plan.retries() >= 3, "2 dropped + 1 corrupt attempts retried");
+        assert_eq!(plan.injected(), 2);
+    }
+
+    #[test]
+    fn persistent_corruption_surfaces_not_wrong_data() {
+        // more corrupt attempts than retries: the receiver must surface
+        // CommError::Corrupt — never deliver the flipped payload
+        let w = World::new(2);
+        let plan = Arc::new(FaultPlan::new().with_retry(2, 10).corrupt(1, 0, 0, 99));
+        w.install_faults(plan);
+        let results = w.run_catch(|c| c.all_gather(vec![Tensor::full(&[2], 7.0)]));
+        let r1 = results[1].as_ref().unwrap();
+        match r1 {
+            Err(CommError::Corrupt { src: 0, dst: 1, op: 0, attempts: 3 }) => {}
+            other => panic!("expected persistent Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_timeout_is_typed_not_a_hang() {
+        let w = World::new(2);
+        w.set_timeout_ms(50);
+        let results = w.run_catch(|c| {
+            if c.rank() == 0 {
+                // never sends: rank 1's recv must time out quickly
+                Ok(vec![])
+            } else {
+                c.recv(0)
+            }
+        });
+        match results[1].as_ref().unwrap() {
+            Err(CommError::Timeout { rank: 1, ms: 50 }) => {}
+            other => panic!("expected Timeout, got {other:?}"),
+        }
     }
 }

@@ -21,9 +21,9 @@
 //! ones) leave behind the forward state cache needed by the backward pass
 //! (m_prefix per layer — the paper's "cache M_{1:t} in HBM" note).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::comm::Communicator;
+use crate::comm::{CommError, Communicator};
 use crate::config::{RunConfig, Scheduler, Variant};
 use crate::runtime::{Engine, Value};
 use crate::tensor::{prefix_states, suffix_dstates, ChunkState, Tensor};
@@ -85,7 +85,7 @@ pub fn lasp2_linear_layer(
 
     // THE communication of LASP-2: a single AllGather over [M_t, a_t]
     // (size independent of sequence length — §3.4).
-    let gathered = comm.all_gather_split(vec![m, a], run.gather_splits);
+    let gathered = comm.all_gather_split(vec![m, a], run.gather_splits)?;
     let states: Vec<ChunkState> = gathered
         .into_iter()
         .map(|mut g| {
@@ -172,7 +172,7 @@ pub fn lasp2_overlap_linear_layer(
                 kt.clone().into(),
                 v.clone().into(),
             ])?;
-            let gathered = gather.join().expect("gather thread");
+            let gathered = gather.join().expect("gather thread")?;
             let states = gathered
                 .into_iter()
                 .map(|mut g| {
@@ -232,7 +232,7 @@ pub fn lasp1_linear_layer(
     let m_prefix = if rank == 0 {
         Tensor::zeros(m.shape())
     } else {
-        let mut msg = comm.recv(rank - 1);
+        let mut msg = comm.recv(rank - 1)?;
         msg.pop().unwrap()
     };
     // O_t = O_intra + Q~ M_{1:t-1}; then forward the updated state.
@@ -241,7 +241,7 @@ pub fn lasp1_linear_layer(
         let own = ChunkState { m, a };
         let prev = ChunkState { m: m_prefix.clone(), a: Tensor::ones(own.a.shape()) };
         let updated = crate::tensor::state_combine(&prev, &own);
-        comm.send(rank + 1, vec![updated.m]);
+        comm.send(rank + 1, vec![updated.m])?;
     }
     let exe = engine.artifact(&format!("l_part2b_{}", variant.name()))?;
     let cache = keep_cache.then(|| LinearFwdCache {
@@ -360,7 +360,7 @@ pub fn ulysses_linear_layer(
             ]
         })
         .collect();
-    let recv = comm.all_to_all(msgs);
+    let recv = comm.all_to_all(msgs)?;
 
     let my_heads = parts[rank].1;
     let o_full = if my_heads == 0 {
@@ -382,7 +382,7 @@ pub fn ulysses_linear_layer(
     };
 
     // head -> seq repartition: chunk t of the output goes back to rank t
-    let back = comm.all_to_all(o_full.chunk0(w).into_iter().map(|t| vec![t]).collect());
+    let back = comm.all_to_all(o_full.chunk0(w).into_iter().map(|t| vec![t]).collect())?;
     let attn = concat_heads_mid(&back.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
     let post = engine.artifact("post_attn")?;
     let mut ins: Vec<Value> = vec![x.into(), attn.into()];
@@ -428,7 +428,7 @@ pub fn ulysses_std_layer(
             ]
         })
         .collect();
-    let recv = comm.all_to_all(msgs);
+    let recv = comm.all_to_all(msgs)?;
 
     let my_heads = parts[rank].1;
     let o_full = if my_heads == 0 {
@@ -445,7 +445,7 @@ pub fn ulysses_std_layer(
         ])?
     };
 
-    let back = comm.all_to_all(o_full.chunk0(w).into_iter().map(|t| vec![t]).collect());
+    let back = comm.all_to_all(o_full.chunk0(w).into_iter().map(|t| vec![t]).collect())?;
     let attn = concat_heads_mid(&back.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
     let post = engine.artifact("post_attn")?;
     let mut ins: Vec<Value> = vec![x.into(), attn.into()];
@@ -475,20 +475,20 @@ pub fn zeco_linear_layer(
     let (m_prefix, o_intra) = std::thread::scope(|s| -> Result<(Tensor, Tensor)> {
         // communication branch: the pipelined state relay (Alg. 6 lines
         // 9-15), off the critical path
-        let scan = s.spawn(move || {
+        let scan = s.spawn(move || -> Result<Tensor, CommError> {
             let m_prefix = if rank == 0 {
                 Tensor::zeros(m.shape())
             } else {
-                comm2.recv(rank - 1).pop().unwrap()
+                comm2.recv(rank - 1)?.pop().unwrap()
             };
             if rank + 1 < w {
                 // M_{1:t} = a_t (x) M_{1:t-1} + M_t  (Eq. 9, gated)
                 let prev = ChunkState { m: m_prefix.clone(), a: Tensor::ones(a.shape()) };
                 let own = ChunkState { m, a };
                 let updated = crate::tensor::state_combine(&prev, &own);
-                comm2.send(rank + 1, vec![updated.m]);
+                comm2.send(rank + 1, vec![updated.m])?;
             }
-            m_prefix
+            Ok(m_prefix)
         });
         // computation branch: O_intra overlaps the whole relay
         let exe = engine.artifact(&format!("l_intra_{}", variant.name()))?;
@@ -497,7 +497,7 @@ pub fn zeco_linear_layer(
             kt.clone().into(),
             v.clone().into(),
         ])?;
-        Ok((scan.join().expect("zeco relay thread"), o_intra))
+        Ok((scan.join().expect("zeco relay thread")?, o_intra))
     })?;
 
     let exe = engine.artifact(&format!("l_part2b_{}", variant.name()))?;
@@ -591,8 +591,8 @@ pub fn ring_linear_layer(
             // the carry a_t rides along only when decay makes it meaningful
             // (don't inflate the basic baseline's measured comm bytes)
             if variant.has_decay() {
-                comm.send(comm.right(), vec![cur_k, cur_v, cur_a]);
-                let mut msg = comm.recv(comm.left());
+                comm.send(comm.right(), vec![cur_k, cur_v, cur_a])?;
+                let mut msg = comm.recv(comm.left())?;
                 cur_a = msg.pop().unwrap();
                 cur_v = msg.pop().unwrap();
                 cur_k = msg.pop().unwrap();
@@ -601,8 +601,8 @@ pub fn ring_linear_layer(
                     *f *= av;
                 }
             } else {
-                comm.send(comm.right(), vec![cur_k, cur_v]);
-                let mut msg = comm.recv(comm.left());
+                comm.send(comm.right(), vec![cur_k, cur_v])?;
+                let mut msg = comm.recv(comm.left())?;
                 cur_v = msg.pop().unwrap();
                 cur_k = msg.pop().unwrap();
             }
@@ -638,9 +638,9 @@ pub fn megatron_linear_layer(
     // the carries ride the AllGather only for decay variants (keeps the
     // basic baseline's measured comm bytes identical to the paper setup)
     let gathered = if variant.has_decay() {
-        comm.all_gather(vec![kt, v, a])
+        comm.all_gather(vec![kt, v, a])?
     } else {
-        comm.all_gather(vec![kt, v])
+        comm.all_gather(vec![kt, v])?
     };
     let mut k_chunks: Vec<Tensor> = gathered.iter().map(|g| g[0].clone()).collect();
     if variant.has_decay() {
@@ -728,7 +728,7 @@ pub fn std_layer_allgather(
     let v = o.pop().unwrap();
     let k = o.pop().unwrap();
     let q = o.pop().unwrap();
-    let gathered = comm.all_gather(vec![k, v]);
+    let gathered = comm.all_gather(vec![k, v])?;
     let k_all = Tensor::cat0(&gathered.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
     let v_all = Tensor::cat0(&gathered.iter().map(|g| g[1].clone()).collect::<Vec<_>>());
     let p2 = engine.artifact(&format!("s_part2_T{w}"))?;
@@ -791,8 +791,8 @@ pub fn std_layer_ring(
         lstat = outs.pop().unwrap();
         mstat = outs.pop().unwrap();
         if hop + 1 < w {
-            comm.send(comm.right(), vec![cur_k, cur_v]);
-            let mut msg = comm.recv(comm.left());
+            comm.send(comm.right(), vec![cur_k, cur_v])?;
+            let mut msg = comm.recv(comm.left())?;
             cur_v = msg.pop().unwrap();
             cur_k = msg.pop().unwrap();
             cur_idx = (cur_idx + w - 1) % w;
@@ -819,11 +819,11 @@ pub fn usp2d_std_layer(
     layer: usize,
     x: Tensor,
 ) -> Result<Tensor> {
-    let row = match comm.row() {
-        Some(r) => r,
-        None => bail!("usp2d scheduler needs a mesh world (World::new_mesh / World::for_run)"),
-    };
-    let col = comm.col().expect("mesh world has columns");
+    let row = comm
+        .row()
+        .ok_or(CommError::NoMesh { dim: "row" })
+        .context("usp2d scheduler needs a mesh world (World::new_mesh / World::for_run)")?;
+    let col = comm.col().ok_or(CommError::NoMesh { dim: "col" })?;
     let m = &engine.model;
     let (c, dh) = (m.chunk_len, m.head_dim);
     let u = row.size();
@@ -853,7 +853,7 @@ pub fn usp2d_std_layer(
             ]
         })
         .collect();
-    let recv = row.all_to_all(msgs);
+    let recv = row.all_to_all(msgs)?;
 
     // every member of a column shares row.rank(), hence the same head
     // count — zero-head columns skip the gather together (no deadlock)
@@ -866,7 +866,7 @@ pub fn usp2d_std_layer(
         };
         let q_seg = col_of(0);
         // ring dimension: gather K/V across rows (full sequence, hl heads)
-        let gathered = col.all_gather(vec![col_of(1), col_of(2)]);
+        let gathered = col.all_gather(vec![col_of(1), col_of(2)])?;
         let k_all =
             Tensor::cat0(&gathered.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
         let v_all =
@@ -884,7 +884,7 @@ pub fn usp2d_std_layer(
         ])?
     };
 
-    let back = row.all_to_all(o_seg.chunk0(u).into_iter().map(|t| vec![t]).collect());
+    let back = row.all_to_all(o_seg.chunk0(u).into_iter().map(|t| vec![t]).collect())?;
     let attn = concat_heads_mid(&back.iter().map(|g| g[0].clone()).collect::<Vec<_>>());
     let post = engine.artifact("post_attn")?;
     let mut ins: Vec<Value> = vec![x.into(), attn.into()];
@@ -923,7 +923,7 @@ pub fn lasp2_attention_backward(
     let bwd1 = engine.artifact("l_bwd1_basic")?;
     let dm = bwd1.run1(&[cache.qt.clone().into(), do_t.clone().into()])?;
     // the backward's single collective (Alg. 4 line 4)
-    let gathered = comm.all_gather_split(vec![dm], run.gather_splits);
+    let gathered = comm.all_gather_split(vec![dm], run.gather_splits)?;
     let dms: Vec<Tensor> = gathered.into_iter().map(|mut g| g.pop().unwrap()).collect();
     let suffix = suffix_dstates(&dms);
     let bwd2 = engine.artifact("l_bwd2_basic")?;
@@ -955,13 +955,13 @@ pub fn lasp1_attention_backward(
     let dm_suffix = if rank == w - 1 {
         Tensor::zeros(dm.shape())
     } else {
-        let mut msg = comm.recv(rank + 1);
+        let mut msg = comm.recv(rank + 1)?;
         msg.pop().unwrap()
     };
     if rank > 0 {
         let mut fwd = dm_suffix.clone();
         fwd.add_assign(&dm);
-        comm.send(rank - 1, vec![fwd]);
+        comm.send(rank - 1, vec![fwd])?;
     }
     let bwd2 = engine.artifact("l_bwd2_basic")?;
     let outs = bwd2.run(&[

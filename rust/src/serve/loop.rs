@@ -25,6 +25,15 @@
 //! decode, each request's token stream equals a sequential
 //! `Session::generate` bit-for-bit, through prefix-cache hits and
 //! evict/resume cycles (pinned by `tests/serve_loop.rs`).
+//!
+//! **Graceful degradation.** One unserviceable request must never abort
+//! the in-flight sessions.  A request whose prompt cannot fit the model's
+//! context window is rejected at [`ServeLoop::enqueue`] and recorded; a
+//! session that fails at runtime (prefill error, or a decode that would
+//! overrun `max_seq`) is culled from the active pool alone and recorded
+//! as a [`FailedRequest`].  Survivors keep their id-ordered schedule, so
+//! their token streams — and hence the output digest — are bit-identical
+//! to a run without the poison request (pinned by the tests below).
 
 use std::time::Instant;
 
@@ -95,6 +104,18 @@ struct Parked {
     ttft_wall_ms: Option<f64>,
 }
 
+/// A request the loop could not serve: either rejected at enqueue time
+/// (infeasible against the model's context window) or failed at runtime,
+/// in which case only its own session was evicted.
+#[derive(Clone, Debug)]
+pub struct FailedRequest {
+    pub id: u64,
+    /// Human-readable cause (context exhaustion, decode error, ...).
+    pub reason: String,
+    /// Tick at which the request was rejected or culled.
+    pub tick: u64,
+}
+
 /// A completed request, as the summary reports it.
 #[derive(Clone, Debug)]
 pub struct FinishedRequest {
@@ -129,6 +150,10 @@ pub struct ServeSummary {
     pub cache_insertions: u64,
     pub evictions: u64,
     pub resumes: u64,
+    /// Requests rejected at enqueue (prompt cannot fit the window).
+    pub rejected_requests: usize,
+    /// Requests whose session failed at runtime and was culled alone.
+    pub failed_requests: usize,
     /// FNV-1a over `(id, tokens)` in id order — equal across thread
     /// counts and scheduling knobs iff the token streams are bit-equal.
     pub output_digest: u64,
@@ -162,6 +187,8 @@ pub struct ServeLoop<'m> {
     active: Vec<InFlight<'m>>,
     parked: Vec<Parked>,
     finished: Vec<FinishedRequest>,
+    rejected: Vec<FailedRequest>,
+    failed: Vec<FailedRequest>,
     tick: u64,
     evictions: u64,
     resumes: u64,
@@ -184,6 +211,8 @@ impl<'m> ServeLoop<'m> {
             active: Vec::new(),
             parked: Vec::new(),
             finished: Vec::new(),
+            rejected: Vec::new(),
+            failed: Vec::new(),
             tick: 0,
             evictions: 0,
             resumes: 0,
@@ -195,11 +224,27 @@ impl<'m> ServeLoop<'m> {
         }
     }
 
-    /// Queue a request for admission at its arrival tick.
+    /// Queue a request for admission at its arrival tick.  A request
+    /// whose PROMPT cannot fit the model's context window is rejected
+    /// here (it could never finish prefill); a generation budget that
+    /// overruns the window is admitted and degrades at runtime instead —
+    /// the session is culled alone once `max_seq` is reached.
     pub fn enqueue(&mut self, req: Request) {
-        let c = self.model.config().chunk_len;
+        let cfg = self.model.config();
+        if req.prompt.len() > cfg.max_seq {
+            self.rejected.push(FailedRequest {
+                id: req.id,
+                reason: format!(
+                    "prompt ({} tokens) exceeds model max_seq ({})",
+                    req.prompt.len(),
+                    cfg.max_seq
+                ),
+                tick: self.tick,
+            });
+            return;
+        }
         self.work_units +=
-            (req.prompt.len() / c + 2 + req.max_new) as u64;
+            (req.prompt.len() / cfg.chunk_len + 2 + req.max_new) as u64;
         self.max_arrival = self.max_arrival.max(req.arrival_tick);
         self.queue.push(req);
     }
@@ -218,6 +263,27 @@ impl<'m> ServeLoop<'m> {
 
     pub fn evictions(&self) -> u64 {
         self.evictions
+    }
+
+    /// Requests rejected at enqueue time (never admitted).
+    pub fn rejected(&self) -> &[FailedRequest] {
+        &self.rejected
+    }
+
+    /// Requests whose session failed at runtime and was culled alone.
+    pub fn failures(&self) -> &[FailedRequest] {
+        &self.failed
+    }
+
+    /// Remove failed sessions from the active pool and record them.  The
+    /// survivors' schedule (id order, tick counter) is untouched, so
+    /// their token streams stay bit-identical to a failure-free run.
+    fn cull_failed(&mut self, failed: &mut Vec<(u64, String)>, tick: u64) {
+        for (id, reason) in failed.drain(..) {
+            self.active.retain(|f| f.req.id != id);
+            eprintln!("[serve] request {id} failed at tick {tick}: {reason}");
+            self.failed.push(FailedRequest { id, reason, tick });
+        }
     }
 
     pub fn cache(&self) -> &PrefixCache {
@@ -315,7 +381,9 @@ impl<'m> ServeLoop<'m> {
         // decode/prefill order is id order, independent of admission path
         self.active.sort_by_key(|f| f.req.id);
 
-        // 3. chunked prefill, round-robin in id order
+        // 3. chunked prefill, round-robin in id order; a prefill failure
+        // culls THAT session only (recorded below), never the tick
+        let mut failed: Vec<(u64, String)> = Vec::new();
         let mut units = self.cfg.prefill_chunks_per_tick;
         let c = self.model.config().chunk_len;
         let vb = self.model.config().vocab;
@@ -326,7 +394,7 @@ impl<'m> ServeLoop<'m> {
                     break;
                 }
                 let plen = f.req.prompt.len();
-                if f.fed >= plen {
+                if f.fed >= plen || failed.iter().any(|(id, _)| *id == f.req.id) {
                     continue;
                 }
                 let take = if f.session.pos() % c == 0 && plen - f.fed >= c {
@@ -334,7 +402,13 @@ impl<'m> ServeLoop<'m> {
                 } else {
                     plen - f.fed
                 };
-                let logits = f.session.prefill(&f.req.prompt[f.fed..f.fed + take])?;
+                let logits = match f.session.prefill(&f.req.prompt[f.fed..f.fed + take]) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        failed.push((f.req.id, format!("prefill: {e}")));
+                        continue;
+                    }
+                };
                 f.fed += take;
                 units -= 1;
                 fed_any = true;
@@ -359,8 +433,28 @@ impl<'m> ServeLoop<'m> {
                 break;
             }
         }
+        self.cull_failed(&mut failed, tick);
 
-        // 4. batched decode: one token for every prompt-complete request
+        // 4. batched decode: one token for every prompt-complete request.
+        // Pre-check each candidate's position so a session that would
+        // overrun the context window fails ALONE instead of poisoning the
+        // whole batched decode_step call.
+        let ms = self.model.config().max_seq;
+        for f in self.active.iter() {
+            if f.fed == f.req.prompt.len()
+                && f.out.len() < f.req.max_new
+                && f.session.pos() >= ms
+            {
+                failed.push((
+                    f.req.id,
+                    format!(
+                        "decode: context window exhausted (pos {} >= max_seq {ms})",
+                        f.session.pos()
+                    ),
+                ));
+            }
+        }
+        self.cull_failed(&mut failed, tick);
         let mut sess: Vec<&mut Session<'m>> = Vec::new();
         let mut toks: Vec<i32> = Vec::new();
         let mut sinks: Vec<(&mut i32, &mut Vec<i32>)> = Vec::new();
@@ -490,6 +584,8 @@ impl<'m> ServeLoop<'m> {
             cache_insertions: self.cache.insertions,
             evictions: self.evictions,
             resumes: self.resumes,
+            rejected_requests: self.rejected.len(),
+            failed_requests: self.failed.len(),
             output_digest: output_digest(&self.finished),
             elapsed_s: elapsed,
         }
@@ -532,6 +628,54 @@ mod tests {
             let want = s.generate(p, 6).unwrap();
             assert_eq!(fin[k].tokens, want, "request {k}");
         }
+    }
+
+    #[test]
+    fn oversized_prompt_is_rejected_at_enqueue_never_admitted() {
+        let model = Model::load("tiny", Variant::Basic, "0", 11).unwrap();
+        let ms = model.config().max_seq;
+        let mut sl = ServeLoop::new(&model, ServeConfig::default());
+        sl.enqueue(request(0, 0, vec![1; ms + 1], 4));
+        assert_eq!(sl.rejected().len(), 1);
+        assert!(sl.rejected()[0].reason.contains("max_seq"));
+        let sum = sl.run().unwrap();
+        assert_eq!(sum.sessions, 0);
+        assert_eq!(sum.rejected_requests, 1);
+        assert_eq!(sum.failed_requests, 0);
+        assert_eq!(sum.generated_tokens, 0);
+    }
+
+    #[test]
+    fn poison_request_fails_alone_and_survivors_are_bit_identical() {
+        let model = Model::load("tiny", Variant::Basic, "0", 11).unwrap();
+        let ms = model.config().max_seq;
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|k| (0..40).map(|i| ((i * 7 + k * 13 + 5) % 256) as i32).collect())
+            .collect();
+        let clean = {
+            let mut sl = ServeLoop::new(&model, ServeConfig::default());
+            for (k, p) in prompts.iter().enumerate() {
+                sl.enqueue(request(k as u64, k as u64, p.clone(), 6));
+            }
+            sl.run().unwrap()
+        };
+        // poison: the prompt fills the window exactly, so the generation
+        // budget can never be decoded — it must fail alone, at runtime
+        let mut sl = ServeLoop::new(&model, ServeConfig::default());
+        for (k, p) in prompts.iter().enumerate() {
+            sl.enqueue(request(k as u64, k as u64, p.clone(), 6));
+        }
+        sl.enqueue(request(9, 0, vec![3; ms], 4));
+        let sum = sl.run().unwrap();
+        assert_eq!(sum.rejected_requests, 0, "poison passes admission");
+        assert_eq!(sum.failed_requests, 1);
+        assert_eq!(sl.failures()[0].id, 9);
+        assert!(sl.failures()[0].reason.contains("context window exhausted"));
+        assert_eq!(sum.sessions, 3, "all survivors finish");
+        assert_eq!(
+            sum.output_digest, clean.output_digest,
+            "survivor token streams must be bit-identical to the clean run"
+        );
     }
 
     #[test]

@@ -36,7 +36,9 @@ pub mod step_loop;
 pub use admission::{AdmissionQueue, Request};
 pub use loadgen::{gen_trace, TraceConfig};
 pub use prefix_cache::PrefixCache;
-pub use step_loop::{FinishedRequest, ServeConfig, ServeLoop, ServeSummary};
+pub use step_loop::{
+    FailedRequest, FinishedRequest, ServeConfig, ServeLoop, ServeSummary,
+};
 
 use std::sync::Arc;
 

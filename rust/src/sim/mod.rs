@@ -93,6 +93,24 @@ impl CostModel {
         self.alpha_collective
             + bytes_per_rank * (world as f64 - 1.0) / world as f64 / self.beta(world)
     }
+
+    /// Elastic-recovery time estimate: failure DETECTION (a collective
+    /// timeout firing), checkpoint RELOAD of params plus both Adam
+    /// moments over the storage link (modeled at the inter-node
+    /// bandwidth tier), and RECOMPUTE of the steps rolled back to the
+    /// last snapshot.  The real counterpart is `TrainReport::recovery_ms`
+    /// plus `steps_lost` x step time; this closed form is what `lasp2
+    /// chaos` and the scheduler atlas quote at paper scale.
+    pub fn recovery_time(
+        &self,
+        param_bytes: f64,
+        steps_lost: usize,
+        iter_time: f64,
+        detect_timeout: f64,
+    ) -> f64 {
+        let reload = 3.0 * param_bytes / self.beta_inter;
+        detect_timeout + reload + steps_lost as f64 * iter_time
+    }
 }
 
 /// Result of simulating one configuration.
@@ -269,6 +287,24 @@ mod tests {
         // fixed per-iteration overhead the Table-6 calibration absorbs
         assert!(z64.comm_time > 0.0);
         assert!(z64.comm_time < cm.fixed_overhead);
+    }
+
+    #[test]
+    fn recovery_time_laws() {
+        // detection dominates when nothing was lost; lost work dominates
+        // once the snapshot interval stretches; reload scales with params.
+        let cm = CostModel::default();
+        let p = SimShape::linear_llama3_1b(64, 2048 * 1024, 1).param_count();
+        let pb = p * 4.0;
+        let iter = 1.6; // Table-6 anchor iteration time
+        let t0 = cm.recovery_time(pb, 0, iter, 30.0);
+        assert!(t0 >= 30.0, "detection timeout is a floor: {t0}");
+        let t8 = cm.recovery_time(pb, 8, iter, 30.0);
+        assert!((t8 - t0 - 8.0 * iter).abs() < 1e-9);
+        // reload term alone: params + 2 Adam moments over the IB tier
+        let reload = cm.recovery_time(pb, 0, iter, 0.0);
+        assert!((reload - 3.0 * pb / cm.beta_inter).abs() < 1e-9);
+        assert!(cm.recovery_time(2.0 * pb, 0, iter, 0.0) > reload);
     }
 
     #[test]

@@ -11,6 +11,13 @@
 //! (gathered, unpadded), which makes the file world-size independent: a
 //! checkpoint written at W=1 resumes at W=4 and vice versa.
 //!
+//! Saves also ROTATE: the previous `<path>` is renamed to `<path>.prev`
+//! before the new file lands, so the last TWO snapshots are always on
+//! disk.  [`Checkpoint::load_with_fallback`] uses that: if the newest
+//! file fails validation (bit rot, truncation, a crash at exactly the
+//! wrong moment), it logs and falls back to `.prev` instead of refusing
+//! to resume.
+//!
 //! Layout (all integers little-endian):
 //!
 //! ```text
@@ -187,7 +194,10 @@ impl Checkpoint {
         })
     }
 
-    /// Atomic save: write `<path>.tmp`, then rename over `path`.
+    /// Atomic save with rotation: write `<path>.tmp`, move any existing
+    /// `path` to `<path>.prev`, then rename the tmp over `path`.  Every
+    /// transition is a rename, so at any crash point either `path` or
+    /// `<path>.prev` holds a complete, checksummed snapshot.
     pub fn save(&self, path: &str) -> Result<()> {
         if let Some(dir) = Path::new(path).parent() {
             if !dir.as_os_str().is_empty() {
@@ -201,6 +211,10 @@ impl Checkpoint {
             f.write_all(&self.to_bytes())?;
             f.sync_all().ok();
         }
+        if Path::new(path).exists() {
+            std::fs::rename(path, prev_path(path))
+                .with_context(|| format!("rotating {path} -> {path}.prev"))?;
+        }
         std::fs::rename(&tmp, path)
             .with_context(|| format!("renaming {tmp} -> {path}"))
     }
@@ -210,6 +224,38 @@ impl Checkpoint {
         let buf = std::fs::read(path).with_context(|| format!("reading checkpoint {path}"))?;
         Self::from_bytes(&buf).with_context(|| format!("parsing checkpoint {path}"))
     }
+
+    /// Load `path`; if it is missing/corrupt/truncated, fall back to the
+    /// rotated `<path>.prev`.  Returns the checkpoint and whether the
+    /// fallback was taken (so the driver can log how many steps were
+    /// lost).  Errors only when BOTH copies are unusable.
+    pub fn load_with_fallback(path: &str) -> Result<(Checkpoint, bool)> {
+        let newest = Self::load(path);
+        match newest {
+            Ok(ck) => Ok((ck, false)),
+            Err(primary) => {
+                let prev = prev_path(path);
+                match Self::load(&prev) {
+                    Ok(ck) => {
+                        eprintln!(
+                            "warning: checkpoint {path} unusable ({primary:#}); \
+                             falling back to {prev} at step {}",
+                            ck.steps_done
+                        );
+                        Ok((ck, true))
+                    }
+                    Err(fallback) => Err(primary.context(format!(
+                        "and the rotated fallback {prev} is also unusable: {fallback:#}"
+                    ))),
+                }
+            }
+        }
+    }
+}
+
+/// Path of the rotated previous snapshot kept alongside `path`.
+pub fn prev_path(path: &str) -> String {
+    format!("{path}.prev")
 }
 
 #[cfg(test)]
@@ -284,5 +330,75 @@ mod tests {
         // no tmp file left behind
         assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
         std::fs::remove_file(path).ok();
+        std::fs::remove_file(prev_path(path)).ok();
+    }
+
+    #[test]
+    fn save_rotates_and_keeps_the_previous_snapshot() {
+        let dir = std::env::temp_dir().join("lasp2_ckpt_rotate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rot.ckpt");
+        let path = path.to_str().unwrap();
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(prev_path(path)).ok();
+
+        let first = sample();
+        first.save(path).unwrap();
+        // one snapshot on disk: no .prev yet
+        assert!(!Path::new(&prev_path(path)).exists());
+
+        let mut second = sample();
+        second.steps_done = 43;
+        second.data_cursor = 43;
+        second.save(path).unwrap();
+        assert_eq!(Checkpoint::load(path).unwrap(), second);
+        assert_eq!(Checkpoint::load(&prev_path(path)).unwrap(), first);
+
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(prev_path(path)).ok();
+    }
+
+    #[test]
+    fn fallback_survives_bit_flip_and_truncation_of_the_newest() {
+        let dir = std::env::temp_dir().join("lasp2_ckpt_fallback_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fb.ckpt");
+        let path = path.to_str().unwrap();
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(prev_path(path)).ok();
+
+        let first = sample();
+        first.save(path).unwrap();
+        let mut second = sample();
+        second.steps_done = 43;
+        second.save(path).unwrap();
+
+        // healthy: newest wins, no fallback
+        let (ck, fell_back) = Checkpoint::load_with_fallback(path).unwrap();
+        assert_eq!(ck, second);
+        assert!(!fell_back);
+
+        // bit-flip the newest: checksum rejects it, .prev takes over
+        let good = std::fs::read(path).unwrap();
+        let mut bad = good.clone();
+        bad[good.len() / 2] ^= 0x01;
+        std::fs::write(path, &bad).unwrap();
+        let (ck, fell_back) = Checkpoint::load_with_fallback(path).unwrap();
+        assert_eq!(ck, first);
+        assert!(fell_back);
+
+        // truncate the newest: same story
+        std::fs::write(path, &good[..good.len() / 3]).unwrap();
+        let (ck, fell_back) = Checkpoint::load_with_fallback(path).unwrap();
+        assert_eq!(ck, first);
+        assert!(fell_back);
+
+        // both unusable -> a real error naming both files
+        std::fs::write(prev_path(path), b"junk").unwrap();
+        let err = Checkpoint::load_with_fallback(path).unwrap_err().to_string();
+        assert!(err.contains("fallback"), "{err}");
+
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(prev_path(path)).ok();
     }
 }

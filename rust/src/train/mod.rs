@@ -19,16 +19,27 @@
 //! so no tag is skipped here; a missing artifact is a hard error, not a
 //! silent no-op.  Used by the convergence experiments (Tables 2/3/4), the
 //! end-to-end example, and the `train` CLI.
+//!
+//! The driver is also ELASTIC: ranks return typed [`StepError`]s instead
+//! of panicking, and when an attempt fails on a [`CommError`] the driver
+//! discards the partial step, reloads the last good checkpoint (falling
+//! back to the rotated `.prev` copy if the newest is damaged), rebuilds a
+//! possibly smaller `World` — crashed ranks shrink it to the largest
+//! power of two the survivors fill — and continues.  Because checkpoints
+//! are world-size independent and the loss curve is world-size invariant,
+//! a W=4 run that loses a rank resumes at W=2 with a loss CSV
+//! byte-identical to an uninterrupted run (`tests/fault_injection.rs`).
 
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::comm::{Communicator, World};
+use crate::comm::{CommError, Communicator, FaultPlan, World};
 use crate::config::{Pattern, Variant};
 use crate::coordinator::{param_specs, FlatLayout, Params};
 use crate::data::BatchIter;
@@ -75,6 +86,11 @@ pub struct TrainOpts {
     /// stop after K optimizer steps THIS invocation (a simulated kill for
     /// the resume gate; requires `save`) — 0 = run to `steps`
     pub halt_after: usize,
+    /// fault plan installed on every world this run builds (chaos/testing)
+    pub faults: Option<Arc<FaultPlan>>,
+    /// elastic-recovery budget: how many comm failures to roll back from
+    /// before giving up
+    pub max_recoveries: usize,
 }
 
 impl Default for TrainOpts {
@@ -92,6 +108,8 @@ impl Default for TrainOpts {
             save: None,
             save_every: 0,
             halt_after: 0,
+            faults: None,
+            max_recoveries: 2,
         }
     }
 }
@@ -115,8 +133,70 @@ pub struct TrainReport {
     /// Adam-moment bytes a replicated rank would hold (2·P·4)
     pub opt_bytes_replicated: usize,
     /// wire bytes moved by the training collectives this invocation
+    /// (summed over every elastic attempt)
     pub wire_bytes: u64,
     pub collective_ops: u64,
+    /// elastic recoveries taken (0 = no comm failure)
+    pub recoveries: usize,
+    /// completed steps discarded by rollbacks and re-executed
+    pub steps_lost: usize,
+    /// wall milliseconds spent reloading/rebuilding during recoveries
+    pub recovery_ms: f64,
+}
+
+/// Per-rank step failure.  Split into comm vs. everything-else so the
+/// elastic driver can tell a recoverable communication fault (roll back,
+/// maybe shrink the world, retry) from a fatal one — necessary because
+/// the vendored `anyhow` shim is string-backed and cannot downcast.
+#[derive(Debug)]
+pub enum StepError {
+    /// a collective or p2p op failed; the step did not commit anywhere
+    Comm(CommError),
+    /// artifact/IO/divergence failure — re-running will not help
+    Other(anyhow::Error),
+}
+
+impl StepError {
+    fn into_anyhow(self) -> anyhow::Error {
+        match self {
+            StepError::Comm(e) => anyhow::Error::msg(e),
+            StepError::Other(e) => e,
+        }
+    }
+}
+
+impl From<CommError> for StepError {
+    fn from(e: CommError) -> StepError {
+        StepError::Comm(e)
+    }
+}
+
+impl From<anyhow::Error> for StepError {
+    fn from(e: anyhow::Error) -> StepError {
+        StepError::Other(e)
+    }
+}
+
+/// Communicator-op index of the FIRST collective of absolute step `step`
+/// for an invocation that started at `start_step`: each step issues 3 ops
+/// per rank (gradient `reduce_scatter`, parameter `all_gather`, loss
+/// `all_gather`) plus one `gather_state` all_gather after every snapshot
+/// step.  Lets chaos scenarios and tests aim a [`FaultPlan`] event at an
+/// exact training step.
+pub fn fault_op_for_step(
+    start_step: usize,
+    step: usize,
+    save_every: usize,
+    end_step: usize,
+) -> u64 {
+    let mut ops = 0u64;
+    for it in start_step..step {
+        ops += 3;
+        if it + 1 == end_step || (save_every > 0 && (it + 1) % save_every == 0) {
+            ops += 1;
+        }
+    }
+    ops
 }
 
 /// Rank-0 side effects, shared across worker threads.  IO failures are
@@ -149,15 +229,20 @@ struct RankCtx<'a> {
     end_step: usize,
     total: usize,
     io: &'a Mutex<DriverIo>,
+    /// rank-0 loss per step, indexed by `step - curve_base`; outlives the
+    /// attempt so the final report covers steps executed BEFORE a rollback
+    curve: &'a Mutex<Vec<f32>>,
+    curve_base: usize,
+    /// highest step count rank 0 completed (for steps-lost accounting)
+    progress: &'a AtomicU64,
     t0: Instant,
 }
 
 struct RankOut {
-    losses: Vec<f32>,
     opt_bytes: usize,
 }
 
-fn rank_loop(ctx: &RankCtx, comm: Option<&Communicator>) -> Result<RankOut> {
+fn rank_loop(ctx: &RankCtx, comm: Option<&Communicator>) -> Result<RankOut, StepError> {
     let cfg = &ctx.engine.model;
     let opts = ctx.opts;
     let (world, rank) = match comm {
@@ -189,7 +274,6 @@ fn rank_loop(ctx: &RankCtx, comm: Option<&Communicator>) -> Result<RankOut> {
     data.skip_to(ctx.start_step);
 
     let exe = ctx.engine.artifact(&format!("grad_step_{}", ctx.tag))?;
-    let mut losses = Vec::with_capacity(ctx.end_step - ctx.start_step);
     let mut tokens_seen = 0usize;
     for it in ctx.start_step..ctx.end_step {
         let b = data.next_batch();
@@ -209,15 +293,18 @@ fn rank_loop(ctx: &RankCtx, comm: Option<&Communicator>) -> Result<RankOut> {
         // path produces, so the logged curve is identical bit-for-bit
         let loss = match comm {
             Some(c) => c
-                .all_gather(vec![Tensor::scalar1(local_loss)])
+                .all_gather(vec![Tensor::scalar1(local_loss)])?
                 .iter()
                 .map(|m| m[0].data()[0])
                 .fold(0.0f32, |a, x| a + x),
             None => local_loss,
         };
-        anyhow::ensure!(loss.is_finite(), "loss diverged at step {it}: {loss}");
+        if !loss.is_finite() {
+            return Err(StepError::Other(anyhow::anyhow!(
+                "loss diverged at step {it}: {loss}"
+            )));
+        }
         tokens_seen += bsz * seq;
-        losses.push(loss);
 
         // deterministic snapshot schedule: EVERY rank evaluates the same
         // condition and joins the state-gather collective; only rank 0
@@ -226,7 +313,7 @@ fn rank_loop(ctx: &RankCtx, comm: Option<&Communicator>) -> Result<RankOut> {
             && (it + 1 == ctx.end_step
                 || (opts.save_every > 0 && (it + 1) % opts.save_every == 0));
         if snapshot_due {
-            let (mf, vf) = opt.gather_state(comm, layout.total());
+            let (mf, vf) = opt.gather_state(comm, layout.total())?;
             if rank == 0 {
                 let ck = Checkpoint {
                     tag: ctx.tag.to_string(),
@@ -248,6 +335,8 @@ fn rank_loop(ctx: &RankCtx, comm: Option<&Communicator>) -> Result<RankOut> {
             }
         }
         if rank == 0 {
+            ctx.curve.lock().unwrap()[it - ctx.curve_base] = loss;
+            ctx.progress.store((it + 1) as u64, Ordering::Relaxed);
             let mut io = ctx.io.lock().unwrap();
             if let Some(f) = io.csv.as_mut() {
                 if let Err(e) = writeln!(f, "{it},{loss},{lr}") {
@@ -263,7 +352,104 @@ fn rank_loop(ctx: &RankCtx, comm: Option<&Communicator>) -> Result<RankOut> {
             }
         }
     }
-    Ok(RankOut { losses, opt_bytes: opt.state_bytes() })
+    Ok(RankOut { opt_bytes: opt.state_bytes() })
+}
+
+/// Everything that must match for a resumed curve to be a CONTINUATION
+/// of the checkpointed one: model size, data stream, lr-schedule
+/// position.  Shared by `--resume` and elastic rollback.
+fn validate_resume(
+    ck: &Checkpoint,
+    path: &str,
+    artifact_tag: &str,
+    layout: &FlatLayout,
+    opts: &TrainOpts,
+    total: usize,
+) -> Result<()> {
+    anyhow::ensure!(
+        ck.tag == artifact_tag,
+        "checkpoint {path} was written by tag {} (resuming {artifact_tag})",
+        ck.tag
+    );
+    anyhow::ensure!(
+        ck.n_elems() == layout.total(),
+        "checkpoint has {} parameter elements, model has {}",
+        ck.n_elems(),
+        layout.total()
+    );
+    anyhow::ensure!(
+        ck.seed == opts.seed && ck.mlm == opts.mlm,
+        "checkpoint data stream (seed {}, mlm {}) != run (seed {}, mlm {})",
+        ck.seed,
+        ck.mlm,
+        opts.seed,
+        opts.mlm
+    );
+    anyhow::ensure!(
+        ck.total_steps as usize == total
+            && ck.peak_lr == opts.peak_lr
+            && ck.min_lr == opts.min_lr,
+        "lr schedule mismatch: checkpoint ({} steps, peak {:e}, min {:e}) \
+         vs run ({total} steps, peak {:e}, min {:e})",
+        ck.total_steps,
+        ck.peak_lr,
+        ck.min_lr,
+        opts.peak_lr,
+        opts.min_lr
+    );
+    anyhow::ensure!(
+        ck.data_cursor == ck.steps_done,
+        "checkpoint data cursor {} != steps done {}",
+        ck.data_cursor,
+        ck.steps_done
+    );
+    Ok(())
+}
+
+/// Drop loss-CSV rows at/after `resume_step`: they log steps the
+/// rolled-back state never executed (or will re-execute), and would
+/// otherwise appear twice.  Header and earlier rows are kept byte-for-byte.
+fn sanitize_csv(path: &str, resume_step: usize) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let mut kept = String::with_capacity(text.len());
+    for line in text.lines() {
+        let keep = match line.split(',').next().and_then(|f| f.parse::<usize>().ok()) {
+            Some(step) => step < resume_step,
+            None => true, // header
+        };
+        if keep {
+            kept.push_str(line);
+            kept.push('\n');
+        }
+    }
+    std::fs::write(path, kept)?;
+    Ok(())
+}
+
+/// Open the loss CSV: a fresh run truncates and writes the header; a
+/// resume (both `--resume` and elastic rollback) first sanitizes rows
+/// at/after the resume step, then appends.
+fn open_csv(path: &str, resume_step: Option<usize>) -> Result<File> {
+    if let Some(dir) = Path::new(path).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    if let Some(s) = resume_step {
+        if Path::new(path).exists() {
+            sanitize_csv(path, s)?;
+            return Ok(OpenOptions::new().append(true).open(path)?);
+        }
+    }
+    let mut f = File::create(path)?;
+    writeln!(f, "step,loss,lr")?;
+    Ok(f)
+}
+
+/// Outcome of one elastic attempt (one `World` lifetime) in [`train`].
+enum Attempt {
+    Done(RankOut),
+    Fatal(anyhow::Error),
+    /// at least one rank failed on comms or panicked: roll back and retry
+    Recover { crashed: Vec<usize>, cause: String },
 }
 
 /// Train a (variant, pattern) model with the given artifact tag.
@@ -294,44 +480,9 @@ pub fn train(
     // continuation: model size, data stream, and lr-schedule position.
     let (start_step, init_flat, moments) = match &opts.resume {
         Some(path) => {
-            let ck = Checkpoint::load(path)?;
-            anyhow::ensure!(
-                ck.tag == artifact_tag,
-                "checkpoint {path} was written by tag {} (resuming {artifact_tag})",
-                ck.tag
-            );
-            anyhow::ensure!(
-                ck.n_elems() == layout.total(),
-                "checkpoint has {} parameter elements, model has {}",
-                ck.n_elems(),
-                layout.total()
-            );
-            anyhow::ensure!(
-                ck.seed == opts.seed && ck.mlm == opts.mlm,
-                "checkpoint data stream (seed {}, mlm {}) != run (seed {}, mlm {})",
-                ck.seed,
-                ck.mlm,
-                opts.seed,
-                opts.mlm
-            );
-            anyhow::ensure!(
-                ck.total_steps as usize == total
-                    && ck.peak_lr == opts.peak_lr
-                    && ck.min_lr == opts.min_lr,
-                "lr schedule mismatch: checkpoint ({} steps, peak {:e}, min {:e}) \
-                 vs run ({total} steps, peak {:e}, min {:e})",
-                ck.total_steps,
-                ck.peak_lr,
-                ck.min_lr,
-                opts.peak_lr,
-                opts.min_lr
-            );
-            anyhow::ensure!(
-                ck.data_cursor == ck.steps_done,
-                "checkpoint data cursor {} != steps done {}",
-                ck.data_cursor,
-                ck.steps_done
-            );
+            // a damaged newest file falls back to the rotated .prev copy
+            let (ck, _fell_back) = Checkpoint::load_with_fallback(path)?;
+            validate_resume(&ck, path, artifact_tag, &layout, opts, total)?;
             (ck.steps_done as usize, ck.params, Some((ck.m, ck.v)))
         }
         None => {
@@ -358,60 +509,186 @@ pub fn train(
     };
 
     // loss CSV: a resumed run APPENDS to the existing curve (no second
-    // header); a fresh run truncates and writes the header
-    let csv = match &opts.csv {
-        Some(p) => {
-            if let Some(dir) = Path::new(p).parent() {
-                std::fs::create_dir_all(dir).ok();
-            }
-            let append = opts.resume.is_some() && Path::new(p).exists();
-            let f = if append {
-                OpenOptions::new().append(true).open(p)?
-            } else {
-                let mut f = File::create(p)?;
-                writeln!(f, "step,loss,lr")?;
-                f
-            };
-            Some(f)
-        }
+    // header, stale rows sanitized away); a fresh run truncates and
+    // writes the header
+    let mut csv_file = match &opts.csv {
+        Some(p) => Some(open_csv(
+            p,
+            if opts.resume.is_some() { Some(start_step) } else { None },
+        )?),
         None => None,
     };
-    let io = Mutex::new(DriverIo { csv, err: None });
     let t0 = Instant::now();
-    let ctx = RankCtx {
-        engine: engine.as_ref(),
-        tag: artifact_tag,
-        opts,
-        layout: &layout,
-        init_flat: &init_flat,
-        init_moments: moments.as_ref().map(|(m, v)| (m.as_slice(), v.as_slice())),
-        start_step,
-        end_step,
-        total,
-        io: &io,
-        t0,
-    };
-    let (rank0, wire_bytes, collective_ops) = if world == 1 {
-        (rank_loop(&ctx, None)?, 0u64, 0u64)
-    } else {
-        let w = World::new(world);
-        let results = w.run(|c| rank_loop(&ctx, Some(&c)));
-        let snap = w.counters();
-        let mut r0 = None;
-        for (r, res) in results.into_iter().enumerate() {
-            match res {
-                Ok(out) if r == 0 => r0 = Some(out),
-                Ok(_) => {}
-                Err(e) => return Err(e).with_context(|| format!("rank {r}")),
+
+    // elastic attempt loop: run the SPMD world; on a comm failure roll
+    // back to the last good checkpoint, rebuild a (possibly smaller)
+    // world, and go again.  State for the CURRENT attempt lives in the
+    // *_now bindings; `init0` keeps the launch state for the no-snapshot
+    // rollback path.
+    let curve = Mutex::new(vec![f32::NAN; end_step - start_step]);
+    let progress = AtomicU64::new(start_step as u64);
+    let init0 = (init_flat.clone(), moments.clone());
+    let mut flat_now = init_flat;
+    let mut moments_now = moments;
+    let mut world_now = world;
+    let mut start_now = start_step;
+    let mut recoveries = 0usize;
+    let mut steps_lost = 0usize;
+    let mut recovery_ms = 0.0f64;
+    let mut wire_bytes = 0u64;
+    let mut collective_ops = 0u64;
+    let rank0 = loop {
+        let io = Mutex::new(DriverIo { csv: csv_file.take(), err: None });
+        let ctx = RankCtx {
+            engine: engine.as_ref(),
+            tag: artifact_tag,
+            opts,
+            layout: &layout,
+            init_flat: &flat_now,
+            init_moments: moments_now.as_ref().map(|(m, v)| (m.as_slice(), v.as_slice())),
+            start_step: start_now,
+            end_step,
+            total,
+            io: &io,
+            curve: &curve,
+            curve_base: start_step,
+            progress: &progress,
+            t0,
+        };
+        let attempt = if world_now == 1 {
+            match rank_loop(&ctx, None) {
+                Ok(out) => Attempt::Done(out),
+                Err(e) => Attempt::Fatal(e.into_anyhow()),
+            }
+        } else {
+            let w = World::new(world_now);
+            if let Some(plan) = &opts.faults {
+                w.install_faults(plan.clone());
+            }
+            let results = w.run_catch(|c| {
+                let out = rank_loop(&ctx, Some(&c));
+                if out.is_err() {
+                    // release peers already blocked on this rank
+                    c.poison();
+                }
+                out
+            });
+            let snap = w.counters();
+            wire_bytes += snap.bytes;
+            collective_ops += snap.collective_ops;
+            let mut r0 = None;
+            let mut fatal: Option<anyhow::Error> = None;
+            let mut crashed: Vec<usize> = Vec::new();
+            let mut cause = String::new();
+            let mut comm_failed = false;
+            for (r, res) in results.into_iter().enumerate() {
+                match res {
+                    Ok(Ok(out)) => {
+                        if r == 0 {
+                            r0 = Some(out);
+                        }
+                    }
+                    Ok(Err(StepError::Comm(e))) => {
+                        comm_failed = true;
+                        if let Some(cr) = e.crashed_rank() {
+                            if !crashed.contains(&cr) {
+                                crashed.push(cr);
+                            }
+                        }
+                        if cause.is_empty() {
+                            cause = format!("rank {r}: {e}");
+                        }
+                    }
+                    Ok(Err(StepError::Other(e))) => {
+                        if fatal.is_none() {
+                            fatal = Some(e.context(format!("rank {r}")));
+                        }
+                    }
+                    Err(p) => {
+                        comm_failed = true;
+                        if !crashed.contains(&p.rank) {
+                            crashed.push(p.rank);
+                        }
+                        if cause.is_empty() {
+                            cause = p.to_string();
+                        }
+                    }
+                }
+            }
+            if let Some(e) = fatal {
+                Attempt::Fatal(e)
+            } else if comm_failed {
+                Attempt::Recover { crashed, cause }
+            } else {
+                Attempt::Done(r0.expect("rank 0 completed"))
+            }
+        };
+        match attempt {
+            Attempt::Done(out) => {
+                if let Some(e) = io.into_inner().unwrap().err {
+                    return Err(e);
+                }
+                break out;
+            }
+            Attempt::Fatal(e) => return Err(e),
+            Attempt::Recover { crashed, cause } => {
+                drop(io);
+                anyhow::ensure!(
+                    recoveries < opts.max_recoveries,
+                    "giving up after {recoveries} recoveries: {cause}"
+                );
+                recoveries += 1;
+                let rt = Instant::now();
+                // a crashed rank is gone for good: shrink to the largest
+                // power of two the survivors fill (keeps batch shards and
+                // reduce_scatter splits balanced).  Timeouts and exhausted
+                // retries keep the size — every rank is still alive.
+                if !crashed.is_empty() {
+                    let survivors = world_now.saturating_sub(crashed.len()).max(1);
+                    let mut p = 1;
+                    while p * 2 <= survivors {
+                        p *= 2;
+                    }
+                    world_now = p;
+                }
+                // roll back to the last good snapshot (fall back to the
+                // rotated .prev if the newest file is damaged); without
+                // any snapshot, restart this invocation's range
+                let have_ck = opts.save.as_deref().is_some_and(|p| {
+                    Path::new(p).exists() || Path::new(&checkpoint::prev_path(p)).exists()
+                });
+                let resume_at = if have_ck {
+                    let path = opts.save.as_deref().unwrap();
+                    let (ck, _) = Checkpoint::load_with_fallback(path)?;
+                    validate_resume(&ck, path, artifact_tag, &layout, opts, total)?;
+                    flat_now = ck.params;
+                    moments_now = Some((ck.m, ck.v));
+                    ck.steps_done as usize
+                } else {
+                    flat_now = init0.0.clone();
+                    moments_now = init0.1.clone();
+                    start_step
+                };
+                let reached = progress.load(Ordering::Relaxed) as usize;
+                steps_lost += reached.saturating_sub(resume_at);
+                progress.store(resume_at as u64, Ordering::Relaxed);
+                start_now = resume_at;
+                if let Some(p) = &opts.csv {
+                    csv_file = Some(open_csv(p, Some(resume_at))?);
+                }
+                recovery_ms += rt.elapsed().as_secs_f64() * 1e3;
+                eprintln!(
+                    "[train {artifact_tag}] {cause}; recovery {recoveries}: \
+                     world -> {world_now}, rolled back to step {resume_at} \
+                     ({} steps re-run)",
+                    reached.saturating_sub(resume_at)
+                );
             }
         }
-        (r0.unwrap(), snap.bytes, snap.collective_ops)
     };
-    if let Some(e) = io.into_inner().unwrap().err {
-        return Err(e);
-    }
 
-    let losses = rank0.losses;
+    let losses = curve.into_inner().unwrap();
+    debug_assert!(losses.iter().all(|l| !l.is_nan()), "gap in the loss curve");
     let executed = end_step - start_step;
     let tail_n = (executed / 10).max(1);
     let tail_loss = losses[executed - tail_n..].iter().sum::<f32>() / tail_n as f32;
@@ -423,12 +700,15 @@ pub fn train(
         losses,
         params: layout.total(),
         steps: total,
-        world,
+        world: world_now,
         start_step,
         opt_bytes_per_rank: rank0.opt_bytes,
         opt_bytes_replicated: layout.total() * 8,
         wire_bytes,
         collective_ops,
+        recoveries,
+        steps_lost,
+        recovery_ms,
     })
 }
 

@@ -17,10 +17,13 @@
 //!
 //! `comm = None` is the W=1 degenerate case: no collectives, the "shard"
 //! is the whole vector, and the update reduces to plain replicated AdamW.
+//!
+//! Both collectives are fallible: `step` and `gather_state` surface
+//! [`CommError`] TYPED (not stringified) so the elastic driver in
+//! `train::train` can tell a communication failure — roll back to the
+//! checkpoint, maybe shrink the world — from a math/IO error.
 
-use anyhow::Result;
-
-use crate::comm::Communicator;
+use crate::comm::{CommError, Communicator};
 use crate::coordinator::FlatLayout;
 use crate::tensor::Tensor;
 
@@ -97,7 +100,9 @@ impl ShardedAdam {
     /// One ZeRO step.  `grads` is this rank's padded partial gradient sum
     /// (length `padded(world)`); `flat` is the full padded parameter
     /// vector, updated in place on every rank; `t` is the 1-based Adam
-    /// step counter (bias correction).
+    /// step counter (bias correction).  A `CommError` means the step did
+    /// NOT complete — parameters and moments may be mid-update, so the
+    /// caller must discard this replica's state and reload a checkpoint.
     pub fn step(
         &mut self,
         comm: Option<&Communicator>,
@@ -105,20 +110,20 @@ impl ShardedAdam {
         grads: Vec<f32>,
         lr: f32,
         t: f32,
-    ) -> Result<()> {
-        anyhow::ensure!(flat.len() == self.e_pad, "param vector length");
-        anyhow::ensure!(grads.len() == self.e_pad, "grad vector length");
+    ) -> Result<(), CommError> {
+        assert_eq!(flat.len(), self.e_pad, "param vector length");
+        assert_eq!(grads.len(), self.e_pad, "grad vector length");
         let s = self.hi - self.lo;
         // 1. combine partial grads; keep own shard (rank-ordered sum)
         let gshard: Vec<f32> = match comm {
             Some(c) => {
                 debug_assert_eq!(c.size(), self.world);
-                let out = c.reduce_scatter(vec![Tensor::new(vec![self.e_pad], grads)]);
+                let out = c.reduce_scatter(vec![Tensor::new(vec![self.e_pad], grads)])?;
                 out.into_iter().next().unwrap().into_data()
             }
             None => grads,
         };
-        anyhow::ensure!(gshard.len() == s, "grad shard length");
+        assert_eq!(gshard.len(), s, "grad shard length");
         // 2. AdamW on the shard — op-for-op the train_step_impl update
         let (b1, b2, eps) = (ADAM_BETA1, ADAM_BETA2, ADAM_EPS);
         let bc1 = 1.0 - b1.powf(t);
@@ -135,7 +140,7 @@ impl ShardedAdam {
         // 3. rejoin the updated shards on every rank
         match comm {
             Some(c) => {
-                let got = c.all_gather(vec![Tensor::new(vec![s], new_shard)]);
+                let got = c.all_gather(vec![Tensor::new(vec![s], new_shard)])?;
                 for (r, msg) in got.iter().enumerate() {
                     flat[r * s..(r + 1) * s].copy_from_slice(msg[0].data());
                 }
@@ -147,14 +152,18 @@ impl ShardedAdam {
 
     /// Gather the full (unpadded) moment vectors for checkpointing; a
     /// collective on W>1, so EVERY rank must call it at the same step.
-    pub fn gather_state(&self, comm: Option<&Communicator>, total: usize) -> (Vec<f32>, Vec<f32>) {
-        match comm {
+    pub fn gather_state(
+        &self,
+        comm: Option<&Communicator>,
+        total: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>), CommError> {
+        Ok(match comm {
             Some(c) => {
                 let s = self.hi - self.lo;
                 let got = c.all_gather(vec![
                     Tensor::new(vec![s], self.m.clone()),
                     Tensor::new(vec![s], self.v.clone()),
-                ]);
+                ])?;
                 let mut m = Vec::with_capacity(self.e_pad);
                 let mut v = Vec::with_capacity(self.e_pad);
                 for msg in &got {
@@ -166,7 +175,7 @@ impl ShardedAdam {
                 (m, v)
             }
             None => (self.m[..total].to_vec(), self.v[..total].to_vec()),
-        }
+        })
     }
 }
 
@@ -263,7 +272,7 @@ mod tests {
         let v: Vec<f32> = randvec(total, 4).iter().map(|x| x.abs()).collect();
         // W=1: restore/gather are plain copies
         let opt = ShardedAdam::restore(&layout, 1, 0, &m, &v);
-        let (m1, v1) = opt.gather_state(None, total);
+        let (m1, v1) = opt.gather_state(None, total).unwrap();
         assert_eq!(m1, m);
         assert_eq!(v1, v);
         // W=4: every rank slices its shard; the gather collective rejoins
@@ -271,7 +280,7 @@ mod tests {
         let w = World::new(4);
         let outs = w.run(|c| {
             let opt = ShardedAdam::restore(&layout, 4, c.rank(), &m, &v);
-            opt.gather_state(Some(&c), total)
+            opt.gather_state(Some(&c), total).unwrap()
         });
         for (r, (mg, vg)) in outs.iter().enumerate() {
             assert_eq!(mg, &m, "rank {r}");

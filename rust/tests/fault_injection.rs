@@ -1,0 +1,299 @@
+//! Integration gates for the fault-injection harness and elastic recovery:
+//!
+//! * a W=4 run losing rank 3 mid-step rolls back to the last snapshot,
+//!   shrinks to W=2, and finishes with a loss curve (and CSV) BIT-IDENTICAL
+//!   to the uninterrupted run;
+//! * injected message corruption is caught by the per-message checksum and
+//!   either retried to the exact payload or surfaced as
+//!   `CommError::Corrupt` — a wrong tensor is never returned;
+//! * the two-barrier generation fencing keeps `all_gather` / `all_to_all`
+//!   results bit-identical and rank-ordered when one rank is delayed
+//!   (CI runs this under both `LASP2_THREADS=1` and `4`);
+//! * a poison serve request fails alone: survivors produce the same
+//!   `output_digest` with and without it in the trace;
+//! * checkpoint rotation: a corrupted or truncated newest snapshot is
+//!   rejected by its checksum and `--resume` falls back to `.prev`,
+//!   still appending a byte-identical loss CSV.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use lasp2::comm::{CommError, FaultPlan, World};
+use lasp2::config::{Pattern, Variant};
+use lasp2::runtime::Engine;
+use lasp2::serve::{Model, Request, ServeConfig, ServeLoop};
+use lasp2::train::{checkpoint, fault_op_for_step, train, Checkpoint, TrainOpts};
+use lasp2::Tensor;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lasp2_{name}"));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn path(dir: &Path, n: &str) -> String {
+    dir.join(n).to_str().unwrap().into()
+}
+
+fn opts(steps: usize) -> TrainOpts {
+    TrainOpts { steps, log_every: 0, ..Default::default() }
+}
+
+#[test]
+fn w4_crash_resumes_at_w2_with_bitwise_loss_curve() {
+    let engine = Engine::load_preset("tiny").expect("tiny artifacts");
+    let pattern = Pattern("LL".into());
+    let dir = tmpdir("fault_crash");
+    let steps = 8usize;
+    let save_every = 2usize;
+
+    let clean = TrainOpts {
+        world: 4,
+        csv: Some(path(&dir, "clean.csv")),
+        ..opts(steps)
+    };
+    let rc = train(&engine, Variant::Basic, &pattern, "basic_pure", &clean).unwrap();
+    assert_eq!(rc.recoveries, 0);
+
+    // crash rank 3 one full step past the last snapshot (step 5 of 8,
+    // snapshots after steps 2/4/6/8): the driver must discard the partial
+    // step, reload step 4, and continue on the surviving pow2 world
+    let crash_step = steps - 3;
+    let crash_op = fault_op_for_step(0, crash_step, save_every, steps);
+    let faulty = TrainOpts {
+        world: 4,
+        csv: Some(path(&dir, "faulty.csv")),
+        save: Some(path(&dir, "faulty.ckpt")),
+        save_every,
+        faults: Some(Arc::new(FaultPlan::new().crash(3, crash_op))),
+        ..opts(steps)
+    };
+    let rf = train(&engine, Variant::Basic, &pattern, "basic_pure", &faulty).unwrap();
+    assert_eq!(rf.recoveries, 1, "exactly one elastic recovery");
+    assert_eq!(rf.world, 2, "pow2 shrink 4 -> 2 after losing rank 3");
+    assert!(rf.steps_lost >= 1, "crashing past a snapshot loses work");
+
+    assert_eq!(rc.losses.len(), rf.losses.len());
+    for (i, (a, b)) in rc.losses.iter().zip(&rf.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "loss step {i}: {a} != {b}");
+    }
+    // the CSV too: rollback sanitizes stale rows, then appends — the file
+    // must end up byte-identical to the uninterrupted run's
+    assert_eq!(
+        std::fs::read_to_string(path(&dir, "clean.csv")).unwrap(),
+        std::fs::read_to_string(path(&dir, "faulty.csv")).unwrap(),
+        "recovered loss CSV differs from the uninterrupted run"
+    );
+}
+
+#[test]
+fn corruption_is_retried_bit_exact_or_surfaced_never_wrong() {
+    // transient: rank 1's copy of rank 0's payload arrives corrupted twice,
+    // with four retries allowed — every rank must end up with the exact
+    // rank-ordered payloads
+    let plan = Arc::new(FaultPlan::new().corrupt(1, 0, 0, 2).with_retry(4, 50));
+    let world = World::new(4);
+    world.install_faults(plan.clone());
+    let results = world.run_catch(|c| {
+        c.all_gather(vec![Tensor::randn(&[64], 4000 + c.rank() as u64)])
+    });
+    for (rank, r) in results.into_iter().enumerate() {
+        let got = r.expect("no panic").expect("transient corruption must be retried");
+        for (src, m) in got.iter().enumerate() {
+            assert_eq!(
+                m[0],
+                Tensor::randn(&[64], 4000 + src as u64),
+                "rank {rank} holds wrong data from {src}"
+            );
+        }
+    }
+    assert!(plan.retries() >= 2, "expected >= 2 retries, saw {}", plan.retries());
+
+    // persistent: corruption outlives the retry budget — the affected rank
+    // surfaces a typed error, everyone else sees clean data, and a wrong
+    // tensor is never returned anywhere
+    let plan = Arc::new(FaultPlan::new().corrupt(1, 0, 0, 8).with_retry(2, 50));
+    let world = World::new(4);
+    world.install_faults(plan);
+    let results = world.run_catch(|c| {
+        c.all_gather(vec![Tensor::randn(&[64], 5000 + c.rank() as u64)])
+    });
+    for (rank, r) in results.into_iter().enumerate() {
+        match r.expect("no panic") {
+            Err(CommError::Corrupt { src, dst, attempts, .. }) => {
+                assert_eq!(rank, 1, "only rank 1 should surface the corruption");
+                assert_eq!((src, dst), (0, 1));
+                assert!(attempts >= 3, "budget of 2 retries means >= 3 attempts");
+            }
+            Err(e) => panic!("rank {rank}: unexpected error {e}"),
+            Ok(got) => {
+                assert_ne!(rank, 1, "rank 1 must not get data past the checksum");
+                for (src, m) in got.iter().enumerate() {
+                    assert_eq!(m[0], Tensor::randn(&[64], 5000 + src as u64));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn straggler_delay_keeps_collectives_bit_identical_and_rank_ordered() {
+    let w = 4usize;
+    // rank 2 stalls 25 ms at each of its first two ops; the two-barrier
+    // fencing must still hand every rank the same rank-ordered results
+    let plan = Arc::new(FaultPlan::new().delay(2, 0, 25_000).delay(2, 1, 25_000));
+    let world = World::new(w);
+    world.install_faults(plan.clone());
+    let results = world.run_catch(|c| {
+        let r = c.rank() as u64;
+        let g = c.all_gather(vec![Tensor::randn(&[32], 7000 + r)])?;
+        let msgs: Vec<_> = (0..4u64)
+            .map(|d| vec![Tensor::randn(&[16], 8000 + r * 4 + d)])
+            .collect();
+        let x = c.all_to_all(msgs)?;
+        Ok::<_, CommError>((g, x))
+    });
+    for (rank, res) in results.into_iter().enumerate() {
+        let (g, x) = res.expect("no panic").expect("a straggler must not fail anyone");
+        assert_eq!(g.len(), w);
+        assert_eq!(x.len(), w);
+        for src in 0..w {
+            assert_eq!(
+                g[src][0],
+                Tensor::randn(&[32], 7000 + src as u64),
+                "all_gather rank {rank}: slot {src} not rank-ordered/bit-exact"
+            );
+            assert_eq!(
+                x[src][0],
+                Tensor::randn(&[16], 8000 + (src * 4 + rank) as u64),
+                "all_to_all rank {rank}: slot {src} not rank-ordered/bit-exact"
+            );
+        }
+    }
+    assert_eq!(plan.injected(), 2, "both delay events must have fired");
+}
+
+#[test]
+fn serve_poison_request_leaves_survivors_bit_identical() {
+    let model = Model::load("tiny", Variant::Basic, "0", 1).expect("tiny artifacts");
+    model.warmup_serving().expect("serving artifacts");
+    let window = model.config().max_seq;
+
+    fn standard_requests(sl: &mut ServeLoop<'_>) {
+        for k in 0..3u64 {
+            sl.enqueue(Request {
+                id: k,
+                arrival_tick: k,
+                prompt: (0..40)
+                    .map(|i| ((i * 7 + k as usize * 13 + 5) % 256) as i32)
+                    .collect(),
+                prefix_len: 0,
+                max_new: 6,
+                deadline_tick: k + 64,
+            });
+        }
+    }
+
+    let clean = {
+        let mut sl = ServeLoop::new(&model, ServeConfig::default());
+        standard_requests(&mut sl);
+        sl.run().unwrap()
+    };
+    assert_eq!(clean.sessions, 3);
+    assert_eq!(clean.failed_requests, 0);
+
+    let poisoned = {
+        let mut sl = ServeLoop::new(&model, ServeConfig::default());
+        standard_requests(&mut sl);
+        // a prompt of exactly max_seq tokens prefills fine but leaves no
+        // room to decode: admitted, then fails at runtime — alone
+        sl.enqueue(Request {
+            id: 9,
+            arrival_tick: 0,
+            prompt: vec![3; window],
+            prefix_len: 0,
+            max_new: 4,
+            deadline_tick: 64,
+        });
+        sl.run().unwrap()
+    };
+    assert_eq!(poisoned.rejected_requests, 0, "runtime failure, not admission");
+    assert_eq!(poisoned.failed_requests, 1);
+    assert_eq!(poisoned.sessions, 3, "only the survivors finish");
+    assert_eq!(
+        poisoned.output_digest, clean.output_digest,
+        "survivor outputs must be bit-identical with and without the poison"
+    );
+
+    // and a prompt that can never prefill is rejected at admission without
+    // aborting the loop
+    let mut sl = ServeLoop::new(&model, ServeConfig::default());
+    sl.enqueue(Request {
+        id: 0,
+        arrival_tick: 0,
+        prompt: vec![1; window + 1],
+        prefix_len: 0,
+        max_new: 4,
+        deadline_tick: 64,
+    });
+    let sum = sl.run().unwrap();
+    assert_eq!(sum.rejected_requests, 1);
+    assert_eq!(sum.sessions, 0);
+    assert_eq!(sum.generated_tokens, 0);
+}
+
+#[test]
+fn resume_falls_back_to_prev_checkpoint_when_newest_is_corrupt() {
+    let engine = Engine::load_preset("tiny").expect("tiny artifacts");
+    let pattern = Pattern("LL".into());
+    let dir = tmpdir("fault_fallback");
+
+    let full = TrainOpts { csv: Some(path(&dir, "full.csv")), ..opts(8) };
+    train(&engine, Variant::Basic, &pattern, "basic_pure", &full).unwrap();
+
+    // halted run snapshots at steps 2 and 4; rotation keeps both
+    let ck = path(&dir, "part.ckpt");
+    let halted = TrainOpts {
+        csv: Some(path(&dir, "resumed.csv")),
+        save: Some(ck.clone()),
+        save_every: 2,
+        halt_after: 4,
+        ..opts(8)
+    };
+    train(&engine, Variant::Basic, &pattern, "basic_pure", &halted).unwrap();
+    let prev = checkpoint::prev_path(&ck);
+    assert!(Path::new(&prev).exists(), "rotation must keep the previous snapshot");
+
+    // flip one byte mid-file: the checksum must reject it outright
+    let mut bytes = std::fs::read(&ck).unwrap();
+    bytes[bytes.len() / 2] ^= 0x40;
+    std::fs::write(&ck, &bytes).unwrap();
+    assert!(Checkpoint::load(&ck).is_err(), "corrupt checkpoint accepted");
+    let (fb, fell_back) = Checkpoint::load_with_fallback(&ck).unwrap();
+    assert!(fell_back, "fallback path not taken");
+    assert_eq!(fb.steps_done, 2, "fallback must be the step-2 snapshot");
+
+    // truncation is rejected the same way
+    let tr = path(&dir, "trunc.ckpt");
+    std::fs::write(&tr, &bytes[..bytes.len() / 3]).unwrap();
+    assert!(Checkpoint::load(&tr).is_err(), "truncated checkpoint accepted");
+
+    // resuming through the corrupt newest lands on .prev (step 2) and the
+    // CSV still reconstructs the uninterrupted run byte for byte
+    let resumed = TrainOpts {
+        csv: Some(path(&dir, "resumed.csv")),
+        save: Some(ck.clone()),
+        save_every: 2,
+        resume: Some(ck.clone()),
+        ..opts(8)
+    };
+    let rr = train(&engine, Variant::Basic, &pattern, "basic_pure", &resumed).unwrap();
+    assert_eq!(rr.start_step, 2, "resume must start from the fallback snapshot");
+    assert_eq!(rr.losses.len(), 6);
+    assert_eq!(
+        std::fs::read_to_string(path(&dir, "full.csv")).unwrap(),
+        std::fs::read_to_string(path(&dir, "resumed.csv")).unwrap(),
+        "fallback-resumed loss CSV differs from the uninterrupted run"
+    );
+}

@@ -109,6 +109,7 @@ fn prop_all_gather_identical_everywhere() {
                 &[rows, cols],
                 seed * 100 + comm.rank() as u64,
             )])
+            .unwrap()
         });
         // every rank must see the same gathered list, ordered by rank
         for r in &results {
@@ -130,6 +131,7 @@ fn prop_split_gather_equivalence() {
         let world = World::new(w);
         let base = world.run(|comm| {
             comm.all_gather(vec![Tensor::randn(&[n], seed + comm.rank() as u64)])
+                .unwrap()
         });
         let world2 = World::new(w);
         let split = world2.run(move |comm| {
@@ -137,6 +139,7 @@ fn prop_split_gather_equivalence() {
                 vec![Tensor::randn(&[n], seed + comm.rank() as u64)],
                 splits,
             )
+            .unwrap()
         });
         for (a, b) in base.iter().zip(&split) {
             for (x, y) in a.iter().zip(b) {
@@ -153,7 +156,7 @@ fn prop_gather_byte_accounting() {
         let n = 1 + rng.below(100);
         let world = World::new(w);
         world.run(|comm| {
-            comm.all_gather(vec![Tensor::randn(&[n], seed)]);
+            comm.all_gather(vec![Tensor::randn(&[n], seed)]).unwrap();
         });
         let snap = world.counters();
         assert_eq!(snap.bytes as usize, w * (w - 1) * n * 4, "seed {seed}");
@@ -215,8 +218,8 @@ fn prop_ring_send_recv_permutation() {
         let results = world.run(|comm| {
             let mut val = comm.rank() as f32;
             for _ in 0..hops {
-                comm.send(comm.right(), vec![Tensor::full(&[1], val)]);
-                val = comm.recv(comm.left())[0].data()[0];
+                comm.send(comm.right(), vec![Tensor::full(&[1], val)]).unwrap();
+                val = comm.recv(comm.left()).unwrap()[0].data()[0];
             }
             val
         });
