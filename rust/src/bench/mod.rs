@@ -22,6 +22,7 @@ use crate::runtime::Engine;
 use crate::serve::{argmax, gen_trace, Model, ServeConfig, ServeLoop, TraceConfig};
 use crate::sim::{simulate, zero_shard, CostModel};
 use crate::coordinator::plan::SimShape;
+use crate::tensor::quant::DecodeDtype;
 use crate::tensor::Tensor;
 use crate::train::{train, TrainOpts};
 
@@ -261,8 +262,19 @@ pub struct DecodeRow {
     pub state_bytes: [usize; 3],
 }
 
-/// `decode_bench` plus the machine-readable per-model rows.
+/// `decode_bench` plus the machine-readable per-model rows (f32 readout).
 pub fn decode_bench_rows(engine: &Arc<Engine>, n_tokens: usize) -> Result<(Table, Vec<DecodeRow>)> {
+    decode_bench_rows_with(engine, n_tokens, DecodeDtype::F32)
+}
+
+/// `decode_bench_rows` with an explicit readout dtype
+/// (`bench-decode --decode-dtype bf16|int8`): the per-token logit readout
+/// runs through the quantized path, everything else is unchanged.
+pub fn decode_bench_rows_with(
+    engine: &Arc<Engine>,
+    n_tokens: usize,
+    dtype: DecodeDtype,
+) -> Result<(Table, Vec<DecodeRow>)> {
     anyhow::ensure!(
         (4..=engine.model.max_seq).contains(&n_tokens),
         "n_tokens {n_tokens} must be in 4..=max_seq ({})",
@@ -286,7 +298,8 @@ pub fn decode_bench_rows(engine: &Arc<Engine>, n_tokens: usize) -> Result<(Table
     cases.push((Variant::Softmax, "all"));
     let marks = [n_tokens / 4, n_tokens / 2, n_tokens];
     for (variant, ratio) in cases {
-        let model = Model::with_engine(engine.clone(), variant, ratio, 1)?;
+        let mut model = Model::with_engine(engine.clone(), variant, ratio, 1)?;
+        model.set_decode_dtype(dtype)?;
         // instantiate the decode artifacts OUTSIDE the timed region (on
         // PJRT the first call would otherwise time an HLO compile)
         model.warmup_serving()?;
@@ -683,6 +696,10 @@ pub fn zero_sharding_table(cm: &CostModel) -> (Table, Vec<ZeroRow>) {
 pub struct KernelsReport {
     pub source: String,
     pub threads: usize,
+    /// Active GEMM instruction set (`gemm::isa_name()`): records whether
+    /// the snapshot was taken with the SIMD microkernels or the scalar
+    /// fallback, so numbers are comparable PR over PR.
+    pub isa: String,
     pub gemm: Vec<GemmRow>,
     /// (preset, tag, step_ms, tokens_per_sec)
     pub train: Option<(String, String, f64, f64)>,
@@ -701,6 +718,8 @@ pub struct KernelsReport {
     pub serve: Option<(String, usize, Vec<ServeRow>)>,
     /// chaos-scenario recovery rows (`lasp2 chaos`)
     pub fault: Option<Vec<FaultRow>>,
+    /// per-PR perf-trajectory array fragment (see [`append_history`])
+    pub history: Option<String>,
 }
 
 /// One chaos-scenario row (`lasp2 chaos`): a seeded fault injected into
@@ -718,9 +737,16 @@ pub struct FaultRow {
     pub deterministic: bool,
 }
 
-/// Format fault rows as the `"fault"` section body (a JSON array) —
-/// shared by [`KernelsReport::to_json`] and the `lasp2 chaos` splice
-/// path, so both emit byte-identical sections.
+// ================================== machine-readable snapshot sections
+//
+// Every section of BENCH_kernels.json has ONE fragment emitter, shared
+// by [`KernelsReport::to_json`] (full rewrite, e.g. `bench-all --json`)
+// and the [`splice_section`] path (update one section in place, e.g.
+// `chaos --json`, `bench-serve --json`), so both emit byte-identical
+// bodies and a splice after a full run is a no-op diff for the other
+// sections (pinned by the tests below).
+
+/// Format fault rows as the `"fault"` section body (a JSON array).
 pub fn fault_fragment(rows: &[FaultRow]) -> String {
     let mut s = String::from("[\n");
     for (i, r) in rows.iter().enumerate() {
@@ -742,51 +768,224 @@ pub fn fault_fragment(rows: &[FaultRow]) -> String {
     s
 }
 
-/// Splice a `"fault"` section into an existing BENCH_kernels.json
-/// document, replacing any previous one — `lasp2 chaos` updates just its
-/// own section without re-running every other bench.  `fragment` is the
-/// section body (see [`fault_fragment`]), e.g. `[ ... ]`.
-pub fn splice_fault_section(existing: &str, fragment: &str) -> Result<String> {
+/// `"gemm"` section body: one object per measured shape.
+pub fn gemm_fragment(rows: &[GemmRow]) -> String {
+    let mut s = String::from("[\n");
+    for (i, g) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"op\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \"gflops\": {:.3}}}{}\n",
+            g.op,
+            g.m,
+            g.k,
+            g.n,
+            g.gflops,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]");
+    s
+}
+
+/// `"train"` section body.
+pub fn train_fragment(preset: &str, tag: &str, step_ms: f64, tps: f64) -> String {
+    format!(
+        "{{\"preset\": \"{preset}\", \"tag\": \"{tag}\", \
+         \"step_ms\": {step_ms:.3}, \"tokens_per_sec\": {tps:.1}}}"
+    )
+}
+
+/// `"decode"` section body: flat `tag: tokens/s` rows (the floor keys).
+pub fn decode_fragment(preset: &str, n: usize, rows: &[DecodeRow]) -> String {
+    let mut s = format!("{{\"preset\": \"{preset}\", \"tokens\": {n}, \"rows\": {{\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    \"{}\": {:.1}{}\n",
+            r.tag,
+            r.tokens_per_sec,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  }}");
+    s
+}
+
+/// `"fig3_realexec"` section body.
+pub fn fig3_fragment(preset: &str, world: usize, rows: &[(String, f64)]) -> String {
+    let mut s = format!("{{\"preset\": \"{preset}\", \"world\": {world}, \"rows\": {{\n");
+    for (i, (name, tps)) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    \"{}\": {:.1}{}\n",
+            name,
+            tps,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  }}");
+    s
+}
+
+/// `"crossover"` section body.
+pub fn crossover_fragment(rows: &[CrossoverRow]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"world\": {}, \"seq_k\": {}, \"pattern\": \"{}\", \"winner\": \"{}\"",
+            r.world, r.seq_k, r.pattern, r.winner
+        ));
+        for (name, tps, oom) in &r.toks {
+            if *oom {
+                s.push_str(&format!(", \"{name}\": null"));
+            } else {
+                s.push_str(&format!(", \"{name}\": {tps:.1}"));
+            }
+        }
+        s.push_str(&format!("}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
+    }
+    s.push_str("  ]");
+    s
+}
+
+/// `"serve"` section body: the gated metrics use flat per-tag keys
+/// (`serve_tps_<tag>`, `serve_p99ttft_ms_<tag>`) for the floor scanner.
+pub fn serve_fragment(preset: &str, sessions: usize, rows: &[ServeRow]) -> String {
+    let mut s =
+        format!("{{\"preset\": \"{preset}\", \"sessions\": {sessions}, \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"tag\": \"{}\", \"pattern\": \"{}\", \
+             \"serve_tps_{}\": {:.1}, \"serve_p99ttft_ms_{}\": {:.2}, \
+             \"p50_ttft_ms\": {:.2}, \"sustained_tps\": {:.1}, \
+             \"bytes_per_session\": {:.0}, \"sessions_per_gb\": {:.0}, \
+             \"cache_hits\": {}, \"evictions\": {}}}{}\n",
+            r.tag,
+            r.pattern,
+            r.tag,
+            r.decode_tps,
+            r.tag,
+            r.p99_ttft_ms,
+            r.p50_ttft_ms,
+            r.sustained_tps,
+            r.bytes_per_session,
+            r.sessions_per_gb,
+            r.cache_hits,
+            r.evictions,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]}");
+    s
+}
+
+/// `"zero"` section body.
+pub fn zero_fragment(rows: &[ZeroRow]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"world\": {}, \"params\": {:.0}, \
+             \"opt_bytes_replicated\": {:.0}, \"opt_bytes_sharded\": {:.0}, \
+             \"wire_bytes_per_rank\": {:.0}, \"comm_ms\": {:.3}}}{}\n",
+            r.world,
+            r.params,
+            r.opt_replicated,
+            r.opt_sharded,
+            r.wire_bytes,
+            r.comm_ms,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]");
+    s
+}
+
+/// Index one past the balanced close of the `[`/`{` that `s` starts
+/// with, string-aware (quotes and escapes inside the body are skipped).
+fn balanced_end(s: &str) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut in_str = false;
+    let mut esc = false;
+    for (i, ch) in s.char_indices() {
+        if esc {
+            esc = false;
+            continue;
+        }
+        match ch {
+            '\\' if in_str => esc = true,
+            '"' => in_str = !in_str,
+            '[' | '{' if !in_str => depth += 1,
+            ']' | '}' if !in_str => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i + 1);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// The raw balanced body of top-level section `name` in `doc` (e.g. the
+/// `[ ... ]` after `"gemm":`), if present.
+pub fn extract_section<'a>(doc: &'a str, name: &str) -> Option<&'a str> {
+    let k = doc.find(&format!("\"{name}\":"))?;
+    let tail = &doc[k..];
+    let open = tail.find(['[', '{'])?;
+    let end = balanced_end(&tail[open..])?;
+    Some(&tail[open..open + end])
+}
+
+/// Splice section `name` into an existing BENCH_kernels.json document,
+/// replacing any previous copy and leaving every other section's bytes
+/// untouched — the single helper behind `chaos --json` (fault),
+/// `bench-serve --json` (serve), `bench-decode --json` (decode) and the
+/// `history` trajectory, so partial bench runs update just their own
+/// section without re-running everything else.  `fragment` is the
+/// section body, e.g. `[ ... ]` from one of the `*_fragment` emitters.
+pub fn splice_section(existing: &str, name: &str, fragment: &str) -> Result<String> {
     let mut doc = existing.trim_end().to_string();
-    if let Some(k) = doc.find("\"fault\":") {
+    if let Some(k) = doc.find(&format!("\"{name}\":")) {
         // drop the old section: preceding comma through balanced close
         let start = doc[..k].rfind(',').unwrap_or(k);
         let tail = &doc[k..];
         let open = tail
             .find(['[', '{'])
-            .ok_or_else(|| anyhow::anyhow!("malformed fault section"))?;
-        let mut depth = 0i64;
-        let mut in_str = false;
-        let mut esc = false;
-        let mut end = None;
-        for (i, ch) in tail[open..].char_indices() {
-            if esc {
-                esc = false;
-                continue;
-            }
-            match ch {
-                '\\' if in_str => esc = true,
-                '"' => in_str = !in_str,
-                '[' | '{' if !in_str => depth += 1,
-                ']' | '}' if !in_str => {
-                    depth -= 1;
-                    if depth == 0 {
-                        end = Some(k + open + i + 1);
-                        break;
-                    }
-                }
-                _ => {}
-            }
-        }
-        let end =
-            end.ok_or_else(|| anyhow::anyhow!("unbalanced fault section"))?;
-        doc.replace_range(start..end, "");
+            .ok_or_else(|| anyhow::anyhow!("malformed {name} section"))?;
+        let end = balanced_end(&tail[open..])
+            .ok_or_else(|| anyhow::anyhow!("unbalanced {name} section"))?;
+        doc.replace_range(start..k + open + end, "");
     }
     let close = doc
         .rfind('}')
         .ok_or_else(|| anyhow::anyhow!("not a JSON object"))?;
     let head = doc[..close].trim_end();
-    Ok(format!("{head},\n  \"fault\": {fragment}\n}}\n"))
+    Ok(format!("{head},\n  \"{name}\": {fragment}\n}}\n"))
+}
+
+/// One `history` array entry: the headline numbers of one PR's bench run
+/// (`pr`, `date`, then flat metric keys), the machine-readable perf
+/// trajectory the kernels snapshot grows PR over PR.
+pub fn history_entry(pr: &str, date: &str, headline: &[(&str, f64)]) -> String {
+    let mut s = format!("{{\"pr\": \"{pr}\", \"date\": \"{date}\"");
+    for (k, v) in headline {
+        s.push_str(&format!(", \"{k}\": {v:.2}"));
+    }
+    s.push('}');
+    s
+}
+
+/// Append `entry` to the `history` array carried by `old_doc` (the
+/// previously committed snapshot, if any), preserving prior entries
+/// verbatim.  Returns the new array fragment for [`splice_section`].
+pub fn append_history(old_doc: Option<&str>, entry: &str) -> String {
+    let prior = old_doc
+        .and_then(|d| extract_section(d, "history"))
+        .map(|frag| frag[1..frag.len() - 1].trim().trim_end_matches(',').to_string())
+        .unwrap_or_default();
+    if prior.is_empty() {
+        format!("[\n    {entry}\n  ]")
+    } else {
+        format!("[\n    {prior},\n    {entry}\n  ]")
+    }
 }
 
 impl KernelsReport {
@@ -796,120 +995,40 @@ impl KernelsReport {
         s.push_str("  \"schema\": 1,\n");
         s.push_str(&format!("  \"source\": \"{}\",\n", self.source));
         s.push_str(&format!("  \"threads\": {},\n", self.threads));
-        s.push_str("  \"gemm\": [\n");
-        for (i, g) in self.gemm.iter().enumerate() {
-            s.push_str(&format!(
-                "    {{\"op\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \"gflops\": {:.3}}}{}\n",
-                g.op,
-                g.m,
-                g.k,
-                g.n,
-                g.gflops,
-                if i + 1 < self.gemm.len() { "," } else { "" }
-            ));
-        }
-        s.push_str("  ]");
+        s.push_str(&format!("  \"isa\": \"{}\",\n", self.isa));
+        s.push_str("  \"gemm\": ");
+        s.push_str(&gemm_fragment(&self.gemm));
         if let Some((preset, tag, step_ms, tps)) = &self.train {
-            s.push_str(&format!(
-                ",\n  \"train\": {{\"preset\": \"{preset}\", \"tag\": \"{tag}\", \
-                 \"step_ms\": {step_ms:.3}, \"tokens_per_sec\": {tps:.1}}}"
-            ));
+            s.push_str(",\n  \"train\": ");
+            s.push_str(&train_fragment(preset, tag, *step_ms, *tps));
         }
         if let Some((preset, n, rows)) = &self.decode {
-            s.push_str(&format!(
-                ",\n  \"decode\": {{\"preset\": \"{preset}\", \"tokens\": {n}, \"rows\": {{\n"
-            ));
-            for (i, r) in rows.iter().enumerate() {
-                s.push_str(&format!(
-                    "    \"{}\": {:.1}{}\n",
-                    r.tag,
-                    r.tokens_per_sec,
-                    if i + 1 < rows.len() { "," } else { "" }
-                ));
-            }
-            s.push_str("  }}");
+            s.push_str(",\n  \"decode\": ");
+            s.push_str(&decode_fragment(preset, *n, rows));
         }
         if let Some((preset, world, rows)) = &self.fig3 {
-            s.push_str(&format!(
-                ",\n  \"fig3_realexec\": {{\"preset\": \"{preset}\", \"world\": {world}, \"rows\": {{\n"
-            ));
-            for (i, (name, tps)) in rows.iter().enumerate() {
-                s.push_str(&format!(
-                    "    \"{}\": {:.1}{}\n",
-                    name,
-                    tps,
-                    if i + 1 < rows.len() { "," } else { "" }
-                ));
-            }
-            s.push_str("  }}");
+            s.push_str(",\n  \"fig3_realexec\": ");
+            s.push_str(&fig3_fragment(preset, *world, rows));
         }
         if let Some(rows) = &self.crossover {
-            s.push_str(",\n  \"crossover\": [\n");
-            for (i, r) in rows.iter().enumerate() {
-                s.push_str(&format!(
-                    "    {{\"world\": {}, \"seq_k\": {}, \"pattern\": \"{}\", \"winner\": \"{}\"",
-                    r.world, r.seq_k, r.pattern, r.winner
-                ));
-                for (name, tps, oom) in &r.toks {
-                    if *oom {
-                        s.push_str(&format!(", \"{name}\": null"));
-                    } else {
-                        s.push_str(&format!(", \"{name}\": {tps:.1}"));
-                    }
-                }
-                s.push_str(&format!("}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
-            }
-            s.push_str("  ]");
+            s.push_str(",\n  \"crossover\": ");
+            s.push_str(&crossover_fragment(rows));
         }
         if let Some((preset, sessions, rows)) = &self.serve {
-            s.push_str(&format!(
-                ",\n  \"serve\": {{\"preset\": \"{preset}\", \"sessions\": {sessions}, \"rows\": [\n"
-            ));
-            for (i, r) in rows.iter().enumerate() {
-                s.push_str(&format!(
-                    "    {{\"tag\": \"{}\", \"pattern\": \"{}\", \
-                     \"serve_tps_{}\": {:.1}, \"serve_p99ttft_ms_{}\": {:.2}, \
-                     \"p50_ttft_ms\": {:.2}, \"sustained_tps\": {:.1}, \
-                     \"bytes_per_session\": {:.0}, \"sessions_per_gb\": {:.0}, \
-                     \"cache_hits\": {}, \"evictions\": {}}}{}\n",
-                    r.tag,
-                    r.pattern,
-                    r.tag,
-                    r.decode_tps,
-                    r.tag,
-                    r.p99_ttft_ms,
-                    r.p50_ttft_ms,
-                    r.sustained_tps,
-                    r.bytes_per_session,
-                    r.sessions_per_gb,
-                    r.cache_hits,
-                    r.evictions,
-                    if i + 1 < rows.len() { "," } else { "" }
-                ));
-            }
-            s.push_str("  ]}");
+            s.push_str(",\n  \"serve\": ");
+            s.push_str(&serve_fragment(preset, *sessions, rows));
         }
         if let Some(rows) = &self.zero {
-            s.push_str(",\n  \"zero\": [\n");
-            for (i, r) in rows.iter().enumerate() {
-                s.push_str(&format!(
-                    "    {{\"world\": {}, \"params\": {:.0}, \
-                     \"opt_bytes_replicated\": {:.0}, \"opt_bytes_sharded\": {:.0}, \
-                     \"wire_bytes_per_rank\": {:.0}, \"comm_ms\": {:.3}}}{}\n",
-                    r.world,
-                    r.params,
-                    r.opt_replicated,
-                    r.opt_sharded,
-                    r.wire_bytes,
-                    r.comm_ms,
-                    if i + 1 < rows.len() { "," } else { "" }
-                ));
-            }
-            s.push_str("  ]");
+            s.push_str(",\n  \"zero\": ");
+            s.push_str(&zero_fragment(rows));
         }
         if let Some(rows) = &self.fault {
             s.push_str(",\n  \"fault\": ");
             s.push_str(&fault_fragment(rows));
+        }
+        if let Some(h) = &self.history {
+            s.push_str(",\n  \"history\": ");
+            s.push_str(h);
         }
         s.push_str("\n}\n");
         s
@@ -943,6 +1062,7 @@ mod tests {
         KernelsReport {
             source: "test".into(),
             threads: 1,
+            isa: "scalar".into(),
             gemm: Vec::new(),
             train: None,
             decode: None,
@@ -951,6 +1071,63 @@ mod tests {
             zero: None,
             serve: None,
             fault,
+            history: None,
+        }
+    }
+
+    /// A report with EVERY section populated — the bench-all shape.
+    fn full_report() -> KernelsReport {
+        KernelsReport {
+            source: "test bench-all".into(),
+            threads: 2,
+            isa: "avx2".into(),
+            gemm: vec![GemmRow { op: "nn", m: 4, k: 8, n: 4, gflops: 1.25 }],
+            train: Some(("tiny".into(), "basic_pure".into(), 12.5, 4321.0)),
+            decode: Some((
+                "tiny".into(),
+                16,
+                vec![DecodeRow {
+                    tag: "basic_pure".into(),
+                    pattern: "LL".into(),
+                    tokens_per_sec: 1000.0,
+                    state_bytes: [64, 64, 64],
+                }],
+            )),
+            fig3: Some(("tiny".into(), 4, vec![("lasp2".into(), 9000.0)])),
+            crossover: Some(vec![CrossoverRow {
+                world: 8,
+                seq_k: 8,
+                pattern: "pure".into(),
+                toks: vec![("lasp2".into(), 100.0, false), ("ring".into(), 0.0, true)],
+                winner: "lasp2".into(),
+            }]),
+            zero: Some(vec![ZeroRow {
+                world: 4,
+                params: 1e9,
+                opt_replicated: 8e9,
+                opt_sharded: 2e9,
+                wire_bytes: 1e9,
+                comm_ms: 3.5,
+            }]),
+            serve: Some((
+                "tiny".into(),
+                8,
+                vec![ServeRow {
+                    tag: "basic_pure".into(),
+                    pattern: "LL".into(),
+                    sessions: 8,
+                    p50_ttft_ms: 1.0,
+                    p99_ttft_ms: 2.0,
+                    decode_tps: 900.0,
+                    sustained_tps: 800.0,
+                    bytes_per_session: 4096.0,
+                    sessions_per_gb: 244140.0,
+                    cache_hits: 3,
+                    evictions: 1,
+                }],
+            )),
+            fault: Some(vec![row("crash_w4")]),
+            history: Some(append_history(None, &history_entry("pr5", "2026-01-01", &[]))),
         }
     }
 
@@ -982,20 +1159,84 @@ mod tests {
     fn splice_inserts_then_replaces_without_duplicating() {
         let base = report_with(None).to_json();
         let frag1 = fault_fragment(&[row("crash_w4")]);
-        let d1 = splice_fault_section(&base, &frag1).unwrap();
+        let d1 = splice_section(&base, "fault", &frag1).unwrap();
         assert_eq!(d1.matches("\"fault\"").count(), 1);
         assert!(d1.contains("crash_w4"));
         assert!(d1.ends_with("}\n"));
         // splicing again replaces the old section in place
         let frag2 = fault_fragment(&[row("straggler"), row("corrupt")]);
-        let d2 = splice_fault_section(&d1, &frag2).unwrap();
+        let d2 = splice_section(&d1, "fault", &frag2).unwrap();
         assert_eq!(d2.matches("\"fault\"").count(), 1);
         assert!(!d2.contains("crash_w4"));
         assert!(d2.contains("straggler") && d2.contains("corrupt"));
         // and the result is byte-identical to emitting it directly
-        assert_eq!(d2, splice_fault_section(&base, &frag2).unwrap());
+        assert_eq!(d2, splice_section(&base, "fault", &frag2).unwrap());
         let open = d2.matches(['{', '[']).count();
         let close = d2.matches(['}', ']']).count();
         assert_eq!(open, close);
+    }
+
+    /// The satellite guarantee: after a full bench-all write, splicing any
+    /// one section (what chaos / bench-serve / bench-decode do) preserves
+    /// every other section byte for byte.
+    #[test]
+    fn splicing_one_section_preserves_all_others() {
+        let doc = full_report().to_json();
+        let sections = [
+            "gemm", "train", "decode", "fig3_realexec", "crossover",
+            "serve", "zero", "fault", "history",
+        ];
+        // every section is present exactly once in the full document
+        for name in sections {
+            assert_eq!(doc.matches(&format!("\"{name}\":")).count(), 1, "{name}");
+            assert!(extract_section(&doc, name).is_some(), "{name}");
+        }
+        // re-splice each section in turn with a fresh fragment; all other
+        // sections' extracted bodies must be untouched
+        let e6 = history_entry("pr6", "2026-02-02", &[("gemm_peak_gflops", 33.0)]);
+        let cases: Vec<(&str, String)> = vec![
+            ("fault", fault_fragment(&[row("straggler")])),
+            ("serve", serve_fragment("tiny", 9, &full_report().serve.unwrap().2)),
+            ("decode", decode_fragment("tiny", 32, &full_report().decode.unwrap().2)),
+            ("gemm", gemm_fragment(&full_report().gemm)),
+            ("history", append_history(Some(&doc), &e6)),
+        ];
+        for (name, frag) in cases {
+            let spliced = splice_section(&doc, name, &frag).unwrap();
+            assert_eq!(spliced.matches(&format!("\"{name}\":")).count(), 1);
+            assert_eq!(extract_section(&spliced, name), Some(frag.as_str()));
+            for other in sections.iter().filter(|s| **s != name) {
+                assert_eq!(
+                    extract_section(&spliced, other),
+                    extract_section(&doc, other),
+                    "splicing {name} must not disturb {other}"
+                );
+            }
+            let open = spliced.matches(['{', '[']).count();
+            let close = spliced.matches(['}', ']']).count();
+            assert_eq!(open, close);
+        }
+    }
+
+    #[test]
+    fn history_appends_without_rewriting_prior_entries() {
+        let e1 = history_entry("pr5", "2026-01-01", &[("decode_tps", 1000.0)]);
+        let h1 = append_history(None, &e1);
+        assert_eq!(h1, format!("[\n    {e1}\n  ]"));
+        let doc = splice_section(&report_with(None).to_json(), "history", &h1).unwrap();
+        // next PR appends; the first entry's bytes are carried verbatim
+        let e2 = history_entry("pr6", "2026-02-02", &[("decode_tps", 1250.0)]);
+        let h2 = append_history(Some(&doc), &e2);
+        assert!(h2.contains(&e1) && h2.contains(&e2));
+        assert!(h2.find(&e1).unwrap() < h2.find(&e2).unwrap());
+        let doc2 = splice_section(&doc, "history", &h2).unwrap();
+        assert_eq!(doc2.matches("\"pr\"").count(), 2);
+        // and a third round keeps all prior entries in order
+        let e3 = history_entry("pr7", "2026-03-03", &[]);
+        let doc3 =
+            splice_section(&doc2, "history", &append_history(Some(&doc2), &e3)).unwrap();
+        for pr in ["pr5", "pr6", "pr7"] {
+            assert_eq!(doc3.matches(&format!("\"{pr}\"")).count(), 1);
+        }
     }
 }

@@ -30,7 +30,8 @@ use lasp2::serve::{
     argmax, gen_trace, Model, Request, ServeConfig, ServeLoop, ServeSummary, TraceConfig,
 };
 use lasp2::sim::CostModel;
-use lasp2::tensor::{par, Tensor};
+use lasp2::tensor::quant::DecodeDtype;
+use lasp2::tensor::{gemm, par, Tensor};
 use lasp2::train::{fault_op_for_step, train, TrainOpts};
 
 struct Args {
@@ -105,6 +106,9 @@ COMMANDS
                 on the recurrent state (constant memory for linear layers)
                   --preset tiny|small  --variant basic|gla|...  --ratio 0|1/2
                   --tokens N  --prompt 1,2,3  --seed S
+                  --decode-dtype f32|bf16|int8  (readout weight storage;
+                  f32 is bit-exact, bf16/int8 trade <=1e-2 logit error for
+                  2-4x less readout bandwidth; see DESIGN.md)
   bench-fig3    speed comparison tokens/s (sim @64 GPUs) + real-exec table
   bench-fig4    scalability frontier (sim)
   bench-table2  convergence zoo (real training; needs small bench artifacts)
@@ -131,13 +135,16 @@ COMMANDS
                   >30% above the serve_p99ttft_ms_* ceiling)
   bench-decode  serving decode: tokens/s + state-bytes-vs-seqlen table
                   --preset tiny|small  --tokens N
-                  --json path.json  (machine-readable results)
+                  --decode-dtype f32|bf16|int8  (readout weight storage)
+                  --json path.json  (splices the \"decode\" section into an
+                  existing snapshot, other sections untouched)
                   --floor BENCH_floor.json  (fail if tokens/s drops >30%
                   below the committed floor — the CI perf smoke gate)
   bench-kernels op-level GEMM GFLOP/s + train-step ms + decode tokens/s
                   --preset tiny|small  --steps N  --tokens N
-                  --json BENCH_kernels.json
-                  --floor BENCH_floor.json  (train + decode perf gate)
+                  --json BENCH_kernels.json  (also appends a \"history\"
+                  perf-trajectory entry; --pr names it)
+                  --floor BENCH_floor.json  (gemm + train + decode gate)
   bench-all     all of the above, plus the scheduler crossover table
                 (sim, W in {8,64,128}, N up to 2048K) and the ZeRO
                 replicated-vs-sharded memory/wire table; --json path.json
@@ -227,7 +234,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let n_tokens = args.usize("tokens", 32)?;
     anyhow::ensure!(n_tokens >= 1, "--tokens must be >= 1");
     let seed = args.usize("seed", 0)? as i32;
-    let model = Model::load(&preset, variant, &ratio, seed)?;
+    let dtype = DecodeDtype::parse(&args.get("decode-dtype", "f32"))?;
+    let mut model = Model::load(&preset, variant, &ratio, seed)?;
+    model.set_decode_dtype(dtype)?;
+    let model = model;
     let cfg = model.config().clone();
     let prompt: Vec<i32> = match args.flags.get("prompt") {
         Some(s) => s
@@ -239,9 +249,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
             .collect(),
     };
     println!(
-        "preset={preset} variant={variant} pattern={} prompt_len={} decode_tokens={n_tokens}",
+        "preset={preset} variant={variant} pattern={} prompt_len={} decode_tokens={n_tokens} \
+         decode_dtype={}",
         model.pattern().0,
-        prompt.len()
+        prompt.len(),
+        dtype.name()
     );
     model.warmup_serving()?;
     let mut session = model.session();
@@ -286,25 +298,40 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_decode_bench(args: &Args) -> Result<()> {
     let preset = args.get("preset", "tiny");
+    let dtype = DecodeDtype::parse(&args.get("decode-dtype", "f32"))?;
     let engine = Engine::load_preset(&preset)?;
     let n = args.usize("tokens", (engine.model.max_seq / 4).max(8))?;
-    println!("# Serving decode — constant-memory inference ({preset}, {n} tokens)\n");
-    let (table, rows) = bench::decode_bench_rows(&engine, n)?;
+    println!(
+        "# Serving decode — constant-memory inference \
+         ({preset}, {n} tokens, {} readout)\n",
+        dtype.name()
+    );
+    let (table, rows) = bench::decode_bench_rows_with(&engine, n, dtype)?;
     println!("{}", table.to_markdown());
     if let Some(path) = args.flags.get("json") {
-        let report = bench::KernelsReport {
-            source: "lasp2 bench-decode".into(),
-            threads: par::num_threads(),
-            gemm: Vec::new(),
-            train: None,
-            decode: Some((preset.clone(), n, rows.clone())),
-            fig3: None,
-            crossover: None,
-            zero: None,
-            serve: None,
-            fault: None,
+        // splice into an existing snapshot (keeping its other sections);
+        // write a fresh single-section document only if none exists
+        let frag = bench::decode_fragment(&preset, n, &rows);
+        let doc = match std::fs::read_to_string(path) {
+            Ok(existing) => bench::splice_section(&existing, "decode", &frag)
+                .with_context(|| format!("splicing decode section into {path}"))?,
+            Err(_) => bench::KernelsReport {
+                source: "lasp2 bench-decode".into(),
+                threads: par::num_threads(),
+                isa: gemm::isa_name().into(),
+                gemm: Vec::new(),
+                train: None,
+                decode: Some((preset.clone(), n, rows.clone())),
+                fig3: None,
+                crossover: None,
+                zero: None,
+                serve: None,
+                fault: None,
+                history: None,
+            }
+            .to_json(),
         };
-        std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
+        std::fs::write(path, doc).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
     }
     if let Some(floor_path) = args.flags.get("floor") {
@@ -394,19 +421,29 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         bench::serve_bench_rows(&engine, sessions, seed, budget, max_active, full)?;
     println!("{}", table.to_markdown());
     if let Some(path) = args.flags.get("json") {
-        let report = bench::KernelsReport {
-            source: "lasp2 bench-serve".into(),
-            threads: par::num_threads(),
-            gemm: Vec::new(),
-            train: None,
-            decode: None,
-            fig3: None,
-            crossover: None,
-            zero: None,
-            serve: Some((preset.clone(), sessions, rows.clone())),
-            fault: None,
+        // "adds the serve section": splice into an existing snapshot,
+        // only falling back to a fresh document when none exists
+        let frag = bench::serve_fragment(&preset, sessions, &rows);
+        let doc = match std::fs::read_to_string(path) {
+            Ok(existing) => bench::splice_section(&existing, "serve", &frag)
+                .with_context(|| format!("splicing serve section into {path}"))?,
+            Err(_) => bench::KernelsReport {
+                source: "lasp2 bench-serve".into(),
+                threads: par::num_threads(),
+                isa: gemm::isa_name().into(),
+                gemm: Vec::new(),
+                train: None,
+                decode: None,
+                fig3: None,
+                crossover: None,
+                zero: None,
+                serve: Some((preset.clone(), sessions, rows.clone())),
+                fault: None,
+                history: None,
+            }
+            .to_json(),
         };
-        std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
+        std::fs::write(path, doc).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
     }
     if let Some(floor_path) = args.flags.get("floor") {
@@ -490,6 +527,34 @@ fn check_serve_floor(rows: &[bench::ServeRow], floor_text: &str) -> Result<()> {
     Ok(())
 }
 
+/// CI perf smoke for the GEMM microkernels: every measured shape with a
+/// committed `gemm_{op}_{m}x{k}x{n}` floor must stay above floor * 0.7,
+/// mirroring the decode gate.  The committed floors sit above the
+/// pre-SIMD kernels' throughput (losing the microkernels fails CI) with
+/// several-fold headroom under the snapshot numbers for noisy runners;
+/// the scalar-fallback CI leg runs without `--floor` and skips them.
+fn check_gemm_floor(rows: &[bench::GemmRow], floor_text: &str) -> Result<()> {
+    let mut failures = Vec::new();
+    let mut checked = 0;
+    for r in rows {
+        let key = format!("gemm_{}_{}x{}x{}", r.op, r.m, r.k, r.n);
+        if let Some(floor) = json_lookup_f64(floor_text, &key) {
+            checked += 1;
+            if r.gflops < floor * 0.7 {
+                failures.push(format!(
+                    "{key}: {:.2} GFLOP/s < 70% of committed floor {floor:.2}",
+                    r.gflops
+                ));
+            }
+        }
+    }
+    anyhow::ensure!(checked > 0, "floor file matched no gemm rows");
+    if !failures.is_empty() {
+        bail!("gemm perf regression:\n  {}", failures.join("\n  "));
+    }
+    Ok(())
+}
+
 /// CI perf smoke for the train-step row: tokens/s must stay above
 /// floor * 0.7, mirroring the decode gate.
 fn check_train_floor(tag: &str, tps: f64, floor_text: &str) -> Result<()> {
@@ -504,13 +569,53 @@ fn check_train_floor(tag: &str, tps: f64, floor_text: &str) -> Result<()> {
     Ok(())
 }
 
+/// Headline numbers for one bench-kernels run, as `history` entry keys.
+fn history_headline(
+    gemm: &[bench::GemmRow],
+    tps: f64,
+    rows: &[bench::DecodeRow],
+) -> Vec<(&'static str, f64)> {
+    let peak = |pred: &dyn Fn(&&bench::GemmRow) -> bool| {
+        gemm.iter().filter(pred).map(|g| g.gflops).fold(0.0, f64::max)
+    };
+    let mut h = vec![
+        ("gemm_nn_peak_gflops", peak(&|g| g.op == "nn")),
+        ("gemm_nt_m1_gflops", peak(&|g| g.op == "nt" && g.m == 1)),
+        ("gemm_tn_peak_gflops", peak(&|g| g.op == "tn")),
+        ("train_tps", tps),
+    ];
+    if let Some(r) = rows.iter().find(|r| r.tag == "basic_pure") {
+        h.push(("decode_tps_basic_pure", r.tokens_per_sec));
+    }
+    h
+}
+
+/// Today's UTC date as `YYYY-MM-DD` (civil-from-days, dependency-free).
+fn utc_date() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
 fn cmd_bench_kernels(args: &Args) -> Result<()> {
     let preset = args.get("preset", "tiny");
     let engine = Engine::load_preset(&preset)?;
-    let (gt, gemm) = bench::gemm_bench();
+    let (gt, gemm_rows) = bench::gemm_bench();
     println!(
-        "# Kernel-level GEMM throughput ({} threads)\n\n{}",
+        "# Kernel-level GEMM throughput ({} threads, {} kernels)\n\n{}",
         par::num_threads(),
+        gemm::isa_name(),
         gt.to_markdown()
     );
     let steps = args.usize("steps", 8)?;
@@ -520,10 +625,21 @@ fn cmd_bench_kernels(args: &Args) -> Result<()> {
     let (dt, rows) = bench::decode_bench_rows(&engine, n)?;
     println!("# Serving decode ({preset}, {n} tokens)\n\n{}", dt.to_markdown());
     if let Some(path) = args.flags.get("json") {
+        // the perf trajectory: carry the committed snapshot's history
+        // forward and append this run's headline numbers (--pr names the
+        // entry; CI passes the actual PR/branch, local runs default)
+        let old = std::fs::read_to_string(path).ok();
+        let entry = bench::history_entry(
+            &args.get("pr", "local"),
+            &utc_date(),
+            &history_headline(&gemm_rows, tps, &rows),
+        );
+        let history = bench::append_history(old.as_deref(), &entry);
         let report = bench::KernelsReport {
             source: "lasp2 bench-kernels".into(),
             threads: par::num_threads(),
-            gemm,
+            isa: gemm::isa_name().into(),
+            gemm: gemm_rows.clone(),
             train: Some((preset.clone(), tag.clone(), step_ms, tps)),
             decode: Some((preset.clone(), n, rows.clone())),
             fig3: None,
@@ -531,6 +647,7 @@ fn cmd_bench_kernels(args: &Args) -> Result<()> {
             zero: None,
             serve: None,
             fault: None,
+            history: Some(history),
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
@@ -538,9 +655,10 @@ fn cmd_bench_kernels(args: &Args) -> Result<()> {
     if let Some(floor_path) = args.flags.get("floor") {
         let text = std::fs::read_to_string(floor_path)
             .with_context(|| format!("reading floor file {floor_path}"))?;
+        check_gemm_floor(&gemm_rows, &text)?;
         check_train_floor(&tag, tps, &text)?;
         check_decode_floor(&rows, &text)?;
-        println!("train + decode floor check passed ({floor_path})");
+        println!("gemm + train + decode floor check passed ({floor_path})");
     }
     Ok(())
 }
@@ -588,9 +706,16 @@ fn cmd_bench_all(args: &Args) -> Result<()> {
     let (stable, srows) = bench::serve_bench_rows(&engine, sessions, 1, 0, 8, false)?;
     println!("{}", stable.to_markdown());
     if let Some(path) = args.flags.get("json") {
+        let old = std::fs::read_to_string(path).ok();
+        let entry = bench::history_entry(
+            &args.get("pr", "local"),
+            &utc_date(),
+            &history_headline(&gemm, tps, &drows),
+        );
         let report = bench::KernelsReport {
             source: "lasp2 bench-all".into(),
             threads: par::num_threads(),
+            isa: gemm::isa_name().into(),
             gemm,
             train: Some((preset.clone(), tag, step_ms, tps)),
             decode: Some((preset.clone(), n, drows)),
@@ -599,6 +724,7 @@ fn cmd_bench_all(args: &Args) -> Result<()> {
             zero: Some(zrows),
             serve: Some((preset, sessions, srows)),
             fault: None,
+            history: Some(bench::append_history(old.as_deref(), &entry)),
         };
         std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
@@ -818,11 +944,12 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     if let Some(path) = args.flags.get("json") {
         let frag = bench::fault_fragment(&rows);
         let doc = match std::fs::read_to_string(path) {
-            Ok(existing) => bench::splice_fault_section(&existing, &frag)
+            Ok(existing) => bench::splice_section(&existing, "fault", &frag)
                 .with_context(|| format!("splicing fault section into {path}"))?,
             Err(_) => bench::KernelsReport {
                 source: "lasp2 chaos".into(),
                 threads: par::num_threads(),
+                isa: gemm::isa_name().into(),
                 gemm: Vec::new(),
                 train: None,
                 decode: None,
@@ -831,6 +958,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
                 zero: None,
                 serve: None,
                 fault: Some(rows),
+                history: None,
             }
             .to_json(),
         };
@@ -1085,6 +1213,33 @@ mod tests {
         assert!(super::check_serve_floor(&[row(80.0, 70.0)], text).is_err());
         // a floor file matching no rows is a configuration error
         assert!(super::check_serve_floor(&[row(80.0, 60.0)], "{}").is_err());
+    }
+
+    #[test]
+    fn gemm_floor_check() {
+        let text = r#"{"floors": {"gemm_nn_512x256x512": 10.0}}"#;
+        let row = |gflops: f64| lasp2::bench::GemmRow {
+            op: "nn",
+            m: 512,
+            k: 256,
+            n: 512,
+            gflops,
+        };
+        // 8 >= 10 * 0.7 -> inside the 30% regression budget
+        assert!(super::check_gemm_floor(&[row(8.0)], text).is_ok());
+        // 6 < 7 -> regression
+        assert!(super::check_gemm_floor(&[row(6.0)], text).is_err());
+        // shapes without floors are skipped, but matching none is an error
+        assert!(super::check_gemm_floor(&[row(8.0)], "{}").is_err());
+    }
+
+    #[test]
+    fn utc_date_is_well_formed() {
+        let d = super::utc_date();
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.as_bytes()[4], b'-');
+        assert_eq!(d.as_bytes()[7], b'-');
+        assert!(d[..4].parse::<i64>().unwrap() >= 2024);
     }
 
     #[test]

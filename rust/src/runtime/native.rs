@@ -38,11 +38,28 @@
 //! prefill), and the decode-shaped `embed_dec_B{b}` / `head_dec_B{b}`,
 //! each registered at every batch size in `DECODE_BATCH_SIZES`.
 //!
+//! ## Fused intra+inter attention kernel
+//!
+//! Every masked chunked path computes its attention output through
+//! [`attn_heads_fused`] — one pass over Q~ per chunk evaluating
+//! `[(Q~ K~ᵀ) · tril] V + Q~ M` head by head (the Lightning-Attention-2
+//! fusion, arXiv:2401.04658).  Artifact families on the fused kernel:
+//! the `forward_mono_*` oracles (via `linear_layer_chunked`), `l_part2_*`
+//! (chunked forward + prefill), the scheduler hidden-state path
+//! (`l_chunk_hs_*`), and the batched decode steps (`l_decode_*_B{b}`).
+//! The split path kept for overlap scheduling — `l_intra_*` followed by
+//! `l_part2b_*` — accumulates the inter readout in place on top of
+//! `o_intra` (`inter_acc_heads`), reproducing the fused kernel's
+//! accumulation chain bit for bit.  Only the unmasked bidirectional
+//! `l_part2nm_basic` still materializes a standalone `inter_heads`
+//! product (it has no intra term).
+//!
 //! ## Compute parallelism (`LASP2_THREADS`, bit-identical at any setting)
 //!
-//! All dense math routes through the strided `tensor::gemm` core (tiled,
-//! fused-transpose, row-band threaded for large shapes, per-head views
-//! addressed in place).  On top of that, the embarrassingly-parallel
+//! All dense math routes through the strided `tensor::gemm` core
+//! (SIMD-dispatched k-blocked panel microkernels, fused-transpose,
+//! row-band threaded for large shapes, per-head views addressed in
+//! place).  On top of that, the embarrassingly-parallel
 //! loops fan out deterministically via `tensor::par` — exactly the
 //! computation-parallelism the paper's single AllGather unlocks:
 //!
@@ -98,7 +115,11 @@ fn silu(x: f32) -> f32 {
 }
 
 /// RMSNorm over the last axis: y = x * rsqrt(mean(x^2) + eps) * w.
-fn rmsnorm(x: &Tensor, w: &Tensor) -> Tensor {
+///
+/// `pub(crate)`: the serve quantized-readout path (`serve::QuantReadout`)
+/// applies this exact normalization before its quantized `matmul_nt`, so
+/// the only deviation from the `head_dec_B{b}` artifact is weight rounding.
+pub(crate) fn rmsnorm(x: &Tensor, w: &Tensor) -> Tensor {
     let d = *x.shape().last().unwrap();
     let rows = x.len() / d;
     let wd = w.data();
@@ -533,6 +554,77 @@ fn inter_heads(qt: &Tensor, m: &Tensor) -> Tensor {
     out
 }
 
+/// One head of O += Q~ M_h accumulated into `out` rows at stride `ldo`
+/// (`gemm::nn_acc` on the strided head view — no copies).
+fn inter_acc_one_head(qt: &Tensor, m: &Tensor, h: usize, out: &mut [f32], ldo: usize) {
+    let (c, hh, fk) = (qt.shape()[0], qt.shape()[1], qt.shape()[2]);
+    let dh = m.shape()[2];
+    gemm::nn_acc(
+        c,
+        fk,
+        dh,
+        &qt.data()[h * fk..],
+        hh * fk,
+        &m.data()[h * fk * dh..(h + 1) * fk * dh],
+        dh,
+        out,
+        ldo,
+    );
+}
+
+/// O += Q~ M per head, accumulated in place into `out` ([C, H, dh]).
+/// The accumulation-chain twin of the fused kernel: `o_intra` + this is
+/// bit-identical to [`attn_heads_fused`], which is how the split
+/// `l_intra`/`l_part2b` scheduler path keeps exact parity with the fused
+/// `l_part2` path.
+fn inter_acc_heads(qt: &Tensor, m: &Tensor, out: &mut Tensor) {
+    let hh = qt.shape()[1];
+    let dh = m.shape()[2];
+    for h in 0..hh {
+        let ldo = hh * dh;
+        inter_acc_one_head(qt, m, h, &mut out.data_mut()[h * dh..], ldo);
+    }
+}
+
+/// Fused O = [(Q~ K~ᵀ) · tril] V + Q~ M per head -> [C, H, dh] — the
+/// Lightning-Attention-2-style single pass over Q~ (arXiv:2401.04658):
+/// each head computes its intra product into `out` and immediately
+/// accumulates the inter readout on top while Q~_h and the output tile
+/// are still cache-hot.  Replaces `intra_heads(..).add(&inter_heads(..))`
+/// in every chunked forward, decode, and scheduler path, eliminating the
+/// full [C, H, dh] intermediate and a second traversal of Q~.
+/// Head-parallel when the work is large; bit-identical at any thread
+/// count (banding and head fan-out never reorder accumulation).
+fn attn_heads_fused(qt: &Tensor, kt: &Tensor, v: &Tensor, m: &Tensor) -> Tensor {
+    let (c, hh, fk) = (qt.shape()[0], qt.shape()[1], qt.shape()[2]);
+    let dh = v.shape()[2];
+    let mut out = Tensor::zeros(&[c, hh, dh]);
+    let flops = 2 * c * hh * (c * (fk + dh) + fk * dh);
+    if par::would_parallelize(hh, flops) {
+        let heads: Vec<Vec<f32>> = par::par_map(hh, flops, |h| {
+            let mut s = scratch::take(c * c);
+            let mut oh = scratch::take(c * dh);
+            intra_one_head(qt, kt, v, h, &mut s, &mut oh, dh);
+            inter_acc_one_head(qt, m, h, &mut oh, dh);
+            scratch::recycle(s);
+            oh
+        });
+        for (h, oh) in heads.into_iter().enumerate() {
+            scatter_head(&mut out, h, &oh);
+            scratch::recycle(oh);
+        }
+    } else {
+        let mut s = scratch::take(c * c);
+        for h in 0..hh {
+            let ldo = hh * dh;
+            intra_one_head(qt, kt, v, h, &mut s, &mut out.data_mut()[h * dh..], ldo);
+            inter_acc_one_head(qt, m, h, &mut out.data_mut()[h * dh..], ldo);
+        }
+        scratch::recycle(s);
+    }
+    out
+}
+
 /// One head of causal softmax attention against a gathered K/V sequence,
 /// written to `out` rows at stride `ldo`.
 fn softmax_one_head(
@@ -710,7 +802,7 @@ fn linear_layer_chunked(
     let outs: Vec<Tensor> = par::par_map(chunks.len(), total_flops, |t| {
         let p = &parts[t];
         let attn = if masked {
-            intra_heads(&p.qt, &p.kt, &p.v).add(&inter_heads(&p.qt, &prefixes[t].m))
+            attn_heads_fused(&p.qt, &p.kt, &p.v, &prefixes[t].m)
         } else {
             inter_heads(&p.qt, &total.m)
         };
@@ -1503,7 +1595,7 @@ impl Registry {
                     let kt = ins[2].host_f32()?;
                     let v = ins[3].host_f32()?;
                     let mp = ins[4].host_f32()?;
-                    let attn = intra_heads(qt, kt, v).add(&inter_heads(qt, mp));
+                    let attn = attn_heads_fused(qt, kt, v, mp);
                     Ok(vec![epilogue(
                         x,
                         &attn,
@@ -1547,7 +1639,12 @@ impl Registry {
                     let qt = ins[1].host_f32()?;
                     let o_intra = ins[2].host_f32()?;
                     let mp = ins[3].host_f32()?;
-                    let attn = o_intra.add(&inter_heads(qt, mp));
+                    // clone-then-accumulate keeps the per-element chain
+                    // identical to the fused l_part2 kernel (o_intra +
+                    // panel partials, NOT o_intra + a separately
+                    // materialized inter total)
+                    let mut attn = o_intra.clone();
+                    inter_acc_heads(qt, mp, &mut attn);
                     Ok(vec![epilogue(
                         x,
                         &attn,
@@ -1895,8 +1992,7 @@ impl Registry {
                             };
                             let mut outs = Vec::with_capacity(t_chunks);
                             for t in 0..t_chunks {
-                                let o = intra_heads(&qts[t], &kts[t], &vs[t])
-                                    .add(&inter_heads(&qts[t], &prefix.m));
+                                let o = attn_heads_fused(&qts[t], &kts[t], &vs[t], &prefix.m);
                                 outs.push(o);
                                 prefix = state_combine(
                                     &prefix,
@@ -2403,8 +2499,7 @@ impl Registry {
                                 vec![hh, fk, dh],
                                 m_in.data()[bi * mstride..(bi + 1) * mstride].to_vec(),
                             );
-                            let attn = intra_heads(&p.qt, &p.kt, &p.v)
-                                .add(&inter_heads(&p.qt, &m_prev));
+                            let attn = attn_heads_fused(&p.qt, &p.kt, &p.v, &m_prev);
                             let y = epilogue(&xb, &attn, epi[0], epi[1], epi[2], epi[3], epi[4]);
                             // M_new = diag(g) M_prev + k^T v (Eq. 4, one step)
                             let st = state_combine(

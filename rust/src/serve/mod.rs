@@ -47,6 +47,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{ModelConfig, Pattern, Variant};
 use crate::coordinator::Params;
 use crate::runtime::{Engine, Value};
+use crate::tensor::quant::{DecodeDtype, QuantMat};
 use crate::tensor::{scratch, state_combine, ChunkState, Tensor};
 
 /// Greedy sampling: index of the max logit (ties -> lowest index).
@@ -60,10 +61,24 @@ pub fn argmax(row: &[f32]) -> i32 {
     best as i32
 }
 
+/// Pre-quantized decode readout (`--decode-dtype bf16|int8`): the
+/// `final_ln` weights plus the embedding matrix stored reduced-precision.
+/// Built once per model by [`Model::set_decode_dtype`]; `decode_group`
+/// then computes the per-token logits as
+/// `rmsnorm(x, final_ln) · dequant(emb)ᵀ` with f32 accumulation instead
+/// of running the `head_dec_B{b}` artifact.  Tolerance-parity (≤1e-2
+/// logits), still deterministic across runs and thread counts.
+struct QuantReadout {
+    final_ln: Tensor,
+    emb: QuantMat,
+}
+
 /// A loaded model: engine + parameters, shared (read-only) by sessions.
 pub struct Model {
     engine: Arc<Engine>,
     params: Params,
+    /// `Some` only when an opt-in reduced-precision readout is active.
+    readout: Option<QuantReadout>,
 }
 
 impl Model {
@@ -94,13 +109,34 @@ impl Model {
         } else {
             Params::randn(&engine.model, variant, &pattern, seed as u64)
         };
-        Ok(Model { engine, params })
+        Ok(Model { engine, params, readout: None })
     }
 
     /// Wrap an engine + parameter set the caller built directly (tests,
     /// checkpoints restored from a training run).
     pub fn from_parts(engine: Arc<Engine>, params: Params) -> Model {
-        Model { engine, params }
+        Model { engine, params, readout: None }
+    }
+
+    /// Select the decode-readout weight dtype (`--decode-dtype`).  `F32`
+    /// (the default) keeps the bit-exact `head_dec_B{b}` artifact path;
+    /// `Bf16`/`Int8` quantize the embedding once here and route decode
+    /// logits through [`QuantReadout`].  Prefill logits stay f32 either
+    /// way — only the per-token decode readout is bandwidth-bound.
+    pub fn set_decode_dtype(&mut self, dtype: DecodeDtype) -> Result<()> {
+        self.readout = match dtype {
+            DecodeDtype::F32 => None,
+            _ => Some(QuantReadout {
+                final_ln: self.params.get("final_ln")?.clone(),
+                emb: QuantMat::quantize(self.params.get("embed")?, dtype)?,
+            }),
+        };
+        Ok(())
+    }
+
+    /// The active decode-readout dtype.
+    pub fn decode_dtype(&self) -> DecodeDtype {
+        self.readout.as_ref().map_or(DecodeDtype::F32, |r| r.emb.dtype())
     }
 
     pub fn engine(&self) -> &Arc<Engine> {
@@ -752,12 +788,18 @@ fn decode_group(sessions: &mut [&mut Session<'_>], tokens: &[i32]) -> Result<Vec
         }
     }
 
-    let head = engine.artifact(&format!("head_dec_B{b}"))?;
-    let logits = head.run1(&[
-        x.into(),
-        model.params.value(engine, "final_ln")?,
-        model.params.value(engine, "embed")?,
-    ])?; // [b, vocab]
+    let logits = if let Some(qr) = &model.readout {
+        // opt-in reduced-precision readout: same rmsnorm as the artifact
+        // (shared fn), then the quantized `x · embᵀ` with f32 accumulation
+        qr.emb.matmul_nt(&crate::runtime::native::rmsnorm(&x, &qr.final_ln))
+    } else {
+        let head = engine.artifact(&format!("head_dec_B{b}"))?;
+        head.run1(&[
+            x.into(),
+            model.params.value(engine, "final_ln")?,
+            model.params.value(engine, "embed")?,
+        ])?
+    }; // [b, vocab]
     for s in sessions.iter_mut() {
         s.pos += 1;
     }

@@ -1,5 +1,5 @@
-//! Cache-blocked, autovectorization-friendly f32 GEMM kernels on strided
-//! row-major buffers — the compute core every hot path routes through.
+//! Cache-blocked, SIMD-dispatched f32 GEMM kernels on strided row-major
+//! buffers — the compute core every hot path routes through.
 //!
 //! Three layouts, each with an overwriting and an accumulating entry:
 //!
@@ -12,26 +12,99 @@
 //! per-head `[C, F]` view of a `[C, H, F]` tensor is addressed in place —
 //! no `head_of`/`set_head` copies.
 //!
-//! Kernel structure (measured on the shapes this repo actually runs —
-//! see DESIGN.md §Compute core):
-//! * `nn`/`tn`: MR=4 row panels — one pass over each B row updates four
-//!   output rows, with a contiguous branch-free inner j-loop that the
-//!   compiler vectorizes.  Per-element accumulation stays in ascending-p
-//!   order, so results match the naive triple loop bit for bit on dense
-//!   data (the old `a == 0.0` skip only ever elided exact `+0.0`
-//!   contributions, which is why removing it is also value-preserving).
-//! * `nt`, m == 1 (decode readout): four B rows per pass with 4-lane
-//!   unrolled dot accumulators (a transpose would cost more than the
-//!   whole product).
-//! * `nt`, m > 1: B is transposed once into a pooled scratch panel
-//!   (`tensor::scratch`, no allocation in steady state), then the tiled
-//!   `nn` kernel runs — the transpose amortizes over m rows.
+//! # Kernel structure (see DESIGN.md §Compute core)
+//!
+//! * **k-panel blocking.** The k loop is split into `KC`-deep panels.
+//!   Inside a panel, a register-tiled microkernel sweeps 4-row × 8/16-col
+//!   output tiles with the partial sums held in registers (lane arrays in
+//!   the scalar kernel, vector registers in the SIMD kernels); the panel's
+//!   partial is then flushed with one `out += acc` per element.  Big `tn`
+//!   backward GEMMs and `nt` panels therefore re-read a KC×n slab of B
+//!   from L2 instead of streaming all of B from L3 per row tile.
+//! * **ISA dispatch.** With the `simd` feature (on by default) the panel
+//!   microkernel is an explicit-width `std::arch` kernel — AVX2 on
+//!   x86_64 (runtime-detected), NEON on aarch64 — and the portable scalar
+//!   kernel is the fallback everywhere else.  The scalar kernel is the
+//!   bit-parity oracle: `nn_scalar`/`nt_scalar`/`tn_scalar` (and `_acc`
+//!   forms) force it, and tests assert the SIMD paths match it BIT FOR
+//!   BIT on every shape class.  Two rules make that possible:
+//!   1. no FMA anywhere — every kernel uses separate multiply and add
+//!      (`_mm256_mul_ps`+`_mm256_add_ps`, `vmulq_f32`+`vaddq_f32`), and
+//!      Rust never enables floating-point contraction, so the scalar
+//!      `a * b + c` stays unfused too;
+//!   2. a fixed per-element accumulation chain — products accumulate in
+//!      ascending-p order into a fresh accumulator per KC panel, panels
+//!      flush in ascending order, and the m=1 `nt` row kernel reduces its
+//!      8 lanes with the fixed tree
+//!      `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` that AVX2's
+//!      `extractf128/movehl/shuffle` reduction and NEON's paired
+//!      `vadd_f32` reduction compute identically.
+//! * **Strided-B packing.** When B is a strided head view (`ldb != n`)
+//!   the dispatch layer packs it contiguous once through the scratch
+//!   pool, so the microkernels always stream unit-stride B rows and the
+//!   pack is shared by all banding threads.  Packing and blocking never
+//!   change values: an f32 store/reload is exact.
+//! * **`nt`, m == 1** (decode readout): four B rows per pass with 8-lane
+//!   dot accumulators (a transpose would cost more than the whole
+//!   product).  **`nt`, m > 1**: B is transposed once into a pooled
+//!   scratch panel, then the blocked `nn` path runs.
 //!
 //! Large products are split into contiguous row bands across threads
 //! (`par::for_each_row_band`); banding never changes accumulation order,
 //! so outputs are bit-identical at any `LASP2_THREADS` setting.
 
 use super::{par, scratch};
+
+/// k-panel depth: a KC×n f32 slab of B (n ≤ 512 → ≤ 512 KiB) stays
+/// L2-resident while the row tiles sweep over it.  Also the boundary of
+/// the per-element accumulation chain (fresh accumulator per panel) — a
+/// value every kernel, scalar and SIMD, must share for bit parity.
+pub const KC: usize = 256;
+
+/// Instruction set the panel microkernels dispatch to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// Portable lane-array kernel — the bit-parity oracle.
+    Scalar,
+    /// x86_64 AVX2 (256-bit, runtime-detected; no FMA by design).
+    Avx2,
+    /// aarch64 NEON (128-bit, baseline on aarch64).
+    Neon,
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn detect_isa() -> Isa {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+fn detect_isa() -> Isa {
+    Isa::Neon
+}
+
+#[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn detect_isa() -> Isa {
+    Isa::Scalar
+}
+
+/// The ISA the public entry points dispatch to (detected once).
+pub fn active_isa() -> Isa {
+    static ISA: std::sync::OnceLock<Isa> = std::sync::OnceLock::new();
+    *ISA.get_or_init(detect_isa)
+}
+
+/// Human-readable dispatch target, for bench provenance fields.
+pub fn isa_name() -> &'static str {
+    match active_isa() {
+        Isa::Scalar => "scalar",
+        Isa::Avx2 => "avx2",
+        Isa::Neon => "neon",
+    }
+}
 
 /// Elements spanned by `rows` rows at stride `ld` whose last row holds
 /// `last` elements.
@@ -57,7 +130,7 @@ pub fn nn(
     out: &mut [f32],
     ldo: usize,
 ) {
-    nn_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo);
+    nn_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo, active_isa());
 }
 
 /// out += A·B (same layout as `nn`).
@@ -72,7 +145,7 @@ pub fn nn_acc(
     out: &mut [f32],
     ldo: usize,
 ) {
-    nn_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo);
+    nn_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo, active_isa());
 }
 
 /// out = A·Bᵀ.  A: m×k rows at `lda`; B: n×k rows at `ldb`; out: m×n
@@ -88,7 +161,7 @@ pub fn nt(
     out: &mut [f32],
     ldo: usize,
 ) {
-    nt_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo);
+    nt_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo, active_isa());
 }
 
 /// out += A·Bᵀ (same layout as `nt`).
@@ -103,7 +176,7 @@ pub fn nt_acc(
     out: &mut [f32],
     ldo: usize,
 ) {
-    nt_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo);
+    nt_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo, active_isa());
 }
 
 /// out = Aᵀ·B.  A: k×m rows at `lda` (the UNtransposed layout); B: k×n
@@ -119,7 +192,7 @@ pub fn tn(
     out: &mut [f32],
     ldo: usize,
 ) {
-    tn_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo);
+    tn_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo, active_isa());
 }
 
 /// out += Aᵀ·B (same layout as `tn`).
@@ -134,7 +207,98 @@ pub fn tn_acc(
     out: &mut [f32],
     ldo: usize,
 ) {
-    tn_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo);
+    tn_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo, active_isa());
+}
+
+/// `nn` forced onto the portable scalar kernel — the bit-parity oracle
+/// the SIMD paths are tested against.
+pub fn nn_scalar(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    nn_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo, Isa::Scalar);
+}
+
+/// `nn_acc` forced onto the portable scalar kernel.
+pub fn nn_acc_scalar(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    nn_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo, Isa::Scalar);
+}
+
+/// `nt` forced onto the portable scalar kernel.
+pub fn nt_scalar(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    nt_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo, Isa::Scalar);
+}
+
+/// `nt_acc` forced onto the portable scalar kernel.
+pub fn nt_acc_scalar(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    nt_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo, Isa::Scalar);
+}
+
+/// `tn` forced onto the portable scalar kernel.
+pub fn tn_scalar(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    tn_dispatch::<false>(m, k, n, a, lda, b, ldb, out, ldo, Isa::Scalar);
+}
+
+/// `tn_acc` forced onto the portable scalar kernel.
+pub fn tn_acc_scalar(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    tn_dispatch::<true>(m, k, n, a, lda, b, ldb, out, ldo, Isa::Scalar);
 }
 
 fn nn_dispatch<const ACC: bool>(
@@ -147,6 +311,7 @@ fn nn_dispatch<const ACC: bool>(
     ldb: usize,
     out: &mut [f32],
     ldo: usize,
+    isa: Isa,
 ) {
     if m == 0 || n == 0 {
         return;
@@ -155,59 +320,22 @@ fn nn_dispatch<const ACC: bool>(
     assert!(a.len() >= span(m, lda, k), "gemm nn: a too short");
     assert!(b.len() >= span(k, ldb, n), "gemm nn: b too short");
     let out = &mut out[..span(m, ldo, n)];
-    par::for_each_row_band(out, m, ldo, 2 * m * k * n, |row0, nrows, band| {
-        nn_serial::<ACC>(nrows, k, n, &a[row0 * lda..], lda, b, ldb, band, ldo);
-    });
-}
-
-fn nn_serial<const ACC: bool>(
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f32],
-    lda: usize,
-    b: &[f32],
-    ldb: usize,
-    out: &mut [f32],
-    ldo: usize,
-) {
-    if !ACC {
-        for i in 0..m {
-            out[i * ldo..i * ldo + n].fill(0.0);
-        }
-    }
-    let mut i = 0;
-    while i + 4 <= m {
-        let (r0, rest) = out[i * ldo..].split_at_mut(ldo);
-        let (r1, rest) = rest.split_at_mut(ldo);
-        let (r2, rest) = rest.split_at_mut(ldo);
-        let (r0, r1, r2, r3) = (&mut r0[..n], &mut r1[..n], &mut r2[..n], &mut rest[..n]);
+    if ldb != n && k > 0 {
+        // pack strided B (head views) contiguous ONCE, on the caller
+        // thread, so every banding worker streams unit-stride rows from
+        // the same pack; value-preserving (f32 copy is exact)
+        let mut bp = scratch::take(k * n);
         for p in 0..k {
-            let a0 = a[i * lda + p];
-            let a1 = a[(i + 1) * lda + p];
-            let a2 = a[(i + 2) * lda + p];
-            let a3 = a[(i + 3) * lda + p];
-            let br = &b[p * ldb..p * ldb + n];
-            for j in 0..n {
-                let bv = br[j];
-                r0[j] += a0 * bv;
-                r1[j] += a1 * bv;
-                r2[j] += a2 * bv;
-                r3[j] += a3 * bv;
-            }
+            bp[p * n..p * n + n].copy_from_slice(&b[p * ldb..p * ldb + n]);
         }
-        i += 4;
-    }
-    while i < m {
-        let r = &mut out[i * ldo..i * ldo + n];
-        for p in 0..k {
-            let av = a[i * lda + p];
-            let br = &b[p * ldb..p * ldb + n];
-            for j in 0..n {
-                r[j] += av * br[j];
-            }
-        }
-        i += 1;
+        par::for_each_row_band(out, m, ldo, 2 * m * k * n, |row0, nrows, band| {
+            serial_panels::<ACC, false>(nrows, k, n, &a[row0 * lda..], lda, &bp, n, band, ldo, isa);
+        });
+        scratch::recycle(bp);
+    } else {
+        par::for_each_row_band(out, m, ldo, 2 * m * k * n, |row0, nrows, band| {
+            serial_panels::<ACC, false>(nrows, k, n, &a[row0 * lda..], lda, b, ldb, band, ldo, isa);
+        });
     }
 }
 
@@ -221,6 +349,7 @@ fn nt_dispatch<const ACC: bool>(
     ldb: usize,
     out: &mut [f32],
     ldo: usize,
+    isa: Isa,
 ) {
     if m == 0 || n == 0 {
         return;
@@ -229,11 +358,11 @@ fn nt_dispatch<const ACC: bool>(
     assert!(a.len() >= span(m, lda, k), "gemm nt: a too short");
     assert!(b.len() >= span(n, ldb, k), "gemm nt: b too short");
     if m == 1 {
-        nt_row::<ACC>(k, n, &a[..k], b, ldb, &mut out[..n]);
+        nt_row_dispatch::<ACC>(k, n, &a[..k], b, ldb, &mut out[..n], isa);
         return;
     }
-    // panel-transpose B once into pooled scratch, then run the tiled nn
-    // kernel (amortizes over the m output rows; zero steady-state allocs)
+    // panel-transpose B once into pooled scratch, then run the blocked nn
+    // path (amortizes over the m output rows; zero steady-state allocs)
     let mut bt = scratch::take(k * n);
     for j in 0..n {
         let br = &b[j * ldb..j * ldb + k];
@@ -243,39 +372,268 @@ fn nt_dispatch<const ACC: bool>(
     }
     let out = &mut out[..span(m, ldo, n)];
     par::for_each_row_band(out, m, ldo, 2 * m * k * n, |row0, nrows, band| {
-        nn_serial::<ACC>(nrows, k, n, &a[row0 * lda..], lda, &bt, n, band, ldo);
+        serial_panels::<ACC, false>(nrows, k, n, &a[row0 * lda..], lda, &bt, n, band, ldo, isa);
     });
     scratch::recycle(bt);
 }
 
-/// Single-row A·Bᵀ: four B rows per pass, 4-lane unrolled dot
-/// accumulators (the m=1 decode-readout shape, e.g. logits = x · embᵀ).
-fn nt_row<const ACC: bool>(k: usize, n: usize, ar: &[f32], b: &[f32], ldb: usize, out: &mut [f32]) {
-    let c4 = k / 4;
+fn tn_dispatch<const ACC: bool>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+    isa: Isa,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(lda >= m && ldb >= n && ldo >= n, "gemm tn: bad strides");
+    assert!(a.len() >= span(k, lda, m), "gemm tn: a too short");
+    assert!(b.len() >= span(k, ldb, n), "gemm tn: b too short");
+    let out = &mut out[..span(m, ldo, n)];
+    if ldb != n && k > 0 {
+        let mut bp = scratch::take(k * n);
+        for p in 0..k {
+            bp[p * n..p * n + n].copy_from_slice(&b[p * ldb..p * ldb + n]);
+        }
+        par::for_each_row_band(out, m, ldo, 2 * m * k * n, |row0, nrows, band| {
+            serial_panels::<ACC, true>(nrows, k, n, &a[row0..], lda, &bp, n, band, ldo, isa);
+        });
+        scratch::recycle(bp);
+    } else {
+        par::for_each_row_band(out, m, ldo, 2 * m * k * n, |row0, nrows, band| {
+            serial_panels::<ACC, true>(nrows, k, n, &a[row0..], lda, b, ldb, band, ldo, isa);
+        });
+    }
+}
+
+/// One thread band's worth of output rows: zero (if overwriting), then
+/// sweep KC-deep k panels through the ISA-dispatched microkernel.  `TA`
+/// selects the A addressing: `false` → `A[i*lda + p]` (nn/nt), `true` →
+/// `A[p*lda + i]` (tn).  The per-element value is
+/// `out + Σ_panels (fresh-acc ascending-p chain)` for every ISA.
+fn serial_panels<const ACC: bool, const TA: bool>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+    isa: Isa,
+) {
+    if !ACC {
+        for i in 0..m {
+            out[i * ldo..i * ldo + n].fill(0.0);
+        }
+    }
+    let mut pc = 0;
+    while pc < k {
+        let kl = KC.min(k - pc);
+        let ap = if TA { &a[pc * lda..] } else { &a[pc..] };
+        panel_dispatch::<TA>(m, kl, n, ap, lda, &b[pc * ldb..], ldb, out, ldo, isa);
+        pc += kl;
+    }
+}
+
+fn panel_dispatch<const TA: bool>(
+    m: usize,
+    kl: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+    isa: Isa,
+) {
+    match isa {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: dispatch asserted every operand spans its indexed
+        // extent, and Avx2 is only ever constructed after runtime
+        // detection succeeded.
+        Isa::Avx2 => unsafe { avx2::panel::<TA>(m, kl, n, a, lda, b, ldb, out, ldo) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: as above; NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::panel::<TA>(m, kl, n, a, lda, b, ldb, out, ldo) },
+        _ => panel_scalar::<TA>(m, kl, n, a, lda, b, ldb, out, ldo),
+    }
+}
+
+#[inline(always)]
+fn a_at<const TA: bool>(a: &[f32], lda: usize, i: usize, p: usize) -> f32 {
+    if TA {
+        a[p * lda + i]
+    } else {
+        a[i * lda + p]
+    }
+}
+
+/// Fixed 8-lane reduction tree shared by every ISA's m=1 dot kernel.
+#[inline(always)]
+fn lanes8(a: &[f32; 8]) -> f32 {
+    ((a[0] + a[4]) + (a[2] + a[6])) + ((a[1] + a[5]) + (a[3] + a[7]))
+}
+
+/// Portable panel microkernel (always accumulates): 4-row × 8-col tiles
+/// with the partials in lane arrays — the same per-element chains the
+/// SIMD kernels compute, so it doubles as their bit-parity oracle.
+fn panel_scalar<const TA: bool>(
+    m: usize,
+    kl: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    let mut i = 0;
+    while i + 4 <= m {
+        let (r0, rest) = out[i * ldo..].split_at_mut(ldo);
+        let (r1, rest) = rest.split_at_mut(ldo);
+        let (r2, rest) = rest.split_at_mut(ldo);
+        let (r0, r1, r2, r3) = (&mut r0[..n], &mut r1[..n], &mut r2[..n], &mut rest[..n]);
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut c0 = [0.0f32; 8];
+            let mut c1 = [0.0f32; 8];
+            let mut c2 = [0.0f32; 8];
+            let mut c3 = [0.0f32; 8];
+            for p in 0..kl {
+                let a0 = a_at::<TA>(a, lda, i, p);
+                let a1 = a_at::<TA>(a, lda, i + 1, p);
+                let a2 = a_at::<TA>(a, lda, i + 2, p);
+                let a3 = a_at::<TA>(a, lda, i + 3, p);
+                let br = &b[p * ldb + j..p * ldb + j + 8];
+                for l in 0..8 {
+                    let bv = br[l];
+                    c0[l] += a0 * bv;
+                    c1[l] += a1 * bv;
+                    c2[l] += a2 * bv;
+                    c3[l] += a3 * bv;
+                }
+            }
+            for l in 0..8 {
+                r0[j + l] += c0[l];
+                r1[j + l] += c1[l];
+                r2[j + l] += c2[l];
+                r3[j + l] += c3[l];
+            }
+            j += 8;
+        }
+        while j < n {
+            let (mut c0, mut c1, mut c2, mut c3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for p in 0..kl {
+                let bv = b[p * ldb + j];
+                c0 += a_at::<TA>(a, lda, i, p) * bv;
+                c1 += a_at::<TA>(a, lda, i + 1, p) * bv;
+                c2 += a_at::<TA>(a, lda, i + 2, p) * bv;
+                c3 += a_at::<TA>(a, lda, i + 3, p) * bv;
+            }
+            r0[j] += c0;
+            r1[j] += c1;
+            r2[j] += c2;
+            r3[j] += c3;
+            j += 1;
+        }
+        i += 4;
+    }
+    while i < m {
+        let r = &mut out[i * ldo..i * ldo + n];
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut c = [0.0f32; 8];
+            for p in 0..kl {
+                let av = a_at::<TA>(a, lda, i, p);
+                let br = &b[p * ldb + j..p * ldb + j + 8];
+                for l in 0..8 {
+                    c[l] += av * br[l];
+                }
+            }
+            for l in 0..8 {
+                r[j + l] += c[l];
+            }
+            j += 8;
+        }
+        while j < n {
+            let mut c = 0.0f32;
+            for p in 0..kl {
+                c += a_at::<TA>(a, lda, i, p) * b[p * ldb + j];
+            }
+            r[j] += c;
+            j += 1;
+        }
+        i += 1;
+    }
+}
+
+fn nt_row_dispatch<const ACC: bool>(
+    k: usize,
+    n: usize,
+    ar: &[f32],
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    isa: Isa,
+) {
+    match isa {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: operand extents asserted by nt_dispatch; Avx2 implies
+        // runtime detection succeeded.
+        Isa::Avx2 => unsafe { avx2::nt_row::<ACC>(k, n, ar, b, ldb, out) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: as above; NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::nt_row::<ACC>(k, n, ar, b, ldb, out) },
+        _ => nt_row_scalar::<ACC>(k, n, ar, b, ldb, out),
+    }
+}
+
+/// Single-row A·Bᵀ (the m=1 decode-readout shape, e.g. logits = x·embᵀ):
+/// four B rows per pass with 8-lane dot accumulators, reduced by the
+/// fixed [`lanes8`] tree, scalar tail in ascending p.
+fn nt_row_scalar<const ACC: bool>(
+    k: usize,
+    n: usize,
+    ar: &[f32],
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+) {
+    let c8 = k / 8;
     let mut j = 0;
     while j + 4 <= n {
         let b0 = &b[j * ldb..j * ldb + k];
         let b1 = &b[(j + 1) * ldb..(j + 1) * ldb + k];
         let b2 = &b[(j + 2) * ldb..(j + 2) * ldb + k];
         let b3 = &b[(j + 3) * ldb..(j + 3) * ldb + k];
-        let mut acc0 = [0.0f32; 4];
-        let mut acc1 = [0.0f32; 4];
-        let mut acc2 = [0.0f32; 4];
-        let mut acc3 = [0.0f32; 4];
-        for p in 0..c4 {
-            for l in 0..4 {
-                let av = ar[p * 4 + l];
-                acc0[l] += av * b0[p * 4 + l];
-                acc1[l] += av * b1[p * 4 + l];
-                acc2[l] += av * b2[p * 4 + l];
-                acc3[l] += av * b3[p * 4 + l];
+        let mut c0 = [0.0f32; 8];
+        let mut c1 = [0.0f32; 8];
+        let mut c2 = [0.0f32; 8];
+        let mut c3 = [0.0f32; 8];
+        for p in 0..c8 {
+            for l in 0..8 {
+                let av = ar[p * 8 + l];
+                c0[l] += av * b0[p * 8 + l];
+                c1[l] += av * b1[p * 8 + l];
+                c2[l] += av * b2[p * 8 + l];
+                c3[l] += av * b3[p * 8 + l];
             }
         }
-        let mut s0 = (acc0[0] + acc0[2]) + (acc0[1] + acc0[3]);
-        let mut s1 = (acc1[0] + acc1[2]) + (acc1[1] + acc1[3]);
-        let mut s2 = (acc2[0] + acc2[2]) + (acc2[1] + acc2[3]);
-        let mut s3 = (acc3[0] + acc3[2]) + (acc3[1] + acc3[3]);
-        for p in c4 * 4..k {
+        let mut s0 = lanes8(&c0);
+        let mut s1 = lanes8(&c1);
+        let mut s2 = lanes8(&c2);
+        let mut s3 = lanes8(&c3);
+        for p in c8 * 8..k {
             let av = ar[p];
             s0 += av * b0[p];
             s1 += av * b1[p];
@@ -297,9 +655,15 @@ fn nt_row<const ACC: bool>(k: usize, n: usize, ar: &[f32], b: &[f32], ldb: usize
     }
     while j < n {
         let br = &b[j * ldb..j * ldb + k];
-        let mut s = 0.0f32;
-        for (av, bv) in ar.iter().zip(br) {
-            s += av * bv;
+        let mut c = [0.0f32; 8];
+        for p in 0..c8 {
+            for l in 0..8 {
+                c[l] += ar[p * 8 + l] * br[p * 8 + l];
+            }
+        }
+        let mut s = lanes8(&c);
+        for p in c8 * 8..k {
+            s += ar[p] * br[p];
         }
         if ACC {
             out[j] += s;
@@ -310,75 +674,425 @@ fn nt_row<const ACC: bool>(k: usize, n: usize, ar: &[f32], b: &[f32], ldb: usize
     }
 }
 
-fn tn_dispatch<const ACC: bool>(
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f32],
-    lda: usize,
-    b: &[f32],
-    ldb: usize,
-    out: &mut [f32],
-    ldo: usize,
-) {
-    if m == 0 || n == 0 {
-        return;
+/// AVX2 microkernels.  DELIBERATELY no FMA: `mul`+`add` keeps every
+/// per-element rounding identical to the scalar oracle (a fused
+/// multiply-add rounds once, not twice, and would change bits).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    #[inline(always)]
+    unsafe fn a_at<const TA: bool>(a: &[f32], lda: usize, i: usize, p: usize) -> f32 {
+        if TA {
+            *a.get_unchecked(p * lda + i)
+        } else {
+            *a.get_unchecked(i * lda + p)
+        }
     }
-    assert!(lda >= m && ldb >= n && ldo >= n, "gemm tn: bad strides");
-    assert!(a.len() >= span(k, lda, m), "gemm tn: a too short");
-    assert!(b.len() >= span(k, ldb, n), "gemm tn: b too short");
-    let out = &mut out[..span(m, ldo, n)];
-    par::for_each_row_band(out, m, ldo, 2 * m * k * n, |row0, nrows, band| {
-        tn_serial::<ACC>(nrows, k, n, &a[row0..], lda, b, ldb, band, ldo);
-    });
+
+    /// The [`super::lanes8`] reduction tree in vector form:
+    /// lo/hi fold → movehl fold → lane-1 shuffle fold computes exactly
+    /// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn hsum8(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s1 = _mm_add_ps(lo, hi);
+        let s2 = _mm_add_ps(s1, _mm_movehl_ps(s1, s1));
+        let s3 = _mm_add_ss(s2, _mm_shuffle_ps::<0x55>(s2, s2));
+        _mm_cvtss_f32(s3)
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn flush1(p: *mut f32, c: __m256) {
+        _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), c));
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn flush2(p: *mut f32, c0: __m256, c1: __m256) {
+        _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), c0));
+        _mm256_storeu_ps(p.add(8), _mm256_add_ps(_mm256_loadu_ps(p.add(8)), c1));
+    }
+
+    /// Panel accumulate `out += A_panel · B_panel` (kl-deep), register
+    /// tiles of 4 rows × 16 cols (8 ymm accumulators live across the
+    /// whole k loop — the old kernel's per-p out-row load/store traffic
+    /// is gone).  Column tail (< 8) runs the scalar oracle kernel, row
+    /// tail runs 1-row vector strips; every per-element chain matches
+    /// [`super::panel_scalar`] bit for bit.
+    ///
+    /// # Safety
+    /// Caller guarantees `a`/`b`/`out` span the extents indexed by
+    /// (m, kl, n) at the given strides, and that AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn panel<const TA: bool>(
+        m: usize,
+        kl: usize,
+        n: usize,
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        out: &mut [f32],
+        ldo: usize,
+    ) {
+        let nv = n & !7;
+        if nv < n {
+            super::panel_scalar::<TA>(m, kl, n - nv, a, lda, &b[nv..], ldb, &mut out[nv..], ldo);
+        }
+        if nv == 0 {
+            return;
+        }
+        let bp0 = b.as_ptr();
+        let op0 = out.as_mut_ptr();
+        let n16 = nv & !15;
+        let mut i = 0;
+        while i + 4 <= m {
+            let mut j = 0;
+            while j < n16 {
+                let mut c00 = _mm256_setzero_ps();
+                let mut c01 = _mm256_setzero_ps();
+                let mut c10 = _mm256_setzero_ps();
+                let mut c11 = _mm256_setzero_ps();
+                let mut c20 = _mm256_setzero_ps();
+                let mut c21 = _mm256_setzero_ps();
+                let mut c30 = _mm256_setzero_ps();
+                let mut c31 = _mm256_setzero_ps();
+                for p in 0..kl {
+                    let bp = bp0.add(p * ldb + j);
+                    let b0 = _mm256_loadu_ps(bp);
+                    let b1 = _mm256_loadu_ps(bp.add(8));
+                    let a0 = _mm256_set1_ps(a_at::<TA>(a, lda, i, p));
+                    let a1 = _mm256_set1_ps(a_at::<TA>(a, lda, i + 1, p));
+                    let a2 = _mm256_set1_ps(a_at::<TA>(a, lda, i + 2, p));
+                    let a3 = _mm256_set1_ps(a_at::<TA>(a, lda, i + 3, p));
+                    c00 = _mm256_add_ps(c00, _mm256_mul_ps(a0, b0));
+                    c01 = _mm256_add_ps(c01, _mm256_mul_ps(a0, b1));
+                    c10 = _mm256_add_ps(c10, _mm256_mul_ps(a1, b0));
+                    c11 = _mm256_add_ps(c11, _mm256_mul_ps(a1, b1));
+                    c20 = _mm256_add_ps(c20, _mm256_mul_ps(a2, b0));
+                    c21 = _mm256_add_ps(c21, _mm256_mul_ps(a2, b1));
+                    c30 = _mm256_add_ps(c30, _mm256_mul_ps(a3, b0));
+                    c31 = _mm256_add_ps(c31, _mm256_mul_ps(a3, b1));
+                }
+                flush2(op0.add(i * ldo + j), c00, c01);
+                flush2(op0.add((i + 1) * ldo + j), c10, c11);
+                flush2(op0.add((i + 2) * ldo + j), c20, c21);
+                flush2(op0.add((i + 3) * ldo + j), c30, c31);
+                j += 16;
+            }
+            if j < nv {
+                // one 8-wide strip (nv - n16 is 0 or 8)
+                let mut c0 = _mm256_setzero_ps();
+                let mut c1 = _mm256_setzero_ps();
+                let mut c2 = _mm256_setzero_ps();
+                let mut c3 = _mm256_setzero_ps();
+                for p in 0..kl {
+                    let bv = _mm256_loadu_ps(bp0.add(p * ldb + j));
+                    c0 = _mm256_add_ps(c0, _mm256_mul_ps(_mm256_set1_ps(a_at::<TA>(a, lda, i, p)), bv));
+                    c1 = _mm256_add_ps(c1, _mm256_mul_ps(_mm256_set1_ps(a_at::<TA>(a, lda, i + 1, p)), bv));
+                    c2 = _mm256_add_ps(c2, _mm256_mul_ps(_mm256_set1_ps(a_at::<TA>(a, lda, i + 2, p)), bv));
+                    c3 = _mm256_add_ps(c3, _mm256_mul_ps(_mm256_set1_ps(a_at::<TA>(a, lda, i + 3, p)), bv));
+                }
+                flush1(op0.add(i * ldo + j), c0);
+                flush1(op0.add((i + 1) * ldo + j), c1);
+                flush1(op0.add((i + 2) * ldo + j), c2);
+                flush1(op0.add((i + 3) * ldo + j), c3);
+            }
+            i += 4;
+        }
+        while i < m {
+            let mut j = 0;
+            while j < n16 {
+                let mut c0 = _mm256_setzero_ps();
+                let mut c1 = _mm256_setzero_ps();
+                for p in 0..kl {
+                    let bp = bp0.add(p * ldb + j);
+                    let av = _mm256_set1_ps(a_at::<TA>(a, lda, i, p));
+                    c0 = _mm256_add_ps(c0, _mm256_mul_ps(av, _mm256_loadu_ps(bp)));
+                    c1 = _mm256_add_ps(c1, _mm256_mul_ps(av, _mm256_loadu_ps(bp.add(8))));
+                }
+                flush2(op0.add(i * ldo + j), c0, c1);
+                j += 16;
+            }
+            if j < nv {
+                let mut c = _mm256_setzero_ps();
+                for p in 0..kl {
+                    let av = _mm256_set1_ps(a_at::<TA>(a, lda, i, p));
+                    c = _mm256_add_ps(c, _mm256_mul_ps(av, _mm256_loadu_ps(bp0.add(p * ldb + j))));
+                }
+                flush1(op0.add(i * ldo + j), c);
+            }
+            i += 1;
+        }
+    }
+
+    /// m=1 A·Bᵀ: four B rows per pass, one ymm accumulator each, reduced
+    /// by [`hsum8`] (bit-identical to the scalar 8-lane tree), ascending
+    /// scalar tail.
+    ///
+    /// # Safety
+    /// Caller guarantees `ar` spans k, `b` spans n rows of k at `ldb`,
+    /// `out` spans n, and that AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nt_row<const ACC: bool>(
+        k: usize,
+        n: usize,
+        ar: &[f32],
+        b: &[f32],
+        ldb: usize,
+        out: &mut [f32],
+    ) {
+        let c8 = k / 8;
+        let ap = ar.as_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = b.as_ptr().add(j * ldb);
+            let b1 = b.as_ptr().add((j + 1) * ldb);
+            let b2 = b.as_ptr().add((j + 2) * ldb);
+            let b3 = b.as_ptr().add((j + 3) * ldb);
+            let mut v0 = _mm256_setzero_ps();
+            let mut v1 = _mm256_setzero_ps();
+            let mut v2 = _mm256_setzero_ps();
+            let mut v3 = _mm256_setzero_ps();
+            for p in 0..c8 {
+                let av = _mm256_loadu_ps(ap.add(p * 8));
+                v0 = _mm256_add_ps(v0, _mm256_mul_ps(av, _mm256_loadu_ps(b0.add(p * 8))));
+                v1 = _mm256_add_ps(v1, _mm256_mul_ps(av, _mm256_loadu_ps(b1.add(p * 8))));
+                v2 = _mm256_add_ps(v2, _mm256_mul_ps(av, _mm256_loadu_ps(b2.add(p * 8))));
+                v3 = _mm256_add_ps(v3, _mm256_mul_ps(av, _mm256_loadu_ps(b3.add(p * 8))));
+            }
+            let mut s0 = hsum8(v0);
+            let mut s1 = hsum8(v1);
+            let mut s2 = hsum8(v2);
+            let mut s3 = hsum8(v3);
+            for p in c8 * 8..k {
+                let av = *ap.add(p);
+                s0 += av * *b0.add(p);
+                s1 += av * *b1.add(p);
+                s2 += av * *b2.add(p);
+                s3 += av * *b3.add(p);
+            }
+            if ACC {
+                out[j] += s0;
+                out[j + 1] += s1;
+                out[j + 2] += s2;
+                out[j + 3] += s3;
+            } else {
+                out[j] = s0;
+                out[j + 1] = s1;
+                out[j + 2] = s2;
+                out[j + 3] = s3;
+            }
+            j += 4;
+        }
+        while j < n {
+            let br = b.as_ptr().add(j * ldb);
+            let mut v = _mm256_setzero_ps();
+            for p in 0..c8 {
+                v = _mm256_add_ps(
+                    v,
+                    _mm256_mul_ps(_mm256_loadu_ps(ap.add(p * 8)), _mm256_loadu_ps(br.add(p * 8))),
+                );
+            }
+            let mut s = hsum8(v);
+            for p in c8 * 8..k {
+                s += *ap.add(p) * *br.add(p);
+            }
+            if ACC {
+                out[j] += s;
+            } else {
+                out[j] = s;
+            }
+            j += 1;
+        }
+    }
 }
 
-fn tn_serial<const ACC: bool>(
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f32],
-    lda: usize,
-    b: &[f32],
-    ldb: usize,
-    out: &mut [f32],
-    ldo: usize,
-) {
-    if !ACC {
-        for i in 0..m {
-            out[i * ldo..i * ldo + n].fill(0.0);
+/// NEON microkernels (aarch64).  Same two bit-parity rules as AVX2: no
+/// fused multiply-add (`vmulq_f32`+`vaddq_f32`, never `vfmaq_f32`), and
+/// the same per-element accumulation chains as the scalar oracle.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use core::arch::aarch64::*;
+
+    #[inline(always)]
+    unsafe fn a_at<const TA: bool>(a: &[f32], lda: usize, i: usize, p: usize) -> f32 {
+        if TA {
+            *a.get_unchecked(p * lda + i)
+        } else {
+            *a.get_unchecked(i * lda + p)
         }
     }
-    let mut i = 0;
-    while i + 4 <= m {
-        let (r0, rest) = out[i * ldo..].split_at_mut(ldo);
-        let (r1, rest) = rest.split_at_mut(ldo);
-        let (r2, rest) = rest.split_at_mut(ldo);
-        let (r0, r1, r2, r3) = (&mut r0[..n], &mut r1[..n], &mut r2[..n], &mut rest[..n]);
-        for p in 0..k {
-            let ap = &a[p * lda + i..p * lda + i + 4];
-            let (a0, a1, a2, a3) = (ap[0], ap[1], ap[2], ap[3]);
-            let br = &b[p * ldb..p * ldb + n];
-            for j in 0..n {
-                let bv = br[j];
-                r0[j] += a0 * bv;
-                r1[j] += a1 * bv;
-                r2[j] += a2 * bv;
-                r3[j] += a3 * bv;
-            }
-        }
-        i += 4;
+
+    /// [`super::lanes8`] over a lane-0..3 / lane-4..7 register pair.
+    #[inline(always)]
+    unsafe fn hsum8(lo: float32x4_t, hi: float32x4_t) -> f32 {
+        let s1 = vaddq_f32(lo, hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
+        let v = vadd_f32(vget_low_f32(s1), vget_high_f32(s1));
+        vget_lane_f32::<0>(v) + vget_lane_f32::<1>(v)
     }
-    while i < m {
-        let r = &mut out[i * ldo..i * ldo + n];
-        for p in 0..k {
-            let av = a[p * lda + i];
-            let br = &b[p * ldb..p * ldb + n];
-            for j in 0..n {
-                r[j] += av * br[j];
-            }
+
+    #[inline(always)]
+    unsafe fn flush1(p: *mut f32, c: float32x4_t) {
+        vst1q_f32(p, vaddq_f32(vld1q_f32(p), c));
+    }
+
+    /// Panel accumulate `out += A_panel · B_panel`: 4-row × 8-col
+    /// register tiles (8 q-register accumulators), 4-col strip, scalar
+    /// oracle for the sub-4 column tail.
+    ///
+    /// # Safety
+    /// Caller guarantees `a`/`b`/`out` span the extents indexed by
+    /// (m, kl, n) at the given strides.
+    pub unsafe fn panel<const TA: bool>(
+        m: usize,
+        kl: usize,
+        n: usize,
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        out: &mut [f32],
+        ldo: usize,
+    ) {
+        let nv = n & !3;
+        if nv < n {
+            super::panel_scalar::<TA>(m, kl, n - nv, a, lda, &b[nv..], ldb, &mut out[nv..], ldo);
         }
-        i += 1;
+        if nv == 0 {
+            return;
+        }
+        let bp0 = b.as_ptr();
+        let op0 = out.as_mut_ptr();
+        let n8 = nv & !7;
+        let mut i = 0;
+        while i + 4 <= m {
+            let mut j = 0;
+            while j < n8 {
+                let mut c00 = vdupq_n_f32(0.0);
+                let mut c01 = vdupq_n_f32(0.0);
+                let mut c10 = vdupq_n_f32(0.0);
+                let mut c11 = vdupq_n_f32(0.0);
+                let mut c20 = vdupq_n_f32(0.0);
+                let mut c21 = vdupq_n_f32(0.0);
+                let mut c30 = vdupq_n_f32(0.0);
+                let mut c31 = vdupq_n_f32(0.0);
+                for p in 0..kl {
+                    let bp = bp0.add(p * ldb + j);
+                    let b0 = vld1q_f32(bp);
+                    let b1 = vld1q_f32(bp.add(4));
+                    let a0 = vdupq_n_f32(a_at::<TA>(a, lda, i, p));
+                    let a1 = vdupq_n_f32(a_at::<TA>(a, lda, i + 1, p));
+                    let a2 = vdupq_n_f32(a_at::<TA>(a, lda, i + 2, p));
+                    let a3 = vdupq_n_f32(a_at::<TA>(a, lda, i + 3, p));
+                    c00 = vaddq_f32(c00, vmulq_f32(a0, b0));
+                    c01 = vaddq_f32(c01, vmulq_f32(a0, b1));
+                    c10 = vaddq_f32(c10, vmulq_f32(a1, b0));
+                    c11 = vaddq_f32(c11, vmulq_f32(a1, b1));
+                    c20 = vaddq_f32(c20, vmulq_f32(a2, b0));
+                    c21 = vaddq_f32(c21, vmulq_f32(a2, b1));
+                    c30 = vaddq_f32(c30, vmulq_f32(a3, b0));
+                    c31 = vaddq_f32(c31, vmulq_f32(a3, b1));
+                }
+                for (r, (ca, cb)) in [(c00, c01), (c10, c11), (c20, c21), (c30, c31)]
+                    .into_iter()
+                    .enumerate()
+                {
+                    let op = op0.add((i + r) * ldo + j);
+                    flush1(op, ca);
+                    flush1(op.add(4), cb);
+                }
+                j += 8;
+            }
+            if j < nv {
+                let mut c0 = vdupq_n_f32(0.0);
+                let mut c1 = vdupq_n_f32(0.0);
+                let mut c2 = vdupq_n_f32(0.0);
+                let mut c3 = vdupq_n_f32(0.0);
+                for p in 0..kl {
+                    let bv = vld1q_f32(bp0.add(p * ldb + j));
+                    c0 = vaddq_f32(c0, vmulq_f32(vdupq_n_f32(a_at::<TA>(a, lda, i, p)), bv));
+                    c1 = vaddq_f32(c1, vmulq_f32(vdupq_n_f32(a_at::<TA>(a, lda, i + 1, p)), bv));
+                    c2 = vaddq_f32(c2, vmulq_f32(vdupq_n_f32(a_at::<TA>(a, lda, i + 2, p)), bv));
+                    c3 = vaddq_f32(c3, vmulq_f32(vdupq_n_f32(a_at::<TA>(a, lda, i + 3, p)), bv));
+                }
+                flush1(op0.add(i * ldo + j), c0);
+                flush1(op0.add((i + 1) * ldo + j), c1);
+                flush1(op0.add((i + 2) * ldo + j), c2);
+                flush1(op0.add((i + 3) * ldo + j), c3);
+            }
+            i += 4;
+        }
+        while i < m {
+            let mut j = 0;
+            while j < n8 {
+                let mut c0 = vdupq_n_f32(0.0);
+                let mut c1 = vdupq_n_f32(0.0);
+                for p in 0..kl {
+                    let bp = bp0.add(p * ldb + j);
+                    let av = vdupq_n_f32(a_at::<TA>(a, lda, i, p));
+                    c0 = vaddq_f32(c0, vmulq_f32(av, vld1q_f32(bp)));
+                    c1 = vaddq_f32(c1, vmulq_f32(av, vld1q_f32(bp.add(4))));
+                }
+                let op = op0.add(i * ldo + j);
+                flush1(op, c0);
+                flush1(op.add(4), c1);
+                j += 8;
+            }
+            if j < nv {
+                let mut c = vdupq_n_f32(0.0);
+                for p in 0..kl {
+                    let av = vdupq_n_f32(a_at::<TA>(a, lda, i, p));
+                    c = vaddq_f32(c, vmulq_f32(av, vld1q_f32(bp0.add(p * ldb + j))));
+                }
+                flush1(op0.add(i * ldo + j), c);
+            }
+            i += 1;
+        }
+    }
+
+    /// m=1 A·Bᵀ with the shared 8-lane scheme: lanes 0..3 / 4..7 live in
+    /// a q-register pair, reduced by [`hsum8`].
+    ///
+    /// # Safety
+    /// Caller guarantees `ar` spans k, `b` spans n rows of k at `ldb`,
+    /// and `out` spans n.
+    pub unsafe fn nt_row<const ACC: bool>(
+        k: usize,
+        n: usize,
+        ar: &[f32],
+        b: &[f32],
+        ldb: usize,
+        out: &mut [f32],
+    ) {
+        let c8 = k / 8;
+        let ap = ar.as_ptr();
+        let mut j = 0;
+        while j < n {
+            let br = b.as_ptr().add(j * ldb);
+            let mut lo = vdupq_n_f32(0.0);
+            let mut hi = vdupq_n_f32(0.0);
+            for p in 0..c8 {
+                let a_lo = vld1q_f32(ap.add(p * 8));
+                let a_hi = vld1q_f32(ap.add(p * 8 + 4));
+                lo = vaddq_f32(lo, vmulq_f32(a_lo, vld1q_f32(br.add(p * 8))));
+                hi = vaddq_f32(hi, vmulq_f32(a_hi, vld1q_f32(br.add(p * 8 + 4))));
+            }
+            let mut s = hsum8(lo, hi);
+            for p in c8 * 8..k {
+                s += *ap.add(p) * *br.add(p);
+            }
+            if ACC {
+                out[j] += s;
+            } else {
+                out[j] = s;
+            }
+            j += 1;
+        }
     }
 }
 
@@ -420,6 +1134,10 @@ mod tests {
         }
     }
 
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
     #[test]
     fn nn_matches_naive_over_shapes() {
         for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (4, 8, 4), (9, 2, 13), (17, 33, 6)] {
@@ -450,8 +1168,8 @@ mod tests {
     }
 
     #[test]
-    fn tn_matches_naive() {
-        for &(m, k, n) in &[(1, 3, 2), (6, 11, 5), (8, 400, 3), (5, 2, 31)] {
+    fn tn_matches_naive_including_deep_k() {
+        for &(m, k, n) in &[(1, 3, 2), (6, 11, 5), (8, 400, 3), (5, 2, 31), (16, 700, 9)] {
             let at = rng(5, k * m); // A stored [k, m]
             let mut a = vec![0.0f32; m * k];
             for p in 0..k {
@@ -547,10 +1265,10 @@ mod tests {
 
     #[test]
     fn dense_results_identical_with_and_without_zero_rows() {
-        // the old kernel's `if a == 0.0 { continue }` pessimization is
-        // gone; zero rows/entries must still give BIT-identical results
-        // to a reference that does skip them (skipping only ever elides
-        // exact +0.0 contributions)
+        // zero rows/entries must give BIT-identical results to a
+        // per-element fresh-accumulator reference that skips them
+        // (skipping only ever elides exact ±0.0 contributions, and the
+        // panel chain starts from a +0.0 accumulator)
         let (m, k, n) = (8, 16, 12);
         let mut a = rng(20, m * k);
         // zero out two full rows and a scattering of entries
@@ -563,29 +1281,28 @@ mod tests {
         let b = rng(21, k * n);
         let mut skip_ref = vec![0.0f32; m * n];
         for i in 0..m {
-            for p in 0..k {
-                let av = a[i * k + p];
-                if av == 0.0 {
-                    continue;
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    let av = a[i * k + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    acc += av * b[p * n + j];
                 }
-                for j in 0..n {
-                    skip_ref[i * n + j] += av * b[p * n + j];
-                }
+                skip_ref[i * n + j] += acc;
             }
         }
         let mut out = vec![0.0f32; m * n];
         nn(m, k, n, &a, k, &b, n, &mut out, n);
-        assert_eq!(
-            out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-            skip_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-            "zero-skip removal changed results"
-        );
+        assert_eq!(bits(&out), bits(&skip_ref), "zero-skip removal changed results");
     }
 
     #[test]
     fn large_gemm_bit_identical_across_thread_counts() {
-        // big enough that row-banding actually kicks in
-        let (m, k, n) = (128, 96, 128);
+        // big enough that row-banding actually kicks in, with k > KC so
+        // the panel loop crosses a flush boundary
+        let (m, k, n) = (128, 300, 128);
         let a = rng(30, m * k);
         let b = rng(31, k * n);
         let mut want = vec![0.0f32; m * n];
@@ -595,12 +1312,132 @@ mod tests {
             par::set_threads(t);
             let mut got = vec![0.0f32; m * n];
             nn(m, k, n, &a, k, &b, n, &mut got, n);
-            assert_eq!(
-                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                "threads={t}"
-            );
+            assert_eq!(bits(&got), bits(&want), "threads={t}");
         }
         par::set_threads(0);
+    }
+
+    #[test]
+    fn simd_matches_scalar_bit_for_bit() {
+        // rectangular, m=1, k >> n (crosses the KC panel boundary), and
+        // ragged tails; on scalar-only builds this is trivially green
+        for &(m, k, n) in &[
+            (5, 7, 9),
+            (4, 16, 32),
+            (64, 300, 48),
+            (1, 512, 33),
+            (12, 2048, 4),
+            (3, 1, 17),
+            (33, 257, 31),
+        ] {
+            let a = rng(40 + m as u64, m * k);
+            let b = rng(41 + n as u64, k * n);
+            let base = rng(42, m * n);
+            // nn / nn_acc
+            let mut x = vec![0.0f32; m * n];
+            let mut y = vec![0.0f32; m * n];
+            nn(m, k, n, &a, k, &b, n, &mut x, n);
+            nn_scalar(m, k, n, &a, k, &b, n, &mut y, n);
+            assert_eq!(bits(&x), bits(&y), "nn {m}x{k}x{n}");
+            let mut xa = base.clone();
+            let mut ya = base.clone();
+            nn_acc(m, k, n, &a, k, &b, n, &mut xa, n);
+            nn_acc_scalar(m, k, n, &a, k, &b, n, &mut ya, n);
+            assert_eq!(bits(&xa), bits(&ya), "nn_acc {m}x{k}x{n}");
+            // nt / nt_acc (B stored [n, k]) — covers the m=1 row kernel
+            let bt = rng(43 + k as u64, n * k);
+            let mut x = vec![0.0f32; m * n];
+            let mut y = vec![0.0f32; m * n];
+            nt(m, k, n, &a, k, &bt, k, &mut x, n);
+            nt_scalar(m, k, n, &a, k, &bt, k, &mut y, n);
+            assert_eq!(bits(&x), bits(&y), "nt {m}x{k}x{n}");
+            let mut xa = base.clone();
+            let mut ya = base.clone();
+            nt_acc(m, k, n, &a, k, &bt, k, &mut xa, n);
+            nt_acc_scalar(m, k, n, &a, k, &bt, k, &mut ya, n);
+            assert_eq!(bits(&xa), bits(&ya), "nt_acc {m}x{k}x{n}");
+            // tn / tn_acc (A stored [k, m])
+            let at = rng(44 + m as u64, k * m);
+            let mut x = vec![0.0f32; m * n];
+            let mut y = vec![0.0f32; m * n];
+            tn(m, k, n, &at, m, &b, n, &mut x, n);
+            tn_scalar(m, k, n, &at, m, &b, n, &mut y, n);
+            assert_eq!(bits(&x), bits(&y), "tn {m}x{k}x{n}");
+            let mut xa = base.clone();
+            let mut ya = base.clone();
+            tn_acc(m, k, n, &at, m, &b, n, &mut xa, n);
+            tn_acc_scalar(m, k, n, &at, m, &b, n, &mut ya, n);
+            assert_eq!(bits(&xa), bits(&ya), "tn_acc {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar_on_strided_head_views() {
+        // non-contiguous strides on A, B, AND out (the [C, H, F] head
+        // slices the attention kernels address in place)
+        let (c, hh, f) = (12, 4, 24);
+        let a = rng(50, c * hh * f);
+        let b = rng(51, c * hh * f);
+        for h in 0..hh {
+            let (lda, ldb) = (hh * f, hh * f);
+            // nt: scores = Ah · Bhᵀ  [c, c]
+            let mut x = vec![0.0f32; c * c];
+            let mut y = vec![0.0f32; c * c];
+            nt(c, f, c, &a[h * f..], lda, &b[h * f..], ldb, &mut x, c);
+            nt_scalar(c, f, c, &a[h * f..], lda, &b[h * f..], ldb, &mut y, c);
+            assert_eq!(bits(&x), bits(&y), "nt head {h}");
+            // nn with strided B and strided out
+            let mut xo = vec![0.0f32; c * hh * f];
+            let mut yo = vec![0.0f32; c * hh * f];
+            nn(c, c, f, &x, c, &b[h * f..], ldb, &mut xo[h * f..], hh * f);
+            nn_scalar(c, c, f, &x, c, &b[h * f..], ldb, &mut yo[h * f..], hh * f);
+            assert_eq!(bits(&xo), bits(&yo), "nn head {h}");
+            // tn with strided A (A stored [k, m] inside the head view)
+            let mut xt = vec![0.0f32; f * f];
+            let mut yt = vec![0.0f32; f * f];
+            tn(f, c, f, &a[h * f..], lda, &b[h * f..], ldb, &mut xt, f);
+            tn_scalar(f, c, f, &a[h * f..], lda, &b[h * f..], ldb, &mut yt, f);
+            assert_eq!(bits(&xt), bits(&yt), "tn head {h}");
+        }
+    }
+
+    #[test]
+    fn randomized_shape_sweep_simd_vs_scalar() {
+        // proptest-style sweep: deterministic xorshift drives shapes and
+        // layouts; every draw must agree with naive within tolerance AND
+        // with the scalar oracle bit for bit
+        let mut s = 0xC0FFEE_u64;
+        let mut draw = |lo: usize, hi: usize| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            lo + (s as usize) % (hi - lo + 1)
+        };
+        for case in 0..40 {
+            let m = draw(1, 24);
+            let n = draw(1, 40);
+            // every 4th case crosses the KC boundary
+            let k = if case % 4 == 0 { draw(KC, KC + 70) } else { draw(1, 80) };
+            let a = rng(100 + case, m * k);
+            let b = rng(200 + case, k * n);
+            let mut x = vec![0.0f32; m * n];
+            let mut y = vec![0.0f32; m * n];
+            nn(m, k, n, &a, k, &b, n, &mut x, n);
+            nn_scalar(m, k, n, &a, k, &b, n, &mut y, n);
+            assert_eq!(bits(&x), bits(&y), "case {case}: nn {m}x{k}x{n}");
+            close(&x, &naive_nn(m, k, n, &a, &b), 1e-4);
+            let bt = rng(300 + case, n * k);
+            let mut x = vec![0.0f32; m * n];
+            let mut y = vec![0.0f32; m * n];
+            nt(m, k, n, &a, k, &bt, k, &mut x, n);
+            nt_scalar(m, k, n, &a, k, &bt, k, &mut y, n);
+            assert_eq!(bits(&x), bits(&y), "case {case}: nt {m}x{k}x{n}");
+            let at = rng(400 + case, k * m);
+            let mut x = vec![0.0f32; m * n];
+            let mut y = vec![0.0f32; m * n];
+            tn(m, k, n, &at, m, &b, n, &mut x, n);
+            tn_scalar(m, k, n, &at, m, &b, n, &mut y, n);
+            assert_eq!(bits(&x), bits(&y), "case {case}: tn {m}x{k}x{n}");
+        }
     }
 }

@@ -4,19 +4,25 @@
 //! The tensor type itself stays a thin shape + `Vec<f32>` wrapper; the
 //! heavy math lives in three submodules (see DESIGN.md §Compute core):
 //!
-//! * [`gemm`] — cache-blocked, SIMD-friendly strided GEMM kernels with
-//!   fused-transpose (`nt`/`tn`) and accumulate variants; `matmul`,
+//! * [`gemm`] — k-panel-blocked strided GEMM kernels with explicit-width
+//!   SIMD microkernels (AVX2/NEON, runtime-dispatched behind the `simd`
+//!   feature; scalar oracle bit-identical on every path) and
+//!   fused-transpose (`nt`/`tn`) + accumulate variants; `matmul`,
 //!   `matmul_nt`, `matmul_tn` and the `*_into` methods below route
 //!   through it.
 //! * [`par`] — deterministic thread parallelism (`LASP2_THREADS`):
 //!   contiguous index blocks, bit-identical results at any thread count.
 //! * [`scratch`] — per-thread buffer pool so steady-state train/decode
 //!   iterations stop allocating.
+//! * [`quant`] — opt-in bf16 / per-row-scale int8 weight storage for the
+//!   bandwidth-bound decode readout (f32 accumulation, tolerance-parity;
+//!   see `--decode-dtype`).
 //!
 //! Kept dependency-free and fully unit-tested.
 
 pub mod gemm;
 pub mod par;
+pub mod quant;
 pub mod scratch;
 
 use std::fmt;

@@ -1,0 +1,351 @@
+//! Reduced-precision weight storage for the bandwidth-bound decode readout.
+//!
+//! The m=1 logit readout (`rmsnorm(x) · embᵀ`, `[1,d] x [vocab,d]`) streams
+//! the entire `vocab x d` embedding matrix per generated token and does only
+//! two flops per weight — it is memory-bound, so halving (bf16) or quartering
+//! (int8) the bytes moved is worth more than any amount of flop tuning.
+//! [`QuantMat`] stores such a matrix in one of two opt-in formats:
+//!
+//! * **bf16** — round-to-nearest-even truncation of the f32 high half.
+//!   Relative weight error ≤ 2⁻⁸; decode is a 16-bit shift.
+//! * **int8** — symmetric per-row scales: `scale[j] = max|w[j,·]| / 127`,
+//!   `q = round(w / scale)` clamped to ±127.  Per-row (not per-tensor)
+//!   scales keep outlier rows from flattening everyone else's resolution.
+//!
+//! ## Determinism contract
+//!
+//! Products are **accumulated in f32** with a fixed 8-lane chain, serially
+//! over output rows, so quantized logits are a pure function of the inputs —
+//! bit-identical across runs and thread counts, exactly like the default
+//! path.  What changes is *which* function: weights are rounded, so logits
+//! agree with the f32 readout only to tolerance (≲1e-2 on unit-scale
+//! activations; pinned by `tests/quant_readout.rs` on the tiny preset).
+//! That is why the path is opt-in via `--decode-dtype` and the default
+//! stays bit-exact f32 (DESIGN.md §Compute core).
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// Storage format for the decode readout weights (`--decode-dtype`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeDtype {
+    /// Default: the `head_dec_B{b}` artifact's bit-exact f32 path.
+    F32,
+    /// bf16 weights (RNE), f32 accumulation.  2x less readout bandwidth.
+    Bf16,
+    /// int8 weights with per-row scales, f32 accumulation.  4x less.
+    Int8,
+}
+
+impl DecodeDtype {
+    pub fn parse(s: &str) -> Result<DecodeDtype> {
+        match s {
+            "f32" => Ok(DecodeDtype::F32),
+            "bf16" => Ok(DecodeDtype::Bf16),
+            "int8" => Ok(DecodeDtype::Int8),
+            _ => bail!("unknown decode dtype {s:?} (expected f32 | bf16 | int8)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DecodeDtype::F32 => "f32",
+            DecodeDtype::Bf16 => "bf16",
+            DecodeDtype::Int8 => "int8",
+        }
+    }
+}
+
+/// f32 -> bf16 with round-to-nearest-even (the upper 16 bits of the f32,
+/// rounded).  NaN payloads are forced non-zero so they stay NaN.
+pub fn bf16_encode(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return ((bits >> 16) as u16) | 1;
+    }
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// bf16 -> f32: exact (bf16 is a prefix of the f32 encoding).
+pub fn bf16_decode(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+enum Repr {
+    Bf16(Vec<u16>),
+    Int8 { q: Vec<i8>, scale: Vec<f32> },
+}
+
+/// A `[rows, d]` weight matrix stored at reduced precision, with an
+/// nt-layout (`x · Wᵀ`) matmul that accumulates in f32.
+pub struct QuantMat {
+    rows: usize,
+    d: usize,
+    repr: Repr,
+}
+
+impl QuantMat {
+    /// Quantize a 2-D `[rows, d]` tensor.  `F32` is rejected: callers keep
+    /// the original tensor (and the bit-exact artifact path) for that.
+    pub fn quantize(w: &Tensor, dtype: DecodeDtype) -> Result<QuantMat> {
+        anyhow::ensure!(
+            w.shape().len() == 2,
+            "QuantMat::quantize expects a [rows, d] matrix, got {:?}",
+            w.shape()
+        );
+        let (rows, d) = (w.shape()[0], w.shape()[1]);
+        let wd = w.data();
+        let repr = match dtype {
+            DecodeDtype::F32 => bail!("f32 readout needs no QuantMat"),
+            DecodeDtype::Bf16 => {
+                Repr::Bf16(wd.iter().map(|&v| bf16_encode(v)).collect())
+            }
+            DecodeDtype::Int8 => {
+                let mut q = vec![0i8; rows * d];
+                let mut scale = vec![0.0f32; rows];
+                for j in 0..rows {
+                    let row = &wd[j * d..(j + 1) * d];
+                    let maxabs = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                    if maxabs > 0.0 {
+                        let s = maxabs / 127.0;
+                        let inv = 127.0 / maxabs;
+                        scale[j] = s;
+                        for (qq, &v) in q[j * d..(j + 1) * d].iter_mut().zip(row) {
+                            *qq = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                        }
+                    }
+                }
+                Repr::Int8 { q, scale }
+            }
+        };
+        Ok(QuantMat { rows, d, repr })
+    }
+
+    pub fn dtype(&self) -> DecodeDtype {
+        match self.repr {
+            Repr::Bf16(_) => DecodeDtype::Bf16,
+            Repr::Int8 { .. } => DecodeDtype::Int8,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Weight bytes actually streamed per full readout (for bench reports).
+    pub fn bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Bf16(w) => w.len() * 2,
+            Repr::Int8 { q, scale } => q.len() + scale.len() * 4,
+        }
+    }
+
+    /// `x: [m, d]` -> `[m, rows]`, computing `x · Wᵀ` with dequantized
+    /// weights and f32 accumulation.  Serial and chain-fixed: bit-identical
+    /// across runs and thread counts for given inputs.
+    pub fn matmul_nt(&self, x: &Tensor) -> Tensor {
+        let d = self.d;
+        assert_eq!(
+            *x.shape().last().unwrap(),
+            d,
+            "inner-dim mismatch in QuantMat::matmul_nt"
+        );
+        let m = x.len() / d;
+        let mut out = vec![0.0f32; m * self.rows];
+        for i in 0..m {
+            let xr = &x.data()[i * d..(i + 1) * d];
+            let or = &mut out[i * self.rows..(i + 1) * self.rows];
+            match &self.repr {
+                Repr::Bf16(w) => {
+                    for (j, o) in or.iter_mut().enumerate() {
+                        *o = dot_bf16(xr, &w[j * d..(j + 1) * d]);
+                    }
+                }
+                Repr::Int8 { q, scale } => {
+                    for (j, o) in or.iter_mut().enumerate() {
+                        *o = scale[j] * dot_int8(xr, &q[j * d..(j + 1) * d]);
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![m, self.rows], out)
+    }
+}
+
+/// Fixed reduction tree shared by both dots (mirrors `gemm::lanes8`).
+fn lanes8(a: &[f32; 8]) -> f32 {
+    ((a[0] + a[4]) + (a[2] + a[6])) + ((a[1] + a[5]) + (a[3] + a[7]))
+}
+
+fn dot_bf16(x: &[f32], w: &[u16]) -> f32 {
+    let k = x.len();
+    let c8 = k / 8;
+    let mut acc = [0.0f32; 8];
+    for cb in 0..c8 {
+        let xo = &x[cb * 8..cb * 8 + 8];
+        let wo = &w[cb * 8..cb * 8 + 8];
+        for l in 0..8 {
+            acc[l] += xo[l] * bf16_decode(wo[l]);
+        }
+    }
+    let mut s = lanes8(&acc);
+    for p in c8 * 8..k {
+        s += x[p] * bf16_decode(w[p]);
+    }
+    s
+}
+
+fn dot_int8(x: &[f32], q: &[i8]) -> f32 {
+    let k = x.len();
+    let c8 = k / 8;
+    let mut acc = [0.0f32; 8];
+    for cb in 0..c8 {
+        let xo = &x[cb * 8..cb * 8 + 8];
+        let qo = &q[cb * 8..cb * 8 + 8];
+        for l in 0..8 {
+            acc[l] += xo[l] * qo[l] as f32;
+        }
+    }
+    let mut s = lanes8(&acc);
+    for p in c8 * 8..k {
+        s += x[p] * q[p] as f32;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift(state: &mut u64) -> f32 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        ((*state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+    }
+
+    #[test]
+    fn bf16_round_trips_representable_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, -2.5, 1024.0, -0.15625] {
+            // values with ≤8 mantissa bits survive exactly
+            let enc = bf16_encode(v);
+            assert_eq!(bf16_decode(enc), v, "bf16 round trip of {v}");
+        }
+        assert!(bf16_decode(bf16_encode(f32::NAN)).is_nan());
+        assert_eq!(bf16_decode(bf16_encode(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn bf16_rounds_ties_to_even() {
+        // low half exactly 0x8000 = a tie; round to the even 16-bit value
+        let even = f32::from_bits(0x3F80_8000); // high = 0x3F80 (even)
+        assert_eq!(bf16_encode(even), 0x3F80); // tie -> stays (down)
+        let odd = f32::from_bits(0x3F81_8000); // high = 0x3F81 (odd)
+        assert_eq!(bf16_encode(odd), 0x3F82); // tie -> rounds up to even
+        // just above / below the tie round to nearest
+        assert_eq!(bf16_encode(f32::from_bits(0x3F80_8001)), 0x3F81);
+        assert_eq!(bf16_encode(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+    }
+
+    #[test]
+    fn bf16_relative_error_bounded() {
+        let mut st = 7u64;
+        for _ in 0..1000 {
+            let v = xorshift(&mut st) * 100.0;
+            let err = (bf16_decode(bf16_encode(v)) - v).abs();
+            assert!(err <= v.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE);
+        }
+    }
+
+    #[test]
+    fn int8_per_row_scales_hit_full_range() {
+        let w = Tensor::new(
+            vec![3, 4],
+            vec![
+                1.0, -2.0, 0.5, 4.0, // max 4.0
+                0.0, 0.0, 0.0, 0.0, // zero row
+                -0.01, 0.005, 0.0025, -0.0075, // tiny magnitudes
+            ],
+        );
+        let q = QuantMat::quantize(&w, DecodeDtype::Int8).unwrap();
+        let (qv, sc) = match &q.repr {
+            Repr::Int8 { q, scale } => (q.clone(), scale.clone()),
+            _ => unreachable!(),
+        };
+        assert_eq!(qv[3], 127); // row max maps to ±127
+        assert_eq!(sc[1], 0.0);
+        assert!(qv[4..8].iter().all(|&v| v == 0)); // zero row -> zeros
+        assert_eq!(qv[8], -127); // tiny rows still use the full range
+        // dequantized max is exact: 127 * (max/127) == max
+        assert_eq!(sc[0] * qv[3] as f32, 4.0);
+    }
+
+    #[test]
+    fn quantized_matmul_tracks_f32_within_tolerance() {
+        let (rows, d, m) = (40, 96, 3);
+        let mut st = 42u64;
+        let w = Tensor::new(
+            vec![rows, d],
+            (0..rows * d).map(|_| xorshift(&mut st)).collect(),
+        );
+        let x = Tensor::new(
+            vec![m, d],
+            (0..m * d).map(|_| xorshift(&mut st)).collect(),
+        );
+        let exact = x.matmul_nt(&w);
+        for dt in [DecodeDtype::Bf16, DecodeDtype::Int8] {
+            let qm = QuantMat::quantize(&w, dt).unwrap();
+            assert_eq!(qm.rows(), rows);
+            assert_eq!(qm.dim(), d);
+            let got = qm.matmul_nt(&x);
+            assert_eq!(got.shape(), &[m, rows]);
+            for (a, b) in got.data().iter().zip(exact.data()) {
+                assert!(
+                    (a - b).abs() <= 1e-2,
+                    "{} logit off by {} ({a} vs {b})",
+                    dt.name(),
+                    (a - b).abs()
+                );
+            }
+            // determinism: a second run is bit-identical
+            let again = qm.matmul_nt(&x);
+            assert_eq!(
+                got.data()
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect::<Vec<_>>(),
+                again
+                    .data()
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn dtype_parsing_round_trips() {
+        for dt in [DecodeDtype::F32, DecodeDtype::Bf16, DecodeDtype::Int8] {
+            assert_eq!(DecodeDtype::parse(dt.name()).unwrap(), dt);
+        }
+        assert!(DecodeDtype::parse("fp16").is_err());
+        assert!(QuantMat::quantize(&Tensor::zeros(&[2, 2]), DecodeDtype::F32).is_err());
+    }
+
+    #[test]
+    fn bytes_reflect_storage_format() {
+        let w = Tensor::zeros(&[10, 16]);
+        let b16 = QuantMat::quantize(&w, DecodeDtype::Bf16).unwrap();
+        assert_eq!(b16.bytes(), 10 * 16 * 2);
+        assert_eq!(b16.dtype(), DecodeDtype::Bf16);
+        let i8m = QuantMat::quantize(&w, DecodeDtype::Int8).unwrap();
+        assert_eq!(i8m.bytes(), 10 * 16 + 10 * 4);
+        assert_eq!(i8m.dtype(), DecodeDtype::Int8);
+    }
+}

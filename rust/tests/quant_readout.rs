@@ -1,0 +1,115 @@
+//! The quantized decode-readout contract (`--decode-dtype bf16|int8`):
+//! opt-in reduced-precision embedding storage for the bandwidth-bound
+//! per-token logit readout.  Pinned here on the tiny preset:
+//!
+//! * logits track the f32 path within 1e-2 (absolute, on unit-scale
+//!   activations) at every decode position — the parity bound the CLI
+//!   help advertises;
+//! * greedy decoding (argmax) is unchanged wherever the f32 logit margin
+//!   is wider than twice that bound, i.e. everywhere it could matter;
+//! * the quantized path is actually active (bits differ from f32 —
+//!   otherwise the gate is wired to nothing);
+//! * switching back to `F32` restores the bit-exact artifact path;
+//! * the quantized rows are themselves deterministic run to run.
+
+use lasp2::config::{Pattern, Variant};
+use lasp2::coordinator::Params;
+use lasp2::runtime::Engine;
+use lasp2::serve::{argmax, Model};
+use lasp2::tensor::quant::DecodeDtype;
+use lasp2::tensor::Tensor;
+
+const STEPS: usize = 48;
+const TOL: f32 = 1e-2;
+
+fn model_for(ratio: &str, dtype: DecodeDtype) -> Model {
+    let engine = Engine::load_preset("tiny").expect("native tiny preset");
+    let pattern = Pattern::from_ratio(engine.model.n_layers, ratio).unwrap();
+    let params = Params::randn(&engine.model, Variant::Basic, &pattern, 11);
+    let mut model = Model::from_parts(engine, params);
+    model.set_decode_dtype(dtype).unwrap();
+    model
+}
+
+fn toks() -> Vec<i32> {
+    (0..STEPS as i32).map(|i| (i * 7 + 3) % 256).collect()
+}
+
+/// Decode the fixed token stream, returning one logits row per position.
+fn rows(model: &Model) -> Vec<Tensor> {
+    let mut s = model.session();
+    toks().iter().map(|&t| s.decode(t).unwrap()).collect()
+}
+
+#[test]
+fn quantized_logits_track_f32_within_tolerance_and_keep_argmax() {
+    for ratio in ["0", "1/2"] {
+        let exact = rows(&model_for(ratio, DecodeDtype::F32));
+        for dtype in [DecodeDtype::Bf16, DecodeDtype::Int8] {
+            let quant = rows(&model_for(ratio, dtype));
+            let mut any_diff = false;
+            for (pos, (e, q)) in exact.iter().zip(&quant).enumerate() {
+                let (ed, qd) = (e.data(), q.data());
+                assert_eq!(ed.len(), qd.len());
+                for (j, (a, b)) in ed.iter().zip(qd).enumerate() {
+                    assert!(
+                        (a - b).abs() <= TOL,
+                        "{} ratio {ratio} pos {pos} logit {j}: {a} vs {b}",
+                        dtype.name()
+                    );
+                    any_diff |= a.to_bits() != b.to_bits();
+                }
+                // argmax-stability wherever the f32 margin exceeds what
+                // quantization could flip (top-2 gap > 2 * TOL)
+                let top = argmax(ed) as usize;
+                let runner_up = ed
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| *j != top)
+                    .map(|(_, v)| *v)
+                    .fold(f32::NEG_INFINITY, f32::max);
+                if ed[top] - runner_up > 2.0 * TOL {
+                    assert_eq!(
+                        argmax(qd) as usize,
+                        top,
+                        "{} ratio {ratio} pos {pos}: argmax flipped",
+                        dtype.name()
+                    );
+                }
+            }
+            // the quantized path must actually engage: identical bits on
+            // every row would mean --decode-dtype is wired to nothing
+            assert!(any_diff, "{} ratio {ratio}: logits never differed", dtype.name());
+        }
+    }
+}
+
+#[test]
+fn setting_dtype_back_to_f32_restores_bit_exact_path() {
+    let exact = rows(&model_for("0", DecodeDtype::F32));
+    let engine = Engine::load_preset("tiny").unwrap();
+    let pattern = Pattern::from_ratio(engine.model.n_layers, "0").unwrap();
+    let params = Params::randn(&engine.model, Variant::Basic, &pattern, 11);
+    let mut model = Model::from_parts(engine, params);
+    model.set_decode_dtype(DecodeDtype::Int8).unwrap();
+    assert_eq!(model.decode_dtype(), DecodeDtype::Int8);
+    model.set_decode_dtype(DecodeDtype::F32).unwrap();
+    assert_eq!(model.decode_dtype(), DecodeDtype::F32);
+    for (e, g) in exact.iter().zip(rows(&model)) {
+        let eb: Vec<u32> = e.data().iter().map(|v| v.to_bits()).collect();
+        let gb: Vec<u32> = g.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(eb, gb);
+    }
+}
+
+#[test]
+fn quantized_rows_are_deterministic_run_to_run() {
+    let model = model_for("0", DecodeDtype::Bf16);
+    let first = rows(&model);
+    let again = rows(&model);
+    for (a, b) in first.iter().zip(&again) {
+        let ab: Vec<u32> = a.data().iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = b.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb);
+    }
+}

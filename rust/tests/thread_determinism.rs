@@ -9,10 +9,14 @@ use lasp2::config::{Pattern, Variant};
 use lasp2::coordinator::{forward_mono, Params};
 use lasp2::runtime::{Engine, Value};
 use lasp2::serve::{Batch, Model};
-use lasp2::tensor::{par, Tensor};
+use lasp2::tensor::{gemm, par, Tensor};
 
 fn bits(t: &Tensor) -> Vec<u32> {
     t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+fn fbits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
 }
 
 /// Reference naive triple loop (f64-free, ascending-p accumulation).
@@ -107,6 +111,73 @@ fn sparse_rows_bit_identical_to_zero_skip_reference() {
     for j in 0..n {
         assert_eq!(got.data()[3 * n + j].to_bits(), 0.0f32.to_bits());
     }
+}
+
+#[test]
+fn simd_dispatch_bit_identical_to_scalar_oracle_across_thread_counts() {
+    // The `simd` feature's contract: the runtime-dispatched microkernels
+    // (AVX2/NEON) are bit-exact against the scalar oracle — not merely
+    // close — on rectangular, m=1 decode, and k >> n shapes, at 1 AND 4
+    // threads (banding must not change the per-element chains either).
+    let shapes =
+        [(5usize, 7usize, 9usize), (1, 512, 33), (12, 2048, 4), (64, 300, 48)];
+    for threads in [1usize, 4] {
+        par::set_threads(threads);
+        for &(m, k, n) in &shapes {
+            let a = Tensor::randn(&[m, k], 31 + m as u64);
+            let b = Tensor::randn(&[k, n], 37 + n as u64);
+            let (bt, at) = (b.t(), a.t());
+            let mut got = vec![0.0f32; m * n];
+            let mut want = vec![0.0f32; m * n];
+            let tag = format!("{m}x{k}x{n} @{threads}t");
+            gemm::nn(m, k, n, a.data(), k, b.data(), n, &mut got, n);
+            gemm::nn_scalar(m, k, n, a.data(), k, b.data(), n, &mut want, n);
+            assert_eq!(fbits(&got), fbits(&want), "nn {tag}");
+            gemm::nt(m, k, n, a.data(), k, bt.data(), k, &mut got, n);
+            gemm::nt_scalar(m, k, n, a.data(), k, bt.data(), k, &mut want, n);
+            assert_eq!(fbits(&got), fbits(&want), "nt {tag}");
+            gemm::tn(m, k, n, at.data(), m, b.data(), n, &mut got, n);
+            gemm::tn_scalar(m, k, n, at.data(), m, b.data(), n, &mut want, n);
+            assert_eq!(fbits(&got), fbits(&want), "tn {tag}");
+        }
+
+        // non-contiguous operands: every matrix lives inside a wider slab
+        // (row stride > logical width), as head views do in native.rs
+        let (m, k, n) = (9usize, 300usize, 13usize);
+        let (lda, ldb, ldo) = (k + 3, n + 2, n + 5);
+        let a = Tensor::randn(&[m, k], 91);
+        let b = Tensor::randn(&[k, n], 92);
+        let mut aw = vec![0.5f32; m * lda];
+        let mut bw = vec![0.25f32; k * ldb];
+        for i in 0..m {
+            aw[i * lda..i * lda + k].copy_from_slice(&a.data()[i * k..(i + 1) * k]);
+        }
+        for p in 0..k {
+            bw[p * ldb..p * ldb + n].copy_from_slice(&b.data()[p * n..(p + 1) * n]);
+        }
+        let mut got = vec![0.0f32; m * ldo];
+        let mut want = vec![0.0f32; m * ldo];
+        gemm::nn(m, k, n, &aw, lda, &bw, ldb, &mut got, ldo);
+        gemm::nn_scalar(m, k, n, &aw, lda, &bw, ldb, &mut want, ldo);
+        for i in 0..m {
+            assert_eq!(
+                fbits(&got[i * ldo..i * ldo + n]),
+                fbits(&want[i * ldo..i * ldo + n]),
+                "strided nn row {i} @{threads}t"
+            );
+        }
+        // and the accumulate variant on the same strided layout
+        gemm::nn_acc(m, k, n, &aw, lda, &bw, ldb, &mut got, ldo);
+        gemm::nn_acc_scalar(m, k, n, &aw, lda, &bw, ldb, &mut want, ldo);
+        for i in 0..m {
+            assert_eq!(
+                fbits(&got[i * ldo..i * ldo + n]),
+                fbits(&want[i * ldo..i * ldo + n]),
+                "strided nn_acc row {i} @{threads}t"
+            );
+        }
+    }
+    par::set_threads(0);
 }
 
 /// Run `f` under thread counts 1, 2, and 8 and assert every returned
